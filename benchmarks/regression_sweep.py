@@ -1,0 +1,49 @@
+"""Paper §5.3: safety/regression sweep over 160 configurations.
+
+Batch x L_K x H_KV grid exactly as the paper's matrix; asserts the
+patched policy NEVER regresses the modeled latency (>= 0.99x standard)
+and that wins at L_K = 512 appear only for H_KV in {1, 2}.
+"""
+from __future__ import annotations
+
+from repro.core.occupancy import H100_SXM, modeled_latency_us
+from repro.core.split_policy import DecodeWorkload, fa3_baseline, paper_policy
+
+from benchmarks.common import print_table, write_csv
+
+BATCHES = (1, 2, 4, 8)
+LKS = (128, 256, 384, 512, 1024, 2048, 4096, 8192)
+HKVS = (1, 2, 4, 8, 32)
+
+
+def main() -> None:
+    rows = []
+    worst = 1.0
+    wins = []
+    for b in BATCHES:
+        for lk in LKS:
+            for hkv in HKVS:
+                w = DecodeWorkload(b, 1, lk, 64, hkv, 128)
+                s0 = fa3_baseline(w, num_cores=132)
+                s1 = paper_policy(w, num_cores=132)
+                t0 = modeled_latency_us(w, s0, hw=H100_SXM, num_cores=132)
+                t1 = modeled_latency_us(w, s1, hw=H100_SXM, num_cores=132)
+                sp = t0 / t1
+                worst = min(worst, sp)
+                if sp > 1.01:
+                    wins.append((b, lk, hkv, round(sp, 3)))
+                rows.append([b, lk, hkv, s0, s1, round(sp, 3)])
+    write_csv("regression_sweep", ["batch", "lk", "hkv", "s_std",
+                                   "s_patched", "speedup"], rows)
+    print(f"{len(rows)} configurations swept "
+          f"({len(BATCHES)}x{len(LKS)}x{len(HKVS)})")
+    print(f"worst-case speedup: {worst:.4f} (paper: >= 0.99x everywhere)")
+    print_table(["batch", "lk", "hkv", "speedup"],
+                [[b, lk, hkv, sp] for b, lk, hkv, sp in wins],
+                "cells with wins")
+    assert worst >= 0.99, f"regression! {worst}"
+    assert all(lk == 512 and hkv in (1, 2) for _, lk, hkv, _ in wins), wins
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Roofline table: aggregate the dry-run JSON records into §Roofline.
+
+Reads experiments/dryrun/<mesh>/<arch>/<shape>.json and emits the
+per-cell three-term table (+ dominant term, useful ratio, step-time
+lower bound = max of the three terms).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import print_table, write_csv
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def collect(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(DRYRUN.glob(f"{mesh}/*/*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            rows.append([d["arch"], d["shape"], d.get("status"),
+                         "-", "-", "-", "-", "-", "-",
+                         d.get("reason", d.get("error", ""))[:40]])
+            continue
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append([
+            d["arch"], d["shape"], "ok",
+            round(r["compute_s"] * 1e3, 2),
+            round(r["memory_s"] * 1e3, 2),
+            round(r["collective_s"] * 1e3, 2),
+            r["dominant"],
+            round(r["useful_ratio"], 3),
+            round(bound * 1e3, 2),
+            "",
+        ])
+    return rows
+
+
+def main() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        rows = collect(mesh)
+        if not rows:
+            print(f"(no dry-run records for mesh {mesh} — run "
+                  f"`python -m repro.launch.dryrun --all`)")
+            continue
+        header = ["arch", "shape", "status", "compute_ms", "memory_ms",
+                  "collective_ms", "dominant", "useful", "bound_ms",
+                  "note"]
+        print_table(header, rows, f"Roofline ({mesh}, per device, "
+                                  f"probe-corrected)")
+        write_csv(f"roofline_{mesh}", header, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Run every benchmark (one per paper table/figure + the roofline report).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        regression_sweep,
+        roofline_report,
+        table1_ab,
+        u_curve_sweep,
+    )
+
+    jobs = [
+        ("table1_ab (paper Table 1)", table1_ab.main),
+        ("u_curve_sweep (paper Fig. 3)", u_curve_sweep.main),
+        ("regression_sweep (paper §5.3, 160 configs)",
+         regression_sweep.main),
+        ("roofline_report (§Roofline)", roofline_report.main),
+    ]
+    failures = 0
+    for name, fn in jobs:
+        print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[ok] {name} ({time.time() - t0:.1f}s)")
+        except Exception as e:                           # pragma: no cover
+            failures += 1
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+    print(f"\n{len(jobs) - failures}/{len(jobs)} benchmarks ok")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

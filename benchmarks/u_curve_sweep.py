@@ -1,0 +1,45 @@
+"""Paper Fig. 3: extended split sweep s = 1..64 (B=1, L_K=512, H_KV=1).
+
+Modeled on the calibrated H100 cost model AND on the TPU v5e model at
+mesh scale (chips as cores) — the structure the paper reports (steep
+drop after s=1, broad plateau, shallow minima) must appear in both.
+"""
+from __future__ import annotations
+
+from repro.core.occupancy import H100_SXM, TPU_V5E, modeled_latency_us
+from repro.core.split_policy import DecodeWorkload
+
+from benchmarks.common import print_table, write_csv
+
+
+def sweep(hw, num_cores):
+    w = DecodeWorkload(1, 1, 512, 64, 1, 128)
+    return {s: modeled_latency_us(w, s, hw=hw, num_cores=num_cores)
+            for s in range(1, 65)}
+
+
+def main() -> None:
+    h100 = sweep(H100_SXM, 132)
+    tpu = sweep(TPU_V5E, 16)           # v5e-16 serving slice
+    header = ["s", "h100_us", "tpu16_us"]
+    rows = [[s, round(h100[s], 2), round(tpu[s], 2)]
+            for s in sorted(h100)]
+    write_csv("u_curve_sweep", header, rows)
+    print_table(header, rows[:12] + [["...", "...", "..."]] + rows[-4:],
+                "Fig. 3 split sweep (modeled)")
+
+    # structural assertions (the figure's described shape)
+    t1, t3 = h100[1], h100[3]
+    plateau = [h100[s] for s in range(3, 65)]
+    assert t3 < t1, "splitting must win at the boundary"
+    assert max(plateau) < t1, "plateau stays below the unsplit latency"
+    spread = (max(plateau) - min(plateau)) / min(plateau)
+    print(f"\nh100: s=1 {t1:.2f}us -> s=3 {t3:.2f}us "
+          f"(x{t1/t3:.2f}); plateau spread {spread*100:.1f}% "
+          f"(paper: gain s=3->best < ~2%)")
+    best = min(plateau)
+    print(f"gain s=3 -> best: {(t3-best)/t3*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Reproduce the paper's §3: evolutionary discovery of the guard flaw.
+
+A plain (no-LLM) evolutionary search over the same genome the paper's
+OpenEvolve agent manipulated — per-(L_K, H_KV, B)-bucket ``num_splits``
+plus global ``pack_gqa`` / ``sm_margin`` — with modeled TPOT on the
+short-prompt chat workload as fitness.  The run re-discovers the paper's
+observation: low-tile short-context buckets evolve aggressive splits
+(the paper saw 12-16), saturated buckets stay at 1.
+
+    PYTHONPATH=src python examples/evolve_heuristic.py
+"""
+from repro.core.evolve import evolve, summarize_low_tile_genes
+from repro.core.occupancy import H100_SXM
+from repro.core.split_policy import DecodeWorkload, fa3_baseline
+
+CORES = 132          # search on the paper's H100
+
+
+def main() -> None:
+    result = evolve(num_cores=CORES, hw=H100_SXM, generations=40,
+                    population=32, seed=0)
+    genome = result.best
+
+    print("evolved splits in STARVED buckets (tiles < cores):")
+    for (lk, hkv, b), s in list(summarize_low_tile_genes(
+            genome, CORES).items())[:12]:
+        print(f"  L_K<={lk:5d} H_KV<={hkv:2d} B<={b}:  s={s}")
+    print(f"pack_gqa={genome.pack_gqa} sm_margin={genome.sm_margin}")
+    gain = result.best_fitness - result.baseline_fitness
+    print(f"fitness: baseline {-result.baseline_fitness:.1f}us total -> "
+          f"evolved {-result.best_fitness:.1f}us "
+          f"(saved {gain:.1f}us across the workload set)")
+
+    # the paper's headline observation, recovered by search:
+    w = DecodeWorkload(1, 1, 512, 64, 1, 128)
+    s = genome.num_splits_for(w)
+    print(f"\nB=1, L_K=512, H_KV=1: static guard s={fa3_baseline(w)} "
+          f"-> evolved s={s} (paper's agent found 12-16 here; "
+          f"the distilled C++ rule uses 3)")
+    assert s > 1, "search failed to rediscover the flaw"
+    assert result.best_fitness > result.baseline_fitness
+
+
+if __name__ == "__main__":
+    main()

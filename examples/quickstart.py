@@ -1,0 +1,66 @@
+"""Quickstart: the paper's policy, end to end, in two minutes on CPU.
+
+1. Shows the FA3 guard flaw and the sequence-aware fix on the paper's
+   own shapes (policy decisions + modeled latency).
+2. Trains a tiny GQA model for a few steps (full substrate: synthetic
+   data, AdamW, remat, checkpointing).
+3. Serves it through the continuous-batching engine under the paper
+   policy (metadata-enabled split decode).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.core.occupancy import H100_SXM, modeled_latency_us
+from repro.core.split_policy import (
+    DecodeWorkload,
+    fa3_baseline,
+    paper_policy,
+)
+from repro.launch.train import run_training
+from repro.models import build_model
+from repro.serving.engine import DecodeEngine, Request
+
+
+def policy_demo():
+    print("== 1. the paper's boundary bucket (B=1, L_K=512, D=128) ==")
+    for hkv in (1, 2, 8):
+        w = DecodeWorkload(1, 1, 512, 64, hkv, 128)
+        s0, s1 = fa3_baseline(w, 132), paper_policy(w, 132)
+        t0 = modeled_latency_us(w, s0, hw=H100_SXM, num_cores=132)
+        t1 = modeled_latency_us(w, s1, hw=H100_SXM, num_cores=132)
+        print(f"  H_KV={hkv}: baseline s={s0} ({t0:.2f}us) -> "
+              f"paper s={s1} ({t1:.2f}us)  x{t0/t1:.2f}")
+
+
+def train_demo():
+    print("\n== 2. train a tiny qwen2.5-style model (synthetic data) ==")
+    metrics = run_training("qwen2.5-3b", steps=60, d_model=64,
+                           num_layers=2, seq_len=64, global_batch=8,
+                           lr=3e-3, ckpt_dir="/tmp/repro_quickstart",
+                           ckpt_every=30)
+    print(f"  final loss {metrics['loss']:.3f}")
+
+
+def serve_demo():
+    print("\n== 3. serve through the split-policy decode engine ==")
+    cfg = reduced_config(get_arch("qwen2.5-3b"), num_layers=2, d_model=64)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = DecodeEngine(model, ServeConfig(model=cfg, split_policy="paper"),
+                       max_len=128, batch_slots=3)
+    eng.load(params)
+    outs = eng.generate([Request(i, [1 + i, 2, 3], max_new_tokens=8)
+                         for i in range(5)])
+    for c in outs:
+        print(f"  req {c.request_id}: {c.tokens}")
+
+
+if __name__ == "__main__":
+    policy_demo()
+    train_demo()
+    serve_demo()
+    print("\nquickstart OK")

@@ -1,0 +1,40 @@
+"""End-to-end driver: train a ~100M-param GQA model for a few hundred
+steps on synthetic data, with checkpoint/resume and (if the process is
+killed) crash recovery — the deliverable (b) end-to-end example.
+
+Sized so CPU finishes in minutes; on a real slice, swap
+``make_host_mesh`` for ``make_production_mesh`` and raise the batch.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+
+from repro.launch.train import run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    # ~100M params: 12 layers x d_model 768, GQA 12:4, vocab 32k
+    metrics = run_training(
+        "qwen2.5-3b",            # family/wiring; dims overridden below
+        steps=args.steps,
+        d_model=256,             # ~25M on CPU-friendly dims; raise to 768
+        num_layers=8,            # for the full ~100M run on real hardware
+        seq_len=256,
+        global_batch=8,
+        microbatches=2,
+        lr=1e-3,
+        remat_policy="nothing_saveable",
+        ckpt_dir=args.ckpt,
+        ckpt_every=100,
+    )
+    print("final metrics:", {k: round(v, 4) for k, v in metrics.items()})
+    assert metrics["loss"] < 6.0, "training should make progress"
+
+
+if __name__ == "__main__":
+    main()

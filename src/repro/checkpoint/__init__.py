@@ -1,0 +1,7 @@
+"""Checkpointing: sharded, atomic, async, elastic-restorable."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,49 @@
+"""Architecture configs (one module per assigned arch) + shape sets."""
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    MLAConfig,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    MULTI_POD,
+    OptimizerConfig,
+    PREFILL_32K,
+    ServeConfig,
+    ShapeConfig,
+    SHAPES,
+    SINGLE_POD,
+    SSMConfig,
+    TrainConfig,
+    TRAIN_4K,
+    get_arch,
+    list_archs,
+    register_arch,
+    shape_applicable,
+)
+
+_LOADED = False
+
+ARCH_MODULES = (
+    "stablelm_12b",
+    "minicpm3_4b",
+    "codeqwen15_7b",
+    "qwen25_3b",
+    "recurrentgemma_9b",
+    "mamba2_780m",
+    "paligemma_3b",
+    "qwen3_moe_235b_a22b",
+    "granite_moe_3b_a800m",
+    "whisper_large_v3",
+)
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for mod in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True

@@ -1,0 +1,273 @@
+"""Config system: model / mesh / run configs and the architecture registry.
+
+Every assigned architecture registers a :class:`ModelConfig` via
+``register_arch``.  Configs are plain frozen dataclasses so they hash, print
+and diff cleanly, and so a config file is just data — no behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN hidden dim
+    capacity_factor: float = 1.25      # token-dropping capacity dispatch
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01      # load-balance loss
+    # token dispatch impl: "gather" (scatter/gather, FLOP-light, production
+    # default) | "einsum" (Switch-style one-hot matmuls, the naive baseline
+    # the MoE §Perf cell hillclimbs away from)
+    dispatch: str = "gather"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 family)."""
+    kv_lora_rank: int = 256            # compressed KV latent dim (the cache)
+    q_lora_rank: int = 768
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD block parameters."""
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2                    # d_inner = expand * d_model
+    ngroups: int = 1
+    chunk_size: int = 256
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style hybrid: pattern of recurrent vs attention blocks."""
+    pattern: Tuple[str, ...] = ("rglru", "rglru", "attn")   # 2:1 recurrent:attn
+    window: int = 2048                 # local-attention window
+    lru_width: Optional[int] = None    # defaults to d_model
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stubbed modality frontend: ``input_specs`` supplies precomputed embeds."""
+    kind: str = "none"                 # "vision" | "audio" | "none"
+    num_positions: int = 0             # patches (vision) / frames (audio)
+    embed_dim: int = 0                 # frontend output dim (projected to d_model)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | mla | hybrid | ssm | vlm | moe | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None     # default d_model // num_heads
+    # --- blocks / families -------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    # encoder-decoder (Whisper): encoder layer count (decoder = num_layers)
+    num_encoder_layers: int = 0
+    cross_attention: bool = False
+    encoder_positions: int = 0         # fixed encoder length (e.g. 1500 frames)
+    # --- details ------------------------------------------------------------
+    mlp_kind: str = "swiglu"           # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    max_seq_len: int = 524_288
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # attention impl used by step functions: "xla" (cost-analyzable) | "pallas"
+    attention_impl: str = "xla"
+    # roofline probes: unrolled layer loop + unrolled inner scans so XLA's
+    # cost analysis (which counts while-loop bodies ONCE) is exact.
+    scan_layers: bool = True
+    probe_unroll: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def q_group_size(self) -> int:
+        return max(1, self.num_heads // max(1, self.num_kv_heads))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mesh / parallelism configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh description. axis order = axis_names order."""
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+
+SINGLE_POD = MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+MULTI_POD = MeshConfig(shape=(2, 16, 16), axis_names=("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES: Dict[str, ShapeConfig] = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Run (training / serving) configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"           # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    # distributed-optimization tricks
+    grad_compression: str = "none"     # none | int8_ef  (int8 + error feedback)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    mesh: MeshConfig = SINGLE_POD
+    shape: ShapeConfig = TRAIN_4K
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    microbatches: int = 1              # gradient accumulation steps
+    remat_policy: str = "nothing_saveable"   # see training/remat.py
+    seed: int = 0
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    model: ModelConfig
+    mesh: MeshConfig = SINGLE_POD
+    shape: ShapeConfig = DECODE_32K
+    split_policy: str = "paper"        # fa3_baseline | paper | tpu_adaptive
+    use_scheduler_metadata: bool = True
+    # mesh-level split realization: "fused" = shard_map cache-write +
+    # partial softmax + psum LSE combine (production default);
+    # "auto" = GSPMD-auto partitioning of the functional update+attention
+    # (the baseline the §Perf iteration measured 18 GiB/step of cache
+    # all-gathers against)
+    decode_impl: str = "fused"
+    # "bfloat16" | "int8" — int8 stores symmetric per-(token, head)
+    # quantized K/V + f32 scales: ~2x less cache traffic, the dominant
+    # decode roofline term (§Perf C.4)
+    kv_cache_dtype: str = "bfloat16"
+    max_batch: int = 128
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Architecture registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        # import config modules lazily so the registry fills itself
+        from repro.configs import _load_all  # noqa: PLC0415
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    from repro.configs import _load_all  # noqa: PLC0415
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, and why not if it doesn't.
+
+    ``long_500k`` needs sub-quadratic attention: run only for SSM / hybrid
+    (local-window attention) families.  Every assigned arch has a decoder,
+    so decode shapes always apply.
+    """
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "long_500k skipped: pure full-attention arch (quadratic)"
+    return True, ""

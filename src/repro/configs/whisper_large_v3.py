@@ -1,0 +1,34 @@
+"""whisper-large-v3 — encoder-decoder with conv frontend (stub).
+
+[audio] 32L d_model=1280 20H (GQA kv=20) d_ff=5120 vocab=51866 — enc-dec
+[arXiv:2212.04356]
+
+32 encoder + 32 decoder layers.  The conv frontend is a STUB:
+``input_specs()`` supplies 1500 precomputed frame embeddings (dim 1280).
+Assigned LM shapes are honored on the DECODER backbone (e.g. train_4k
+trains a 4096-token decoder against the 1500-frame encoder); the decoder
+cross-attends to the encoder output, and decode shapes exercise both the
+self-attention KV cache and the fixed cross-attention cache — both routed
+through the split policy.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig, register_arch
+
+
+@register_arch("whisper-large-v3")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        family="encdec",
+        num_layers=32,            # decoder layers
+        num_encoder_layers=32,
+        d_model=1280,
+        num_heads=20,
+        num_kv_heads=20,
+        d_ff=5120,
+        vocab_size=51866,
+        cross_attention=True,
+        encoder_positions=1500,
+        frontend=FrontendConfig(kind="audio", num_positions=1500, embed_dim=1280),
+        mlp_kind="gelu",
+        rope_theta=0.0,           # whisper uses learned/sinusoidal positions
+    )

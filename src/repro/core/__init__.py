@@ -1,0 +1,26 @@
+"""Core: the paper's contribution — sequence-aware split-KV scheduling."""
+from repro.core.occupancy import (  # noqa: F401
+    H100_SXM,
+    HardwareModel,
+    TPU_V5E,
+    modeled_latency_us,
+    modeled_speedup,
+    occupancy_fraction,
+)
+from repro.core.scheduler_metadata import (  # noqa: F401
+    SchedulerMetadata,
+    bucket_seqlen,
+    get_scheduler_metadata,
+)
+from repro.core.split_policy import (  # noqa: F401
+    DEFAULT_NUM_CORES,
+    KV_BLOCK,
+    DecodeWorkload,
+    POLICIES,
+    choose_mesh_splits,
+    choose_num_splits,
+    fa3_baseline,
+    get_policy,
+    paper_policy,
+    tpu_adaptive,
+)

@@ -1,0 +1,2 @@
+"""Data pipelines (deterministic synthetic LM)."""
+from repro.data.synthetic import DataConfig, SyntheticLM  # noqa: F401

@@ -1,0 +1,7 @@
+"""Fault tolerance: watchdog, straggler detection, elastic restart."""
+from repro.fault.watchdog import (  # noqa: F401
+    Heartbeat,
+    StragglerDetector,
+    Watchdog,
+)
+from repro.fault.elastic import elastic_restore, resumable_train_loop  # noqa: F401

@@ -1,0 +1,76 @@
+"""Split-KV combine kernel: merge S unnormalized partials (paper stage 2).
+
+On GPU FA3 this stage runs with atomics/semaphores into the output
+buffer; on TPU it is a small deterministic reduction kernel — grid over
+``(B, H_kv)``, each cell loads its S partials from HBM into VMEM, merges
+them with the LSE algebra in f32, and writes one normalized output tile.
+Bitwise-reproducible for any split count (the fixed reduction order).
+
+The ``ops``-level decode path uses the jnp combine (XLA fuses it well);
+this kernel exists for the TPU-native pipeline where the partials never
+round-trip through f32 HBM tensors owned by XLA — and as the reference
+for the VMEM budget note in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+
+def _combine_kernel(acc_ref,          # (S, 1, 1, G, D) f32
+                    l_ref,            # (S, 1, 1, G, LANES) f32
+                    m_ref,            # (S, 1, 1, G, LANES) f32
+                    o_ref,            # (1, 1, G, D)
+                    *, num_splits: int):
+    acc = acc_ref[:, 0, 0]                       # (S, G, D)
+    l = l_ref[:, 0, 0, :, 0]                     # (S, G)
+    m = m_ref[:, 0, 0, :, 0]                     # (S, G)
+
+    m_glob = jnp.max(m, axis=0)                  # (G,)
+    w = jnp.exp(m - m_glob[None])                # (S, G)
+    num = jnp.sum(acc * w[..., None], axis=0)    # (G, D)
+    den = jnp.sum(l * w, axis=0)                 # (G,)
+    out = num / jnp.maximum(den[:, None], 1e-30)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_combine(
+    acc: jax.Array,          # (S, B, Hkv, G, D) f32 unnormalized
+    l: jax.Array,            # (S, B, Hkv, G) f32
+    m: jax.Array,            # (S, B, Hkv, G) f32
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """-> (B, Hkv, G, D) normalized attention output."""
+    S, B, Hkv, G, D = acc.shape
+    LANES = 128
+    # stats lane-replicated for TPU layout (same trick as flash_decode)
+    l_r = jnp.broadcast_to(l[..., None], (S, B, Hkv, G, LANES))
+    m_r = jnp.broadcast_to(m[..., None], (S, B, Hkv, G, LANES))
+
+    kernel = functools.partial(_combine_kernel, num_splits=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((S, 1, 1, G, D), lambda b, h: (0, b, h, 0, 0)),
+            pl.BlockSpec((S, 1, 1, G, LANES),
+                         lambda b, h: (0, b, h, 0, 0)),
+            pl.BlockSpec((S, 1, 1, G, LANES),
+                         lambda b, h: (0, b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name=f"flash_combine_s{S}",
+    )(acc, l_r, m_r)
+    return out

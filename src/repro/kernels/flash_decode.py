@@ -1,0 +1,176 @@
+"""Split-KV Flash-Decoding Pallas TPU kernel (the paper's target kernel).
+
+Grid layout ``(B, H_KV, S, NB)``:
+
+- ``B, H_KV, S`` are *parallel* dimensions — the work tiles the scheduler
+  distributes; ``S`` is the sequence-split axis the paper's policy sizes.
+- ``NB`` (KV blocks within one split) is the innermost *arbitrary*
+  dimension: a float32 running-softmax state lives in VMEM scratch and is
+  carried across NB steps (classic flash accumulation).
+
+GQA packing (the paper's ``pack_gqa=True``): the ``G = H_Q/H_KV`` query
+heads of one group ride the MXU M-dimension as a single ``(G, D) @ (D, BK)``
+matmul — one tile per (batch, kv-head) instead of G.
+
+Each (b, h, s) cell emits an *unnormalized* partial ``(acc, l, m)``; a
+separate LSE-combine stage merges the S partials.  On GPU FA3 this combine
+uses atomics/semaphores; on TPU it is a deterministic reduction — decode
+results are bitwise-reproducible for any split count (tested).
+
+VMEM budget per grid cell (bf16 K/V, f32 state):
+``2*BK*D*2 + G*D*4 + 2*G*128*4 + G*D*4`` — for BK=128, D=128, G=8:
+~70 KiB, far under the ~1 MiB/cell needed to double-buffer in 128 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+DEFAULT_BLOCK_K = 128
+STATS_LANES = 128            # stats stored lane-replicated for TPU layout
+
+
+def _decode_kernel(
+    # scalar prefetch
+    kv_len_ref,              # (B,) int32 in SMEM
+    # inputs
+    q_ref,                   # (1, 1, G, D)      — pre-scaled f32/bf16
+    k_ref,                   # (1, BK, 1, D)
+    v_ref,                   # (1, BK, 1, D)
+    # outputs
+    acc_out_ref,             # (1, 1, 1, G, D)   f32 unnormalized partial
+    l_out_ref,               # (1, 1, 1, G, STATS_LANES) f32
+    m_out_ref,               # (1, 1, 1, G, STATS_LANES) f32
+    # scratch
+    m_scr,                   # (G, STATS_LANES) f32
+    l_scr,                   # (G, STATS_LANES) f32
+    acc_scr,                 # (G, D) f32
+    *,
+    num_blocks_per_split: int,
+    block_k: int,
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    nb = pl.program_id(3)
+
+    @pl.when(nb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (BK, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, BK)
+
+    # mask cache positions beyond the valid length
+    blk_idx = s * num_blocks_per_split + nb
+    pos = blk_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1)                        # (G, BK)
+    valid = pos < kv_len_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_scr[:, :1]                                  # (G, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)                           # kill exp(-inf - -inf)
+    alpha = jnp.exp(m_prev - m_new)                        # (G, 1)
+
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(nb == num_blocks_per_split - 1)
+    def _flush():
+        acc_out_ref[0, 0, 0] = acc_scr[...]
+        l_out_ref[0, 0, 0] = l_scr[...]
+        m_out_ref[0, 0, 0] = m_scr[...]
+
+
+def flash_decode_partials(
+    q: jax.Array,            # (B, Hkv, G, D) — already GQA-packed & scaled
+    k: jax.Array,            # (B, L_pad, Hkv, D)
+    v: jax.Array,
+    kv_len: jax.Array,       # (B,) int32
+    *,
+    num_splits: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Run the split-KV kernel; returns unnormalized partials.
+
+    Returns ``(acc, l, m)`` with shapes ``(S,B,Hkv,G,D)``, ``(S,B,Hkv,G)``,
+    ``(S,B,Hkv,G)`` matching :func:`repro.kernels.ref.lse_combine`.
+    """
+    B, Hkv, G, D = q.shape
+    _, L, _, _ = k.shape
+    S = num_splits
+    assert L % block_k == 0, f"pad L ({L}) to block_k ({block_k})"
+    nblk = L // block_k
+    assert nblk % S == 0, f"pad blocks ({nblk}) to splits ({S})"
+    NB = nblk // S
+
+    kernel = functools.partial(
+        _decode_kernel, num_blocks_per_split=NB, block_k=block_k)
+
+    grid = (B, Hkv, S, NB)
+    acc, l, m = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, s, nb, kvl: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, s, nb, kvl: (b, s * NB + nb, h, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, s, nb, kvl: (b, s * NB + nb, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G, D),
+                             lambda b, h, s, nb, kvl: (b, h, s, 0, 0)),
+                pl.BlockSpec((1, 1, 1, G, STATS_LANES),
+                             lambda b, h, s, nb, kvl: (b, h, s, 0, 0)),
+                pl.BlockSpec((1, 1, 1, G, STATS_LANES),
+                             lambda b, h, s, nb, kvl: (b, h, s, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((G, STATS_LANES), jnp.float32),
+                pltpu.VMEM((G, STATS_LANES), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, S, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, G, STATS_LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, G, STATS_LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"flash_decode_s{S}",
+    )(kv_len.astype(jnp.int32), q, k, v)
+
+    # -> (S, B, Hkv, G, ...) layout expected by lse_combine
+    acc = acc.transpose(2, 0, 1, 3, 4)
+    l = l[..., 0].transpose(2, 0, 1, 3)
+    m = m[..., 0].transpose(2, 0, 1, 3)
+    return acc, l, m

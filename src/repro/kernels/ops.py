@@ -1,0 +1,430 @@
+"""Jit-facing dispatch wrappers around the attention kernels.
+
+Two execution paths per op, selected by ``impl``:
+
+- ``"xla"``    — the pure-jnp reference implementations from ``ref.py``.
+  Cost-analyzable, differentiable, shardable under pjit; the default for
+  train/dry-run (on this CPU container it is also the fast path).
+- ``"pallas"`` — the Pallas TPU kernels (``interpret=True`` on CPU).  The
+  TPU-native hot path; numerics validated against ``ref.py`` in tests.
+
+``decode_attention`` is the op the paper targets: its split count comes
+from precomputed :class:`~repro.core.scheduler_metadata.SchedulerMetadata`
+(the paper's "metadata-enabled path") or, if none is supplied, from an
+in-line policy evaluation at trace time (the paper's weaker "internal
+heuristic path").
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler_metadata import SchedulerMetadata, get_scheduler_metadata
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode_partials
+from repro.kernels.flash_prefill import flash_prefill
+
+
+# ---------------------------------------------------------------------------
+# Decode context: how the serving engine injects the mesh-level split
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DecodeContext:
+    """Trace-time decode configuration (set by the serve-step builder).
+
+    ``policy`` / ``num_cores`` parameterize the paper's split heuristic.
+    ``min_splits`` and ``split_constraint`` realize the MESH-level split:
+    when the policy decides to sequence-shard the KV cache over the model
+    axis, the split axis of the partials is pinned to that mesh axis and
+    the kernel split count is rounded up to a multiple of it — each chip
+    then owns ``s / axis_size`` local splits and the LSE combine lowers to
+    the all-reduce the roofline's collective term measures.
+
+    ``seq_shard_mesh``/``seq_shard_axis`` select the fused shard_map path
+    instead: cache write + partial softmax run shard-locally and ONLY the
+    (B, H, D)-sized LSE partials cross the wire (a psum) — vs the
+    GSPMD-auto path, which re-gathers the whole cache around the scatter
+    (~536 MB/layer at decode_32k; measured in EXPERIMENTS.md §Perf).
+    """
+    policy: str = "paper"
+    num_cores: Optional[int] = None
+    min_splits: int = 1
+    # applied to the (S, B, C, H, D) split-KV tensors and (S, ...) partials
+    split_constraint: Optional[Callable[[jax.Array], jax.Array]] = None
+    # fused shard_map sequence-sharded decode (optimized path)
+    seq_shard_mesh: Optional[object] = None
+    seq_shard_axis: str = "model"
+
+
+_CTX: list = [DecodeContext()]
+
+
+@contextlib.contextmanager
+def decode_context(ctx: DecodeContext):
+    _CTX.append(ctx)
+    try:
+        yield
+    finally:
+        _CTX.pop()
+
+
+def current_decode_context() -> DecodeContext:
+    return _CTX[-1]
+
+
+@dataclass(frozen=True)
+class AttnContext:
+    """Trace-time config for full-sequence attention (train/prefill).
+
+    ``seq_shard_mesh`` turns on sequence-parallel attention: the QUERY
+    rows shard over ``seq_shard_axis`` and each chip runs blocked flash
+    on its chunk with the right ``q_offset`` (K/V stay whole).  This is
+    the §Perf fix for head counts that don't divide the model axis
+    (MiniCPM3: 40, Whisper: 20): head-replicated attention re-computes
+    everything ``axis``-fold; query-sharding recovers the 16x at the
+    price of one output all-gather per layer.
+    """
+    seq_shard_mesh: Optional[object] = None
+    seq_shard_axis: str = "model"
+
+
+_ATTN_CTX: list = [AttnContext()]
+
+
+@contextlib.contextmanager
+def attention_context(ctx: AttnContext):
+    _ATTN_CTX.append(ctx)
+    try:
+        yield
+    finally:
+        _ATTN_CTX.pop()
+
+
+def current_attention_context() -> AttnContext:
+    return _ATTN_CTX[-1]
+
+
+def attention(
+    q: jax.Array,            # (B, Lq, Hq, D)
+    k: jax.Array,            # (B, Lk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    impl: str = "xla",
+    interpret: bool = True,
+) -> jax.Array:
+    """Full (training / prefill) attention."""
+    actx = current_attention_context()
+    if (actx.seq_shard_mesh is not None and impl in ("xla", "naive")
+            and isinstance(q_offset, int)):
+        mesh = actx.seq_shard_mesh
+        n = mesh.shape[actx.seq_shard_axis]
+        if q.shape[1] % n == 0 and q.shape[1] >= 2 * n:
+            return _attention_seqpar(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                mesh=mesh, axis=actx.seq_shard_axis, impl=impl)
+    if impl == "pallas":
+        if not isinstance(q_offset, int):
+            raise ValueError("pallas prefill path needs a static q_offset")
+        return flash_prefill(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, interpret=interpret)
+    if impl == "naive":
+        return ref.naive_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    return ref.flash_attention_xla(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+
+
+def _attention_seqpar(q, k, v, *, causal, window, q_offset, mesh,
+                      axis: str, impl: str = "xla") -> jax.Array:
+    """Sequence-parallel blocked attention: q rows sharded over ``axis``,
+    each chip runs local flash on its chunk with the global offset."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, Lq, Hq, D = q.shape
+    n = mesh.shape[axis]
+    C = Lq // n
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = data_axes if (data_axes and B % _prod(
+        mesh.shape[a] for a in data_axes) == 0) else None
+
+    def body(qc, kf, vf):
+        i = jax.lax.axis_index(axis)
+        # dynamic global offset of this chunk's first query row
+        off = q_offset + i * C
+        if impl == "naive":                  # probe path: exact counting
+            return ref.naive_attention(qc, kf, vf, causal=causal,
+                                       window=window, q_offset=off)
+        return ref.flash_attention_xla(qc, kf, vf, causal=causal,
+                                       window=window, q_offset=off)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, axis, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=P(bspec, axis, None, None),
+        check_rep=False)
+    return fn(q, k, v)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, Hq, D) — one new token per sequence
+    k: jax.Array,            # (B, Lk, Hkv, D) padded KV cache
+    v: jax.Array,
+    kv_len: jax.Array,       # (B,) int32 valid lengths
+    *,
+    metadata: Optional[SchedulerMetadata] = None,
+    policy: str = "paper",
+    num_cores: Optional[int] = None,
+    impl: str = "xla",
+    interpret: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Split-KV decode attention, split count from the paper's policy.
+
+    ``metadata`` (precomputed launch plan) is the paper's fast path; when
+    ``None`` the policy runs at trace time (internal-heuristic path).
+    ``num_splits`` is always a static Python int, so XLA / Pallas
+    specialize the schedule on it — changing the policy changes the
+    *compiled program*, which is exactly what the dry-run measures.
+
+    An active :class:`DecodeContext` (serving engine) overrides policy /
+    num_cores and can pin the split axis onto a mesh axis (mesh-level
+    sequence split of the KV cache).
+    """
+    ctx = current_decode_context()
+    B, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    if metadata is None:
+        cores = ctx.num_cores if ctx.num_cores is not None else num_cores
+        pol = ctx.policy if ctx.num_cores is not None else policy
+        kwargs = {} if cores is None else {"num_cores": cores}
+        metadata = get_scheduler_metadata(
+            B, 1, Lk, Hq, Hkv, D, policy=pol, **kwargs)
+    s = max(1, min(metadata.num_splits, Lk))
+    if ctx.min_splits > 1:
+        # mesh-level split: round s up to a multiple of the sharded axis so
+        # the S axis shards evenly (serving pads caches so min_splits | Lk)
+        s = -(-s // ctx.min_splits) * ctx.min_splits
+        s = min(s, Lk)
+
+    if impl == "pallas":
+        assert scale is None, "pallas path computes its own scale"
+        return _decode_pallas(q, k, v, kv_len, num_splits=s,
+                              interpret=interpret)
+    if impl == "naive":
+        return ref.naive_decode_attention(q, k, v, kv_len, scale=scale)
+    return ref.split_decode_xla(q, k, v, kv_len, s, scale=scale,
+                                shard_split=ctx.split_constraint)
+
+
+def decode_attention_update(
+    q: jax.Array,            # (B, Hq, Dq) — new token's queries (UNscaled)
+    cache_k: jax.Array,      # (B, L, Hkv, Dk)
+    cache_v: Optional[jax.Array],   # (B, L, Hkv, Dv) or None (MLA: v ⊂ k)
+    k_new: jax.Array,        # (B, Hkv, Dk)
+    v_new: Optional[jax.Array],
+    t: jax.Array,            # (B,) int32 write positions
+    kv_len: jax.Array,       # (B,) int32 valid lengths AFTER the write
+    *,
+    v_width: Optional[int] = None,  # MLA: v = k[..., :v_width]
+    scale: Optional[float] = None,
+    policy: str = "paper",
+    num_cores: Optional[int] = None,
+    quant: Optional[dict] = None,   # int8 cache: {"k_s","v_s","k_ns","v_ns"}
+) -> tuple:
+    """Fused cache-write + split decode attention.
+
+    Default path: functional update then :func:`decode_attention` (GSPMD
+    decides the collectives).  When the active :class:`DecodeContext` has
+    ``seq_shard_mesh``, the fused shard_map path runs instead: each chip
+    writes only its own cache shard and computes a partial softmax over
+    it; partials merge with a psum/pmax LSE combine — the paper's
+    split-KV combine as explicit mesh collectives.
+
+    Returns (out (B, Hq, Dv), new_cache_k, new_cache_v).
+    """
+    ctx = current_decode_context()
+    if ctx.seq_shard_mesh is not None:
+        return _decode_seqsharded(
+            q, cache_k, cache_v, k_new, v_new, t, kv_len,
+            mesh=ctx.seq_shard_mesh, axis=ctx.seq_shard_axis,
+            v_width=v_width, scale=scale, quant=quant)
+
+    # functional update + policy-split attention (auto-SPMD path)
+    def upd(c, new, ti):
+        return jax.lax.dynamic_update_slice(
+            c, new[None].astype(c.dtype),
+            (ti, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+
+    def upd2(c, new, ti):
+        return jax.lax.dynamic_update_slice(
+            c, new[None].astype(c.dtype), (ti, jnp.zeros((), jnp.int32)))
+
+    cache_k = jax.vmap(upd)(cache_k, k_new, t)
+    if cache_v is not None:
+        cache_v = jax.vmap(upd)(cache_v, v_new, t)
+    if quant is not None:
+        from repro.models.attention import dequantize_kv
+        k_s = jax.vmap(upd2)(quant["k_s"], quant["k_ns"], t)
+        v_s = jax.vmap(upd2)(quant["v_s"], quant["v_ns"], t)
+        kf = dequantize_kv(cache_k, k_s)
+        vf = dequantize_kv(cache_v, v_s)
+        out = decode_attention(q, kf, vf, kv_len, scale=scale,
+                               policy=policy, num_cores=num_cores)
+        return out, cache_k, cache_v, k_s, v_s
+    v_used = cache_v if cache_v is not None else cache_k[..., :v_width]
+    out = decode_attention(q, cache_k, v_used, kv_len, scale=scale,
+                           policy=policy, num_cores=num_cores)
+    return out, cache_k, cache_v
+
+
+def _decode_seqsharded(q, cache_k, cache_v, k_new, v_new, t, kv_len, *,
+                       mesh, axis: str, v_width: Optional[int],
+                       scale: Optional[float],
+                       quant: Optional[dict] = None) -> tuple:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, Hq, Dq = q.shape
+    _, L, Hkv, Dk = cache_k.shape
+    g = Hq // Hkv
+    n = mesh.shape[axis]
+    assert L % n == 0, f"cache len {L} must divide the {axis} axis ({n})"
+    C = L // n
+    scale = scale if scale is not None else Dq ** -0.5
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = data_axes if (data_axes and B % _prod(
+        mesh.shape[a] for a in data_axes) == 0) else None
+
+    cache_spec = P(bspec, axis, None, None)
+    sc_spec = P(bspec, axis, None)
+    vec_spec = P(bspec, None, None)
+    hvec_spec = P(bspec, None)
+    scal_spec = P(bspec)
+
+    def upd(c, new, ti, ok):
+        zeros = (jnp.zeros((), jnp.int32),) * (c.ndim - 1)
+        newc = jax.lax.dynamic_update_slice(
+            c, new[None].astype(c.dtype), (ti,) + zeros)
+        return jnp.where(ok, newc, c)
+
+    def core(qb, kf, vf, lenb, i):
+        qf = (qb.astype(jnp.float32) * scale).reshape(-1, Hkv, g, Dq)
+        pos = i * C + jnp.arange(C)                       # global positions
+        valid = pos[None, :] < lenb[:, None]              # (B_loc, C)
+        acc, l, m = ref.decode_partial(qf, kf, vf, valid)
+        m_glob = jax.lax.pmax(m, axis)
+        w = jnp.exp(m - m_glob)
+        num = jax.lax.psum(acc * w[..., None], axis)
+        den = jax.lax.psum(l * w, axis)
+        out = num / jnp.maximum(den[..., None], 1e-30)
+        Dv = out.shape[-1]
+        return out.reshape(-1, Hq, Dv).astype(qb.dtype)
+
+    def body(qb, kc, vc, kn, vn, tb, lenb):
+        # kc: (B_loc, C, Hkv, Dk) — this chip's sequence shard
+        i = jax.lax.axis_index(axis)
+        local_t = tb - i * C                              # (B_loc,)
+        in_range = (local_t >= 0) & (local_t < C)
+        lt = jnp.clip(local_t, 0, C - 1)
+        kc = jax.vmap(upd)(kc, kn, lt, in_range)
+        if vc is not None:
+            vc = jax.vmap(upd)(vc, vn, lt, in_range)
+            vloc = vc
+        else:
+            vloc = kc[..., :v_width]
+        return core(qb, kc, vloc, lenb, i), kc, vc
+
+    def body_q(qb, kc, vc, ksc, vsc, kn, vn, kns, vns, tb, lenb):
+        # int8 cache: scales ride along; dequant happens shard-locally
+        # (HBM reads stay int8 — the memory-roofline win)
+        from repro.models.attention import dequantize_kv
+        i = jax.lax.axis_index(axis)
+        local_t = tb - i * C
+        in_range = (local_t >= 0) & (local_t < C)
+        lt = jnp.clip(local_t, 0, C - 1)
+        kc = jax.vmap(upd)(kc, kn, lt, in_range)
+        vc = jax.vmap(upd)(vc, vn, lt, in_range)
+        ksc = jax.vmap(upd)(ksc, kns, lt, in_range)
+        vsc = jax.vmap(upd)(vsc, vns, lt, in_range)
+        kf = dequantize_kv(kc, ksc)
+        vf = dequantize_kv(vc, vsc)
+        return core(qb, kf, vf, lenb, i), kc, vc, ksc, vsc
+
+    if quant is not None:
+        fn = shard_map(
+            body_q, mesh=mesh,
+            in_specs=(vec_spec, cache_spec, cache_spec, sc_spec, sc_spec,
+                      vec_spec, vec_spec, hvec_spec, hvec_spec,
+                      scal_spec, scal_spec),
+            out_specs=(vec_spec, cache_spec, cache_spec, sc_spec, sc_spec),
+            check_rep=False)
+        return fn(q, cache_k, cache_v, quant["k_s"], quant["v_s"],
+                  k_new, v_new, quant["k_ns"], quant["v_ns"], t, kv_len)
+
+    if cache_v is not None:
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(vec_spec, cache_spec, cache_spec, vec_spec,
+                      vec_spec, scal_spec, scal_spec),
+            out_specs=(vec_spec, cache_spec, cache_spec),
+            check_rep=False)
+        return fn(q, cache_k, cache_v, k_new, v_new, t, kv_len)
+
+    def body_nov(qb, kc, kn, tb, lenb):
+        o, ck, _ = body(qb, kc, None, kn, None, tb, lenb)
+        return o, ck
+
+    fn = shard_map(
+        body_nov, mesh=mesh,
+        in_specs=(vec_spec, cache_spec, vec_spec, scal_spec, scal_spec),
+        out_specs=(vec_spec, cache_spec),
+        check_rep=False)
+    out, ck = fn(q, cache_k, k_new, t, kv_len)
+    return out, ck, None
+
+
+def _prod(it) -> int:
+    r = 1
+    for x in it:
+        r *= x
+    return r
+
+
+def _decode_pallas(q, k, v, kv_len, *, num_splits: int,
+                   interpret: bool) -> jax.Array:
+    """GQA-pack, pad, run the Pallas split kernel, LSE-combine."""
+    from repro.kernels.flash_decode import DEFAULT_BLOCK_K
+
+    B, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    qp = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+
+    block_k = min(DEFAULT_BLOCK_K, Lk)
+    # pad cache so blocks divide evenly into splits
+    blocks = -(-Lk // block_k)
+    blocks = -(-blocks // num_splits) * num_splits
+    Lp = blocks * block_k
+    if Lp != Lk:
+        k = jnp.pad(k, ((0, 0), (0, Lp - Lk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Lp - Lk), (0, 0), (0, 0)))
+
+    acc, l, m = flash_decode_partials(
+        qp.astype(q.dtype), k, v, kv_len, num_splits=num_splits,
+        block_k=block_k, interpret=interpret)
+    from repro.kernels.flash_combine import flash_combine
+    out = flash_combine(acc, l, m, interpret=interpret)  # (B, Hkv, g, D)
+    return out.reshape(B, Hq, D).astype(q.dtype)

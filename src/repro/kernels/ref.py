@@ -1,0 +1,253 @@
+"""Pure-jnp reference oracles for the attention kernels.
+
+Three tiers:
+
+- ``naive_*``: O(L^2)-materializing einsum attention.  Ground truth for
+  tiny test shapes only.
+- ``flash_attention_xla``: blocked two-level-scan flash attention in pure
+  jnp — differentiable, memory-safe (never materializes more than a
+  (block_q, block_k) score tile), and shardable under pjit.  This is the
+  default ``attention_impl="xla"`` path used by train/prefill steps, and
+  the oracle the Pallas prefill kernel is tested against.
+- ``split_decode_xla``: decode attention computed as S explicit partial
+  softmaxes + LSE combine, in pure jnp.  The split count changes the
+  *schedule*, never the math — the oracle for the Pallas decode kernel,
+  and the XLA decode path whose sharding the mesh-level split uses.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite -inf stand-in: keeps masked softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Naive oracles
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(
+    q: jax.Array,          # (B, Lq, Hq, D)
+    k: jax.Array,          # (B, Lk, Hkv, D)
+    v: jax.Array,          # (B, Lk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Materializing attention. ``q_offset``: absolute position of q[:, 0].
+
+    ``v`` may have a different head dim than q/k (MLA: v_head_dim 64 vs
+    qk dim 96) — the output head dim follows v.
+    """
+    B, Lq, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Lq, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+    qpos = jnp.arange(Lq)[:, None] + q_offset
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Lq, Hq, Dv).astype(q.dtype)
+
+
+def naive_decode_attention(
+    q: jax.Array,          # (B, Hq, D) — single new token
+    k: jax.Array,          # (B, Lk, Hkv, D) — cache (padded)
+    v: jax.Array,
+    kv_len: jax.Array,     # (B,) int32 — valid cache lengths
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    valid = jnp.arange(Lk)[None, :] < kv_len[:, None]          # (B, Lk)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (differentiable XLA path + prefill oracle)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_xla(
+    q: jax.Array,          # (B, Lq, Hq, D)
+    k: jax.Array,          # (B, Lk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: scan over KV blocks per Q block.
+
+    Peak live score tile is (block_q, block_k); the outer q-block loop and
+    inner k-block loop are both ``lax`` control flow so XLA keeps the
+    memory bound under pjit and remat policies apply cleanly.
+    """
+    B, Lq, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lk)
+    # pad sequence dims to block multiples
+    pq = (-Lq) % block_q
+    pk = (-Lk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    Lqp, Lkp = Lq + pq, Lk + pk
+    nq, nk = Lqp // block_q, Lkp // block_k
+
+    qf = (qp.astype(jnp.float32) * scale).reshape(B, nq, block_q, Hkv, g, D)
+    kf = kp.astype(jnp.float32).reshape(B, nk, block_k, Hkv, D)
+    vf = vp.astype(jnp.float32).reshape(B, nk, block_k, Hkv, Dv)
+
+    kpos_all = jnp.arange(Lkp).reshape(nk, block_k)
+
+    def q_block(iq, q_blk):
+        # q_blk: (B, block_q, Hkv, g, D)
+        qpos = iq * block_q + jnp.arange(block_q) + q_offset    # (bq,)
+
+        def kv_block(carry, ik):
+            m, l, acc = carry
+            kb = kf[:, ik]                                      # (B, bk, Hkv, D)
+            vb = vf[:, ik]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, kb)
+            kpos = kpos_all[ik]
+            msk = kpos[None, :] < Lk                            # padding
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, block_q, Dv), jnp.float32)
+        q_blk_t = q_blk.transpose(0, 2, 3, 1, 4)                # unused; kept for clarity
+        del q_blk_t
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out                                               # (B,Hkv,g,bq,D)
+
+    outs = jax.lax.map(lambda iq: q_block(iq, qf[:, iq]), jnp.arange(nq))
+    # (nq, B, Hkv, g, bq, D) -> (B, nq*bq, Hq, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Lqp, Hq, Dv)
+    return out[:, :Lq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Split-KV decode: partials + LSE combine (the paper's technique, in jnp)
+# ---------------------------------------------------------------------------
+
+
+def decode_partial(
+    q: jax.Array,          # (B, Hkv, g, D) f32, pre-scaled
+    k_chunk: jax.Array,    # (B, C, Hkv, D)
+    v_chunk: jax.Array,    # (B, C, Hkv, D)
+    valid: jax.Array,      # (B, C) bool
+):
+    """One split's unnormalized partial: (acc, l, m)."""
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, k_chunk.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1)                                          # (B,Hkv,g)
+    # fully-masked chunk: keep m at NEG_INF, p underflows to 0
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p, v_chunk.astype(jnp.float32))
+    return acc, l, m
+
+
+def lse_combine(accs: jax.Array, ls: jax.Array, ms: jax.Array) -> jax.Array:
+    """Merge S unnormalized partials. accs: (S,B,H,g,D), ls/ms: (S,B,H,g)."""
+    m_glob = ms.max(axis=0)                                     # (B,H,g)
+    w = jnp.exp(ms - m_glob[None])                              # (S,B,H,g)
+    num = (accs * w[..., None]).sum(axis=0)
+    den = (ls * w).sum(axis=0)
+    return num / jnp.maximum(den[..., None], 1e-30)
+
+
+def split_decode_xla(
+    q: jax.Array,          # (B, Hq, D)
+    k: jax.Array,          # (B, Lk, Hkv, D) padded cache
+    v: jax.Array,
+    kv_len: jax.Array,     # (B,) int32
+    num_splits: int,
+    *,
+    scale: Optional[float] = None,
+    shard_split: Optional[callable] = None,
+) -> jax.Array:
+    """Decode attention as ``num_splits`` explicit partials + LSE combine.
+
+    The split axis is a real array axis, so under pjit it can be assigned a
+    mesh axis — this is the mesh-level incarnation of the paper's heuristic.
+    Output is bitwise-independent of ``num_splits`` up to float tolerance
+    (property-tested).
+    """
+    B, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    s = max(1, min(num_splits, Lk))
+    # pad Lk to a multiple of s
+    pad = (-Lk) % s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    C = (Lk + pad) // s
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+    kc = k.reshape(B, s, C, Hkv, D).transpose(1, 0, 2, 3, 4)     # (S,B,C,H,D)
+    vc = v.reshape(B, s, C, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    if shard_split is not None:
+        # mesh-level split: pin the S axis to a mesh axis so every chip
+        # owns S/axis local splits; the LSE combine's sums over S lower
+        # to the collectives the roofline measures.
+        kc, vc = shard_split(kc), shard_split(vc)
+    pos = jnp.arange(Lk + pad).reshape(s, C)                     # (S,C)
+    valid = pos[:, None, :] < kv_len[None, :, None]              # (S,B,C)
+
+    accs, ls, ms = jax.vmap(
+        lambda kci, vci, vldi: decode_partial(qf, kci, vci, vldi)
+    )(kc, vc, valid)
+    out = lse_combine(accs, ls, ms)                              # (B,Hkv,g,Dv)
+    return out.reshape(B, Hq, Dv).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, dry-run, train, serve."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_name  # noqa: F401

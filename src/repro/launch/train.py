@@ -1,0 +1,101 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Drives the full substrate end-to-end on whatever devices exist: reduced
+or full config, synthetic data, AdamW, remat, microbatching, async
+checkpointing, elastic resume.  The quickstart example and the
+integration tests call :func:`run_training` directly.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import (
+    OptimizerConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.configs.reduced import reduced_config
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.fault.elastic import resumable_train_loop
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+from repro.training.train_step import build_train_step
+
+
+def run_training(
+    arch: str,
+    *,
+    steps: int = 200,
+    reduced: bool = True,
+    d_model: int = 128,
+    num_layers: int = 4,
+    seq_len: int = 128,
+    global_batch: int = 8,
+    microbatches: int = 1,
+    lr: float = 1e-3,
+    ckpt_dir: str = "/tmp/repro_ckpt",
+    ckpt_every: int = 50,
+    model_axis: int = 1,
+    remat_policy: str = "none",
+    fail_at_step: Optional[int] = None,
+    log_fn=print,
+) -> Dict[str, float]:
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = reduced_config(cfg, num_layers=num_layers, d_model=d_model)
+    model = build_model(cfg)
+    mesh = make_host_mesh(model_axis)
+    shape = ShapeConfig("cli", seq_len, global_batch, "train")
+    tcfg = TrainConfig(
+        model=cfg, shape=shape,
+        optimizer=OptimizerConfig(lr=lr, warmup_steps=max(1, steps // 20),
+                                  total_steps=steps),
+        microbatches=microbatches, remat_policy=remat_policy,
+        checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every)
+    bundle = build_train_step(model, tcfg, mesh)
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=model.text_len(seq_len) if cfg.frontend.kind != "vision"
+        else model.text_len(seq_len),
+        global_batch=global_batch, seed=tcfg.seed))
+    if model.frontend_inputs(global_batch, seq_len):
+        raise NotImplementedError(
+            "CLI training drives text-only archs; frontend-stub archs are "
+            "covered by examples/train_tiny.py and the integration tests")
+    return resumable_train_loop(
+        bundle, data, total_steps=steps, ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every, fail_at_step=fail_at_step, log_fn=log_fn)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: reduced smoke config)")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--num-layers", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    args = ap.parse_args()
+    metrics = run_training(
+        args.arch, steps=args.steps, reduced=not args.full,
+        d_model=args.d_model, num_layers=args.num_layers,
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        microbatches=args.microbatches, lr=args.lr,
+        ckpt_dir=args.ckpt_dir, model_axis=args.model_axis,
+        remat_policy=args.remat)
+    print("final:", metrics)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: all assigned architecture families on one spec-first API."""
+from repro.models.registry import Model, build_model  # noqa: F401

@@ -1,0 +1,305 @@
+"""Standard multi-head attention block (GQA/MQA/MHA) with KV cache.
+
+Three entry points, all operating on a single layer's params:
+
+- :func:`attention_train`   — full-sequence causal (optionally windowed)
+  attention for training / prefill.
+- :func:`attention_decode`  — one-token decode against a padded KV cache,
+  routed through the paper's split policy via ``kernels.ops``.
+- :func:`cache_update`      — functional KV-cache write at position ``t``.
+
+Cache layout is ``(B, L_max, H_kv, D)`` — sequence-major so the mesh-level
+sequence split (serving/decode_step.py) can shard ``L_max`` directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler_metadata import SchedulerMetadata
+from repro.kernels import ops
+from repro.models.common import ParamSpec, apply_rope
+
+Params = Dict[str, jax.Array]
+
+
+def attention_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    specs = {
+        "wq": ParamSpec((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((hq, hd, d), ("heads", "head_dim", "embed"),
+                        fan_in=hq * hd),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((hq, hd), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"),
+                                init="zeros")
+        specs["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"),
+                                init="zeros")
+    return specs
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array, rope: bool = True
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, L, d) -> q (B,L,Hq,D), k/v (B,L,Hkv,D), rope applied."""
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_train(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, L, d)
+    positions: jax.Array,               # (B, L) int32
+    *,
+    window: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = ops.attention(q, k, v, causal=True, window=window,
+                        impl=impl or cfg.attention_impl)
+    return jnp.einsum("blhk,hkd->bld", out, params["wo"])
+
+
+def attention_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, L, d)
+    positions: jax.Array,               # (B, L)
+    cache_len: int,
+    *,
+    window: Optional[int] = None,
+    impl: Optional[str] = None,
+    kv_dtype: str = "bfloat16",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence attention that also emits the decode cache.
+
+    The cache is laid out exactly as the decode step expects: linear
+    [0..L) for full attention, ring order (position % window) holding the
+    last ``window`` positions for local attention.
+    """
+    B, L, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = ops.attention(q, k, v, causal=True, window=window,
+                        impl=impl or cfg.attention_impl)
+    y = jnp.einsum("blhk,hkd->bld", out, params["wo"])
+
+    if window is None:
+        pad = cache_len - L
+        assert pad >= 0, f"prompt ({L}) exceeds cache ({cache_len})"
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        W = cache_len                   # ring cache sized min(window, max)
+        if L >= W:
+            # slot s holds the unique position p in [L-W, L), p % W == s
+            s_idx = jnp.arange(W)
+            base = L - W
+            src = base + jnp.mod(s_idx - base, W)
+            kc, vc = k[:, src], v[:, src]
+        else:
+            pad = W - L
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if kv_dtype == "int8":
+        kq, ks = quantize_kv(kc)
+        vq, vs = quantize_kv(vc)
+        return y, {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
+    return y, {"k": kc.astype(cfg.dtype), "v": vc.astype(cfg.dtype)}
+
+
+def cross_attention_train(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, Lq, d) decoder stream
+    memory: jax.Array,                  # (B, Lk, d) encoder output
+    *,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->blhk", memory, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", memory, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    out = ops.attention(q, k, v, causal=False,
+                        impl=impl or cfg.attention_impl)
+    return jnp.einsum("blhk,hkd->bld", out, params["wo"])
+
+
+def precompute_cross_kv(params: Params, cfg: ModelConfig,
+                        memory: jax.Array) -> Dict[str, jax.Array]:
+    """Project encoder output to K/V once per request (decode fast path)."""
+    k = jnp.einsum("bld,dhk->blhk", memory, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", memory, params["wv"])
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    return {"k": k, "v": v}
+
+
+def cross_attention_decode(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, 1, d)
+    cross_cache: Dict[str, jax.Array],  # precomputed k/v (B, Lk, Hkv, D)
+    *,
+    metadata: Optional[SchedulerMetadata] = None,
+    policy: str = "paper",
+    num_cores: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Decode-time cross attention against a FIXED-length memory.
+
+    L_K is the encoder length (Whisper: 1500 frames -> nblk = 12) — decode
+    against it is exactly the paper's shape family, so it routes through
+    the same split policy.
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+    Lk = cross_cache["k"].shape[1]
+    kv_len = jnp.full((B,), Lk, jnp.int32)
+    out = ops.decode_attention(
+        q[:, 0], cross_cache["k"], cross_cache["v"], kv_len,
+        metadata=metadata, policy=policy, num_cores=num_cores,
+        impl=impl or cfg.attention_impl)
+    return jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    if dtype in ("int8", jnp.int8):
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:3], jnp.float32),
+                "v_s": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    """KV cache layout.  ``dtype="int8"`` adds per-(token, head) symmetric
+    scales — halves the decode step's dominant memory term (§Perf C.4)."""
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    axes = ("batch", "seq", "kv_heads", "head_dim")
+    if dtype == "int8":
+        sspec = ParamSpec(shape[:3], axes[:3], dtype="float32",
+                          init="zeros")
+        return {"k": ParamSpec(shape, axes, dtype="int8", init="zeros"),
+                "v": ParamSpec(shape, axes, dtype="int8", init="zeros"),
+                "k_s": sspec, "v_s": sspec}
+    return {"k": ParamSpec(shape, axes, dtype=dtype, init="zeros"),
+            "v": ParamSpec(shape, axes, dtype=dtype, init="zeros")}
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-(..., head) int8 over the feature dim.
+    x: (..., H, D) -> (q int8 same shape, scale f32 (..., H))."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(m, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def cache_update(cache: Dict[str, jax.Array], k_new: jax.Array,
+                 v_new: jax.Array, t: jax.Array) -> Dict[str, jax.Array]:
+    """Write one token's K/V at position t.
+
+    ``t``: scalar (lockstep decode) or (B,) (continuous batching — each
+    slot at its own position).
+    """
+    B = k_new.shape[0]
+    tv = jnp.broadcast_to(t.astype(jnp.int32), (B,))
+
+    def upd(c, new, ti):
+        return jax.lax.dynamic_update_slice(
+            c, new[None].astype(c.dtype),
+            (ti, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+
+    return {
+        "k": jax.vmap(upd)(cache["k"], k_new, tv),
+        "v": jax.vmap(upd)(cache["v"], v_new, tv),
+    }
+
+
+def attention_decode(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, 1, d) — the new token
+    cache: Dict[str, jax.Array],
+    t: jax.Array,                       # scalar int32: current position
+    *,
+    metadata: Optional[SchedulerMetadata] = None,
+    policy: str = "paper",
+    num_cores: Optional[int] = None,
+    window: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step. Returns (output (B,1,d), updated cache).
+
+    ``t``: scalar or (B,) — position of each sequence's new token.
+    """
+    B = x.shape[0]
+    tv = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    positions = tv[:, None]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    cache_len = cache["k"].shape[1]
+    if window is not None:
+        # local attention: ring-buffer cache sized to the window.  RoPE is
+        # applied at absolute positions before the write, so slot order is
+        # irrelevant — every resident entry is attendable (all are past).
+        write_t = jnp.mod(tv, jnp.int32(cache_len))
+        kv_len = jnp.minimum(tv + 1, jnp.int32(cache_len))
+    else:
+        write_t = tv
+        kv_len = tv + 1
+    if (impl or cfg.attention_impl) == "pallas":
+        cache = cache_update(cache, k_new[:, 0], v_new[:, 0], write_t)
+        out = ops.decode_attention(
+            q[:, 0], cache["k"], cache["v"], kv_len,
+            metadata=metadata, policy=policy, num_cores=num_cores,
+            impl="pallas")
+    elif "k_s" in cache:                    # int8 KV cache (§Perf C.4)
+        kq, kns = quantize_kv(k_new[:, 0])
+        vq, vns = quantize_kv(v_new[:, 0])
+        out, ck, cv, ks, vs = ops.decode_attention_update(
+            q[:, 0], cache["k"], cache["v"], kq, vq, write_t, kv_len,
+            policy=policy, num_cores=num_cores,
+            quant={"k_s": cache["k_s"], "v_s": cache["v_s"],
+                   "k_ns": kns, "v_ns": vns})
+        cache = {"k": ck, "v": cv, "k_s": ks, "v_s": vs}
+    else:
+        out, ck, cv = ops.decode_attention_update(
+            q[:, 0], cache["k"], cache["v"], k_new[:, 0], v_new[:, 0],
+            write_t, kv_len, policy=policy, num_cores=num_cores)
+        cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
+    return y[:, None], cache

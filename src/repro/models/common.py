@@ -1,0 +1,239 @@
+"""Shared model machinery: param specs, norms, RoPE, MLPs, embeddings.
+
+Everything is *spec-first*: a model family declares its parameters as a
+pytree of :class:`ParamSpec` (shape + logical axes + init), and three
+derived views fall out mechanically:
+
+- ``init_params``      — materialize real arrays (smoke tests / examples),
+- ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (the dry-run path:
+  full-size configs are *never* allocated),
+- ``logical_axes``     — pytree of logical-axis tuples that
+  ``sharding/rules.py`` maps onto the mesh.
+
+Logical axis vocabulary (mapped to mesh axes in one place):
+
+====================  =======================================================
+``layers``            stacked-scan leading dim (never sharded)
+``embed``             d_model / residual stream (FSDP-sharded on data axes)
+``vocab``             vocabulary (TP-sharded)
+``heads``             attention query heads (TP-sharded)
+``kv_heads``          attention KV heads (TP-sharded; replicated if < axis)
+``head_dim``          per-head feature dim (never sharded)
+``ff``                MLP hidden (TP-sharded)
+``experts``           MoE expert dim (expert-parallel on the model axis)
+``state``             SSM/LRU recurrent width (TP-sharded)
+``seq``               sequence dim of activations / caches
+``batch``             batch dim of activations / caches
+====================  =======================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    dtype: str = "bfloat16"
+    init: str = "normal"                     # normal | zeros | ones
+    fan_in: Optional[int] = None             # stddev = 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn, specs: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def abstract_params(specs: Pytree) -> Pytree:
+    """ShapeDtypeStructs for the dry-run: zero bytes allocated."""
+    return _tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.jdtype), specs)
+
+
+def logical_axes(specs: Pytree) -> Pytree:
+    return _tree_map_specs(lambda s: s.axes, specs)
+
+
+def param_count(specs: Pytree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def init_params(specs: Pytree, rng: jax.Array) -> Pytree:
+    """Materialize parameters (small/smoke configs only)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    rngs = jax.random.split(rng, max(1, len(leaves)))
+
+    def one(spec: ParamSpec, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.jdtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.jdtype)
+        fan_in = spec.fan_in if spec.fan_in else (
+            spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+        std = 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.jdtype)
+
+    arrays = [one(s, k) for s, k in zip(leaves, rngs)]
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+# ---------------------------------------------------------------------------
+# Small pure modules (params are dicts of arrays keyed like their specs)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def norm_specs(d: int, kind: str = "rms") -> Dict[str, ParamSpec]:
+    if kind == "rms":
+        return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array,
+               eps: float) -> jax.Array:
+    if "bias" in params:
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    return rms_norm(x, params["scale"], eps)
+
+
+# --- RoPE -------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embedding (half of head_dim)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, interleaved-free (rotate-half / GPT-NeoX style).
+
+    x: (..., L, H, D); positions: broadcastable to (..., L).
+    """
+    if theta <= 0:                      # e.g. whisper: no rope
+        return x
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., L, d/2)
+    # insert head axis: (..., L, 1, d/2)
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (length, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(1, half - 1))
+    ang = jnp.arange(length)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- MLP --------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int, kind: str) -> Dict[str, ParamSpec]:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d_model, d_ff), ("embed", "ff")),
+            "wi_up": ParamSpec((d_model, d_ff), ("embed", "ff")),
+            "wo": ParamSpec((d_ff, d_model), ("ff", "embed")),
+        }
+    return {  # plain gelu (whisper)
+        "wi": ParamSpec((d_model, d_ff), ("embed", "ff")),
+        "bi": ParamSpec((d_ff,), ("ff",), init="zeros"),
+        "wo": ParamSpec((d_ff, d_model), ("ff", "embed")),
+        "bo": ParamSpec((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def apply_mlp(params: Dict[str, jax.Array], x: jax.Array,
+              kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        g = act(x @ params["wi_gate"])
+        u = x @ params["wi_up"]
+        return (g * u) @ params["wo"]
+    h = jax.nn.gelu(x @ params["wi"] + params["bi"].astype(x.dtype))
+    return h @ params["wo"] + params["bo"].astype(x.dtype)
+
+
+# --- Embedding / unembedding -------------------------------------------------
+
+
+def embed_specs(vocab: int, d_model: int, tie: bool) -> Dict[str, ParamSpec]:
+    specs = {"tok": ParamSpec((vocab, d_model), ("vocab", "embed"),
+                              fan_in=d_model)}
+    if not tie:
+        specs["unembed"] = ParamSpec((d_model, vocab), ("embed", "vocab"))
+    return specs
+
+
+def embed_tokens(params: Dict[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Project to vocab logits in f32 (loss-stable)."""
+    w = params.get("unembed")
+    if w is None:
+        w = params["tok"].T
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Stacking helpers (scan-over-layers)
+# ---------------------------------------------------------------------------
+
+
+def stack_specs(specs: Pytree, n: int) -> Pytree:
+    """Prefix every leaf with a ``layers`` dim of size n (for lax.scan)."""
+    return _tree_map_specs(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=("layers",) + s.axes), specs)

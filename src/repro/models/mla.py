@@ -1,0 +1,189 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 family).
+
+MLA compresses K/V into a single shared latent stream per layer:
+
+- train/prefill: queries come from a low-rank down+up projection
+  (``q_lora``); keys/values are reconstructed from the compressed latent
+  ``c_kv`` (rank ``kv_lora_rank``) plus a *shared* RoPE key of dim
+  ``qk_rope_head_dim``.
+- decode: the cache stores only ``c_kv`` and ``k_rope`` — effectively
+  **H_KV = 1**.  This is the most extreme low-head-count regime the paper
+  targets: every decode step is one work tile per sequence, so the split
+  policy (and the mesh-level sequence split) is load-bearing here.
+
+Decode uses the *absorbed* formulation: ``W_uk`` is folded into the query
+and ``W_uv`` into the output projection, so attention runs directly in
+latent space against the (B, L, kv_lora+rope) cache with Hkv=1 — the
+shape the split policy sees.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler_metadata import SchedulerMetadata
+from repro.kernels import ops, ref
+from repro.models.common import ParamSpec, apply_rope, rms_norm
+from repro.sharding.ctx import shard_activation
+
+Params = Dict[str, jax.Array]
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """MLA params.
+
+    LAYOUT NOTE (§Perf hillclimb A): the latent ranks are deliberately
+    NOT TP-sharded.  Sharding them makes every up-projection a partial
+    sum, and when the head count doesn't divide the model axis (MiniCPM3:
+    40 heads on 16) GSPMD resolves those partials *inside* attention —
+    all-reducing score-sized tensors (measured 860 s/step of modeled
+    collective time at prefill_32k).  Replicating the tiny latent ranks
+    (~3M params) moves the resolution to one (B, L, r) all-reduce.
+    """
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "q_down": ParamSpec((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="ones"),
+        "q_up": ParamSpec((m.q_lora_rank, h, dqk),
+                          (None, "heads", "head_dim"),
+                          fan_in=m.q_lora_rank),
+        # kv down-projection: latent + shared rope key, one matmul
+        "kv_down": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                             ("embed", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        # up-projections from the latent: k_nope and v per head
+        "k_up": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                          (None, "heads", "head_dim"),
+                          fan_in=m.kv_lora_rank),
+        "v_up": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                          (None, "heads", "head_dim"),
+                          fan_in=m.kv_lora_rank),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", "head_dim", "embed"),
+                        fan_in=h * m.v_head_dim),
+    }
+
+
+def _latents(params: Params, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,L,d) -> (c_kv (B,L,r) normalized, k_rope (B,L,dr) rotated)."""
+    m = cfg.mla
+    kv = x @ params["kv_down"]                                   # (B,L,r+dr)
+    # resolve the FSDP partial sum HERE, on the narrow latent (see
+    # mla_specs layout note) — not inside attention
+    kv = shard_activation(kv, ("batch", None, None))
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]                  # shared head
+    return c_kv, k_rope
+
+
+def _queries(params: Params, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (q_nope (B,L,H,dn), q_rope (B,L,H,dr))."""
+    m = cfg.mla
+    ql = shard_activation(x @ params["q_down"], ("batch", None, None))
+    ql = rms_norm(ql, params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("blr,rhk->blhk", ql, params["q_up"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train(params: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, impl: Optional[str] = None
+              ) -> jax.Array:
+    """Full-sequence MLA (training/prefill): reconstruct K/V, run flash."""
+    m = cfg.mla
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    k_nope = jnp.einsum("blr,rhk->blhk", c_kv, params["k_up"])
+    v = jnp.einsum("blr,rhk->blhk", c_kv, params["v_up"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)               # (B,L,H,dqk)
+    B, L, H, _ = q.shape
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (B, L, H, m.qk_rope_head_dim))], axis=-1)
+    out = ops.attention(q, k, v, causal=True,
+                        impl=impl or cfg.attention_impl)         # (B,L,H,dv)
+    return jnp.einsum("blhk,hkd->bld", out, params["wo"])
+
+
+def mla_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, cache_len: int,
+                *, impl: Optional[str] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence MLA that also emits the latent decode cache."""
+    m = cfg.mla
+    y = mla_train(params, cfg, x, positions, impl=impl)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    entries = jnp.concatenate([c_kv, k_rope], axis=-1)   # (B, L, w)
+    B, L, w = entries.shape
+    pad = cache_len - L
+    assert pad >= 0, f"prompt ({L}) exceeds cache ({cache_len})"
+    lat = jnp.pad(entries, ((0, 0), (0, pad), (0, 0)))[:, :, None]
+    return y, {"latent": lat.astype(cfg.dtype)}
+
+
+# --- decode: absorbed latent-space attention (Hkv = 1) ----------------------
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    width = m.kv_lora_rank + m.qk_rope_head_dim
+    return {"latent": jnp.zeros((batch, max_len, 1, width), dtype)}
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    width = m.kv_lora_rank + m.qk_rope_head_dim
+    return {"latent": ParamSpec((batch, max_len, 1, width),
+                                ("batch", "seq", "kv_heads", "head_dim"),
+                                dtype=dtype, init="zeros")}
+
+
+def mla_decode(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, 1, d)
+    cache: Dict[str, jax.Array],
+    t: jax.Array,
+    *,
+    metadata: Optional[SchedulerMetadata] = None,
+    policy: str = "paper",
+    num_cores: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    m = cfg.mla
+    B = x.shape[0]
+    tv = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    positions = tv[:, None]
+    q_nope, q_rope = _queries(params, cfg, x, positions)         # (B,1,H,·)
+    c_kv, k_rope = _latents(params, cfg, x, positions)           # (B,1,·)
+
+    new_entry = jnp.concatenate([c_kv, k_rope], axis=-1)         # (B,1,w)
+
+    # absorb W_uk into q: score = q_nope·(c W_uk) = (q_nope W_uk^T)·c
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["k_up"])
+    q_cat = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)      # (B,H,w)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    kv_len = tv + 1
+    # latent attention: k = full latent entries, v = c_kv part only.
+    # Hkv = 1 (shared latent stream) — the paper's most extreme case.
+    out_lat, lat, _ = ops.decode_attention_update(
+        q_cat * scale, cache["latent"], None,
+        new_entry[:, 0, None, :], None, tv, kv_len,
+        v_width=m.kv_lora_rank, scale=1.0,
+        policy=policy, num_cores=num_cores)                      # (B,H,r)
+    cache = {"latent": lat}
+    out = jnp.einsum("bhr,rhk->bhk", out_lat, params["v_up"])    # absorb W_uv
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
+    return y[:, None], cache

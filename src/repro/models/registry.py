@@ -1,0 +1,136 @@
+"""Unified model facade: one object per architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` exposing the same API for
+every family (dense / mla / moe / ssm / hybrid / vlm / encdec):
+
+- ``param_specs()`` / ``abstract_params()`` / ``init_params(rng)``
+- ``cache_specs(batch, max_len)`` / ``init_cache(batch, max_len)``
+- ``forward(params, batch)``        -> (logits, aux_loss)
+- ``decode_step(params, caches, token, t)`` -> (logits, new_caches)
+
+``batch`` is a dict: ``tokens`` always; ``patches`` (vlm) or ``frames``
+(audio) when the frontend stub applies.  The dry-run, train step, serve
+step, tests and benchmarks all go through this facade.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_arch
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.common import abstract_params, init_params, logical_axes
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # --- params -------------------------------------------------------------
+
+    def param_specs(self) -> Pytree:
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_param_specs(self.cfg)
+        return lm_mod.lm_param_specs(self.cfg)
+
+    def abstract_params(self) -> Pytree:
+        return abstract_params(self.param_specs())
+
+    def init_params(self, rng: jax.Array) -> Pytree:
+        return init_params(self.param_specs(), rng)
+
+    def param_axes(self) -> Pytree:
+        return logical_axes(self.param_specs())
+
+    # --- caches ---------------------------------------------------------------
+
+    def cache_specs(self, batch: int, max_len: int,
+                    kv_dtype: str = "bfloat16") -> Pytree:
+        if self.cfg.family == "encdec":
+            return encdec_mod.encdec_cache_specs(self.cfg, batch, max_len)
+        return lm_mod.lm_cache_specs(self.cfg, batch, max_len, kv_dtype)
+
+    def abstract_cache(self, batch: int, max_len: int,
+                       kv_dtype: str = "bfloat16") -> Pytree:
+        return abstract_params(self.cache_specs(batch, max_len, kv_dtype))
+
+    def cache_axes(self, batch: int, max_len: int,
+                   kv_dtype: str = "bfloat16") -> Pytree:
+        return logical_axes(self.cache_specs(batch, max_len, kv_dtype))
+
+    def init_cache(self, batch: int, max_len: int,
+                   kv_dtype: str = "bfloat16") -> Pytree:
+        return init_params(self.cache_specs(batch, max_len, kv_dtype),
+                           jax.random.PRNGKey(0))
+
+    # --- compute --------------------------------------------------------------
+
+    def forward(self, params: Pytree, batch: Dict[str, jax.Array],
+                *, block_wrapper=None) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_forward(params, cfg, batch["tokens"],
+                                             batch["frames"])
+        return lm_mod.lm_forward(params, cfg, batch["tokens"],
+                                 patches=batch.get("patches"),
+                                 block_wrapper=block_wrapper)
+
+    def prefill(self, params: Pytree, batch: Dict[str, jax.Array],
+                max_len: int, kv_dtype: str = "bfloat16"
+                ) -> Tuple[jax.Array, Pytree]:
+        """Forward + decode-cache construction in one pass.
+
+        -> (last-position logits (B, vocab), caches ready for
+        ``decode_step`` at t = L_total).
+        """
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_prefill(params, cfg, batch["tokens"],
+                                             batch["frames"], max_len)
+        return lm_mod.lm_prefill(params, cfg, batch["tokens"], max_len,
+                                 patches=batch.get("patches"),
+                                 kv_dtype=kv_dtype)
+
+    def decode_step(self, params: Pytree, caches: Pytree, token: jax.Array,
+                    t: jax.Array, *, policy: str = "paper",
+                    num_cores: Optional[int] = None
+                    ) -> Tuple[jax.Array, Pytree]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_decode_step(
+                params, cfg, caches, token, t, policy=policy,
+                num_cores=num_cores)
+        return lm_mod.lm_decode_step(params, cfg, caches, token, t,
+                                     policy=policy, num_cores=num_cores)
+
+    # --- frontend stubs ---------------------------------------------------------
+
+    def frontend_inputs(self, batch: int, seq_len: int
+                        ) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+        """Extra (non-token) inputs: name -> (shape, dtype)."""
+        cfg = self.cfg
+        if cfg.frontend.kind == "vision":
+            return {"patches": ((batch, cfg.frontend.num_positions,
+                                 cfg.frontend.embed_dim), cfg.dtype)}
+        if cfg.family == "encdec":
+            return {"frames": ((batch, cfg.encoder_positions, cfg.d_model),
+                               cfg.dtype)}
+        return {}
+
+    def text_len(self, seq_len: int) -> int:
+        """Token count for a total sequence budget (vlm reserves patches)."""
+        if self.cfg.frontend.kind == "vision":
+            return max(1, seq_len - self.cfg.frontend.num_positions)
+        return seq_len
+
+
+def build_model(cfg_or_name: ModelConfig | str) -> Model:
+    cfg = (get_arch(cfg_or_name) if isinstance(cfg_or_name, str)
+           else cfg_or_name)
+    return Model(cfg)

@@ -1,0 +1,156 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Temporal-mixing half of a Griffin block:
+
+    branch_a = conv1d(W_in_a @ x)  -> RG-LRU linear recurrence
+    branch_b = gelu(W_in_b @ x)
+    out      = W_out @ (branch_a * branch_b)
+
+RG-LRU: ``h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)`` with
+``a_t = exp(-c softplus(Lambda) r_t)`` — a *linear* recurrence in h, so
+training uses ``jax.lax.associative_scan`` (log-depth, MXU-free but
+parallel) and decode is a single fused elementwise update.
+
+Attention layers of the hybrid use ``models.attention`` with a local
+window — those are where the paper's split policy applies (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+Params = Dict[str, jax.Array]
+_C = 8.0                               # RG-LRU decay sharpness constant
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, w = cfg.d_model, _width(cfg)
+    cw = cfg.hybrid.conv_width
+    return {
+        "w_in_a": ParamSpec((d, w), ("embed", "state")),
+        "w_in_b": ParamSpec((d, w), ("embed", "state")),
+        "conv_w": ParamSpec((cw, w), (None, "state"), fan_in=cw),
+        "conv_b": ParamSpec((w,), ("state",), init="zeros"),
+        "lam": ParamSpec((w,), ("state",), init="ones"),     # Lambda
+        "w_gate_i": ParamSpec((w, w), ("state", None)),      # input gate
+        "b_gate_i": ParamSpec((w,), ("state",), init="zeros"),
+        "w_gate_r": ParamSpec((w, w), ("state", None)),      # recurrence gate
+        "b_gate_r": ParamSpec((w,), ("state",), init="zeros"),
+        "w_out": ParamSpec((w, d), ("state", "embed")),
+    }
+
+
+def _gates(params: Params, xa: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (log_a, gated_in), both f32, shapes of xa."""
+    xf = xa.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(xf @ params["w_gate_i"].astype(jnp.float32)
+                         + params["b_gate_i"].astype(jnp.float32))
+    r_t = jax.nn.sigmoid(xf @ params["w_gate_r"].astype(jnp.float32)
+                         + params["b_gate_r"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r_t
+    return log_a, i_t * xf
+
+
+def _conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Causal depthwise conv along L. x: (B, L, W)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[W - 1 - i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_rglru_train(params: Params, cfg: ModelConfig, x: jax.Array,
+                      *, init_state: jax.Array | None = None,
+                      return_state: bool = False,
+                      return_cache: bool = False):
+    """x: (B, L, d) -> (B, L, d) through the full recurrent block."""
+    xa_lin = x @ params["w_in_a"]
+    xa = _conv(xa_lin, params["conv_w"], params["conv_b"])
+    xb = jax.nn.gelu((x @ params["w_in_b"]).astype(jnp.float32))
+
+    log_a, bt = _gates(params, xa)                     # (B,L,w) f32
+    a = jnp.exp(log_a)
+    bt = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * bt
+
+    if init_state is not None:
+        # fold h_0 into the first step: b_1 += a_1 * h_0
+        bt = bt.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
+
+    y = (h * xb).astype(x.dtype)
+    out = y @ params["w_out"]
+    if return_cache:
+        W = cfg.hybrid.conv_width
+        L = x.shape[1]
+        if L >= W - 1:
+            conv_cache = xa_lin[:, L - (W - 1):]
+        else:
+            conv_cache = jnp.pad(xa_lin, ((0, 0), (W - 1 - L, 0), (0, 0)))
+        return out, {"state": h[:, -1],
+                     "conv": conv_cache.astype(cfg.dtype)}
+    if return_state:
+        return out, h[:, -1]                           # (B, w) f32
+    return out
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    w = _width(cfg)
+    cw = cfg.hybrid.conv_width
+    return {"state": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype)}
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int,
+                      dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    w = _width(cfg)
+    cw = cfg.hybrid.conv_width
+    return {"state": ParamSpec((batch, w), ("batch", "state"),
+                               dtype="float32", init="zeros"),
+            "conv": ParamSpec((batch, cw - 1, w), ("batch", None, "state"),
+                              dtype=dtype, init="zeros")}
+
+
+def apply_rglru_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                       cache: Dict[str, jax.Array]
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step. x: (B, 1, d)."""
+    xa_lin = x[:, 0] @ params["w_in_a"]                # (B, w)
+    # time-ordered buffer oldest..newest; flip taps to match _conv, which
+    # pairs w[0] with the current input.
+    conv_in = jnp.concatenate(
+        [cache["conv"], xa_lin[:, None].astype(cache["conv"].dtype)], axis=1)
+    wconv = params["conv_w"].astype(jnp.float32)[::-1]
+    xa = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), wconv) \
+        + params["conv_b"].astype(jnp.float32)
+    xb = jax.nn.gelu((x[:, 0] @ params["w_in_b"]).astype(jnp.float32))
+
+    log_a, bt = _gates(params, xa)
+    a = jnp.exp(log_a)
+    bt = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * bt
+    h = a * cache["state"] + bt
+
+    y = (h * xb).astype(x.dtype)
+    out = y @ params["w_out"]
+    return out[:, None], {"state": h, "conv": conv_in[:, 1:]}

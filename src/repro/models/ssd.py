@@ -1,0 +1,277 @@
+"""Mamba-2 block: State-Space Duality (SSD), chunked matmul form.
+
+Training/prefill run the chunked SSD algorithm (arXiv:2405.21060 §6):
+within a chunk the recurrence is expanded into attention-like matmuls
+(MXU-friendly); across chunks a short ``lax.scan`` carries the (H, P, N)
+state.  Decode is the pure recurrence — one state update per token, no
+attention, no KV cache.
+
+The paper's split technique is **inapplicable** here (attention-free;
+DESIGN.md §5): decode parallelism comes from sharding the (B, H) state
+grid over the mesh instead.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, rms_norm
+
+Params = Dict[str, jax.Array]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.state_dim
+    return d_inner, nheads, conv_dim
+
+
+def ssd_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+    return {
+        "in_proj": ParamSpec((d, d_in_proj), ("embed", "state")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), (None, "state"),
+                            fan_in=s.conv_width),
+        "conv_b": ParamSpec((conv_dim,), ("state",), init="zeros"),
+        "A_log": ParamSpec((nheads,), ("heads",), init="zeros"),
+        "D": ParamSpec((nheads,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((nheads,), ("heads",), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("state",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("state", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    gn = s.ngroups * s.state_dim
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along L. xbc: (B, L, C), w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(W):                        # static small loop (W = 4)
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) \
+            * w[W - 1 - i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum a[j+1..i]."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, L, H, P) — already dt-weighted NOT; raw
+    dt: jax.Array,       # (B, L, H) — post-softplus
+    A: jax.Array,        # (H,) negative
+    B_: jax.Array,       # (B, L, G, N)
+    C_: jax.Array,       # (B, L, G, N)
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,   # (B, H, P, N)
+    unroll_chunks: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert L % chunk == 0, f"pad L={L} to chunk={chunk}"
+    nc = L // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32).reshape(Bb, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, chunk, H)
+    Bf = B_.astype(jnp.float32).reshape(Bb, nc, chunk, G, N)
+    Cf = C_.astype(jnp.float32).reshape(Bb, nc, chunk, G, N)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bf, rep, axis=3)                   # (B,nc,q,H,N)
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    a = dtf * A[None, None, None, :]                   # (B,nc,q,H) log-decay
+    a = a.transpose(0, 3, 1, 2)                        # (B,H,nc,q)
+    a_cs = jnp.cumsum(a, axis=-1)
+
+    xdt = xf * dtf[..., None]                          # (B,nc,q,H,P)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(a))                         # (B,H,nc,q,q)
+    scores = jnp.einsum("bcqhn,bcshn->bhcqs", Ch, Bh)
+    y_diag = jnp.einsum("bhcqs,bhcqs,bcshp->bcqhp",
+                        scores, Lmat, xdt)
+
+    # 2. chunk states: decay each position to the end of its chunk
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)      # (B,H,nc,q)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", Bh, decay_states, xdt)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])               # (B,H,nc)
+    s0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                              # (B,H,P,N), (B,H)
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry                              # emit state *before*
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4),              # (nc,B,H,P,N)
+         chunk_decay.transpose(2, 0, 1)),              # (nc,B,H)
+        unroll=unroll_chunks)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4. state -> output within each chunk
+    state_decay_out = jnp.exp(a_cs)                    # (B,H,nc,q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp",
+                       Ch, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(Bb, L, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def _tail_rows(x: jax.Array, n: int) -> jax.Array:
+    """Last n rows along axis 1, zero-padded at the FRONT if L < n."""
+    L = x.shape[1]
+    if L >= n:
+        return x[:, L - n:]
+    return jnp.pad(x, ((0, 0), (n - L, 0), (0, 0)))
+
+
+def apply_ssd_train(params: Params, cfg: ModelConfig, x: jax.Array,
+                    *, init_state: jax.Array | None = None,
+                    return_state: bool = False,
+                    return_cache: bool = False):
+    """Full Mamba-2 block over (B, L, d). Returns y (or (y, state/cache))."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    gn = s.ngroups * s.state_dim
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_inner]
+    B_ = xbc[..., d_inner:d_inner + gn].reshape(*x.shape[:2], s.ngroups,
+                                                s.state_dim)
+    C_ = xbc[..., d_inner + gn:].reshape(*x.shape[:2], s.ngroups,
+                                         s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    L = x.shape[1]
+    chunk = min(s.chunk_size, L)
+    pad = (-L) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xh = xs.reshape(*xs.shape[:2], nheads, s.head_dim)
+    y, state = ssd_chunked(xh, dt, A, B_, C_, chunk=chunk,
+                           init_state=init_state,
+                           unroll_chunks=cfg.probe_unroll)
+    y = y[:, :L].reshape(x.shape[0], L, d_inner)
+    y = y + xs[:, :L] * params["D"].astype(jnp.float32).repeat(s.head_dim)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ params["out_proj"]
+    if return_cache:
+        conv_cache = _tail_rows(xbc_raw, s.conv_width - 1)
+        return out, {"state": state,
+                     "conv": conv_cache.astype(cfg.dtype)}
+    if return_state:
+        return out, state
+    return out
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                   ) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.state_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssd_cache_specs(cfg: ModelConfig, batch: int,
+                    dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "state": ParamSpec((batch, nheads, s.head_dim, s.state_dim),
+                           ("batch", "heads", "head_dim", None),
+                           dtype="float32", init="zeros"),
+        "conv": ParamSpec((batch, s.conv_width - 1, conv_dim),
+                          ("batch", None, "state"), dtype=dtype,
+                          init="zeros"),
+    }
+
+
+def apply_ssd_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Dict[str, jax.Array]
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token Mamba-2 step. x: (B, 1, d) -> (y (B,1,d), cache)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    gn = s.ngroups * s.state_dim
+
+    zxbcdt = x[:, 0] @ params["in_proj"]               # (B, ·)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    # rolling conv buffer: (B, W-1, conv_dim) holds the previous inputs.
+    # conv_in is time-ordered oldest..newest; _causal_conv pairs w[0] with
+    # the CURRENT input, so flip the taps here to match.
+    conv_in = jnp.concatenate(
+        [cache["conv"], xbc[:, None].astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(jnp.float32)[::-1]     # (W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), w)
+    xbc_c = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv = conv_in[:, 1:]
+
+    xs = xbc_c[..., :d_inner]
+    B_ = xbc_c[..., d_inner:d_inner + gn].reshape(-1, s.ngroups, s.state_dim)
+    C_ = xbc_c[..., d_inner + gn:].reshape(-1, s.ngroups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    rep = nheads // s.ngroups
+    Bh = jnp.repeat(B_, rep, axis=1)                   # (B,H,N)
+    Ch = jnp.repeat(C_, rep, axis=1)
+    xh = xs.reshape(-1, nheads, s.head_dim)            # (B,H,P)
+
+    decay = jnp.exp(dt * A[None, :])                   # (B,H)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(y.dtype)).astype(x.dtype)
+    return out[:, None], {"state": state, "conv": new_conv}

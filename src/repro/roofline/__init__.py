@@ -1,0 +1,10 @@
+"""Roofline: 3-term analysis from compiled dry-runs + probes."""
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    ICI_LINK_BW,
+    PEAK_FLOPS_BF16,
+    RooflineReport,
+    analyze,
+    model_flops_for,
+)
+from repro.roofline.hlo import collective_bytes, wire_bytes  # noqa: F401

@@ -1,0 +1,124 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Per (arch x shape x mesh) we derive, from the per-device SPMD program:
+
+    compute term    = device_FLOPs / peak_FLOP/s          (197 TF bf16, v5e)
+    memory term     = device_bytes / HBM_bw               (819 GB/s)
+    collective term = device_wire_bytes / link_bw         (~50 GB/s ICI)
+
+``cost_analysis()`` provides FLOPs and bytes-accessed of the per-device
+program; collective bytes come from the HLO parser.  The dominant term is
+the bottleneck the §Perf loop iterates on; ``MODEL_FLOPS / HLO_FLOPs``
+exposes remat/dispatch/replication waste (>1 means the compiled program
+does *less* than the analytic minimum suggests — usually fused away;
+<1 means redundant compute).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import is_spec, param_count
+from repro.roofline.hlo import collective_bytes, wire_bytes
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-device numbers
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    per_category: Dict[str, int]
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # usefulness
+    model_flops_global: float
+    hlo_flops_global: float
+    useful_ratio: float
+    # bookkeeping
+    step_kind: str = "train"
+    policy: Optional[str] = None
+    note: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def active_param_count(cfg: ModelConfig, specs) -> float:
+    """N (dense) or N_active (MoE: expert params scaled by top_k / E)."""
+    import jax
+    total = 0.0
+    for leaf, axes in _iter_specs(specs):
+        n = float(np.prod(leaf.shape))
+        if cfg.moe is not None and "experts" in axes:
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        total += n
+    return total
+
+
+def _iter_specs(specs):
+    import jax
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    for s in leaves:
+        yield s, s.axes
+
+
+def model_flops_for(cfg: ModelConfig, specs, *, tokens: int,
+                    step_kind: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D inference (N active)."""
+    n = active_param_count(cfg, specs)
+    mult = 6.0 if step_kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    model_flops: float,
+    step_kind: str,
+    policy: Optional[str] = None,
+    note: str = "",
+) -> RooflineReport:
+    dev_flops = float(cost.get("flops", 0.0))
+    dev_bytes = float(cost.get("bytes accessed", 0.0))
+    per_cat = collective_bytes(hlo_text)
+    dev_wire = float(wire_bytes(per_cat))
+
+    compute_s = dev_flops / PEAK_FLOPS_BF16
+    memory_s = dev_bytes / HBM_BW
+    collective_s = dev_wire / ICI_LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    hlo_global = dev_flops * chips
+    useful = model_flops / hlo_global if hlo_global > 0 else float("nan")
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        device_flops=dev_flops, device_bytes=dev_bytes,
+        device_collective_bytes=dev_wire, per_category=per_cat,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_global=model_flops,
+        hlo_flops_global=hlo_global, useful_ratio=useful,
+        step_kind=step_kind, policy=policy, note=note)

@@ -1,0 +1,70 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+``compiled.as_text()`` is the per-device program after GSPMD partitioning
+— every cross-chip transfer appears as an explicit collective op.  We sum
+result-shape bytes per collective category; ``cost_analysis`` does not
+report these, so this parser feeds the roofline's collective term.
+
+Wire-byte model (ring algorithms, documented approximation):
+    all-gather / reduce-scatter / all-to-all / collective-permute:
+        ~= result bytes (x (n-1)/n ~ 1)
+    all-reduce: ~= 2 x operand bytes (reduce-scatter + all-gather phases)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# shapes like  bf16[2,4096]{1,0}  or f32[] ; tuples are handled by findall
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an op line:  %name.123 = <shape or tuple> opcode(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\]{},\s]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-category result bytes (per device) of every collective op."""
+    out: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_text, opcode = m.group(1), m.group(2)
+        # async pairs: count the -start, skip the matching -done (same
+        # shape appears twice otherwise)
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start:hlo_text.find("\n", m.start())]
+        if f"{opcode}-done" in line:
+            continue
+        out[opcode] += _shape_bytes(shape_text)
+    return out
+
+
+def wire_bytes(per_category: Dict[str, int]) -> int:
+    """Modeled bytes on the wire per device (ring factors)."""
+    total = 0
+    for cat, b in per_category.items():
+        total += 2 * b if cat == "all-reduce" else b
+    return total

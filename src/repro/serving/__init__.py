@@ -1,0 +1,9 @@
+"""Serving: policy-driven batched decode (mesh-level split) + engine."""
+from repro.serving.decode_step import (  # noqa: F401
+    ServeStepBundle,
+    build_serve_step,
+    decode_workload,
+    mesh_split_decision,
+    serve_param_rules,
+)
+from repro.serving.engine import Completion, DecodeEngine, Request  # noqa: F401

@@ -1,0 +1,255 @@
+"""Serve-step builder: policy-driven, mesh-aware batched decode.
+
+This is the paper's insight lifted to TPU-pod scale.  At decode, the
+batch rides the data axes; the **model axis** is where starvation lives:
+
+- head-sharded KV (the fa3_baseline analogue): parallelism on the model
+  axis is ``H_KV`` — an MQA/MLA model leaves 15 of 16 chips idle (or
+  redundantly replicated), exactly the paper's "8 CTAs on 132 SMs".
+- sequence-sharded KV (the sequence-aware path): the cache's L dim is
+  sharded over the model axis, every chip computes a partial softmax
+  over its shard, and the LSE-combine algebra runs as an all-reduce —
+  identical math to the paper's split-KV, with chips in place of SMs.
+
+``build_serve_step`` asks the selected policy (fa3_baseline / paper /
+tpu_adaptive) whether to split, builds the cache shardings accordingly,
+and pins the split axis inside the decode ops via
+:class:`~repro.kernels.ops.DecodeContext`.  The decision is *per
+(arch, shape)* and entirely static — the A/B between policies compiles
+two different programs, which the dry-run + roofline compare.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ServeConfig, ShapeConfig
+from repro.core.split_policy import DecodeWorkload, choose_mesh_splits
+from repro.kernels import ops
+from repro.models.common import abstract_params
+from repro.models.registry import Model
+from repro.sharding.ctx import activation_mesh
+from repro.sharding.rules import (
+    ShardingRules,
+    cache_rules,
+    spec_for,
+    tree_shardings,
+)
+
+Pytree = Any
+
+
+def serve_param_rules() -> ShardingRules:
+    """Inference layout: TP on model, no FSDP (no per-step all-gathers).
+
+    Expert weights additionally spread over the data axes — big MoE
+    checkpoints (Qwen3-235B) exceed one chip's HBM under TP-16 alone.
+    """
+    return ShardingRules({
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "state": "model",
+        "experts": ("pod", "data", "model"),
+    })
+
+
+def effective_kv_heads(cfg: ModelConfig) -> int:
+    """H_KV as the decode workload sees it (MLA: one shared latent)."""
+    if cfg.mla is not None:
+        return 1
+    return cfg.num_kv_heads
+
+
+def decode_workload(cfg: ModelConfig, shape: ShapeConfig) -> DecodeWorkload:
+    lk = shape.seq_len
+    if cfg.family == "hybrid":
+        lk = min(cfg.hybrid.window, lk)
+    return DecodeWorkload(
+        batch=1,                              # per-replica view of the axis
+        seqlen_q=1,
+        seqlen_k=lk,
+        num_heads_q=cfg.num_heads,
+        num_heads_kv=effective_kv_heads(cfg),
+        head_dim=cfg.resolved_head_dim,
+    )
+
+
+def mesh_split_decision(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        policy: str) -> int:
+    """How many ways the model axis sequence-shards the KV cache (1 = off).
+
+    Two reasons to split: (a) the paper's occupancy policy says the model
+    axis is starved, or (b) *storage*: when H_KV doesn't divide the model
+    axis, head-sharding falls back to full replication (whisper kv=20 on
+    a 16-axis: 42 GiB/device of cache, measured) — sequence-sharding is
+    then strictly better regardless of the compute policy.
+    """
+    if cfg.family == "ssm":
+        return 1                              # attention-free (DESIGN.md §5)
+    model_ax = mesh.shape["model"]
+    kv = effective_kv_heads(cfg)
+    if kv % model_ax != 0:
+        return model_ax                       # storage-driven split (b)
+    w = decode_workload(cfg, shape)
+    s = choose_mesh_splits(w, model_ax, policy=policy)
+    # binary realization on a fixed mesh: any split -> whole-axis shard
+    # (fractional axis splits need sub-axes; recorded as future work)
+    return model_ax if s > 1 else 1
+
+
+@dataclass
+class ServeStepBundle:
+    model: Model
+    scfg: ServeConfig
+    mesh: Mesh
+    step: Callable                            # jitted
+    param_shardings: Pytree
+    cache_shardings: Pytree
+    max_len: int
+    mesh_splits: int                          # 1 = head-sharded path
+
+    def abstract_args(self):
+        aparams = abstract_params(self.model.param_specs())
+        B = self.scfg.shape.global_batch
+        acache = self.model.abstract_cache(B, self.max_len,
+                                           self.scfg.kv_cache_dtype)
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        t = jax.ShapeDtypeStruct((), jnp.int32)
+        return aparams, acache, tok, t
+
+
+def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
+                     ) -> ServeStepBundle:
+    cfg = model.cfg
+    B, L = scfg.shape.global_batch, scfg.shape.seq_len
+    model_ax = mesh.shape["model"]
+    # cache length padded so a whole-axis sequence shard divides evenly
+    max_len = -(-L // model_ax) * model_ax
+
+    splits = mesh_split_decision(cfg, scfg.shape, mesh, scfg.split_policy)
+    seq_split = splits > 1
+
+    prules = serve_param_rules()
+    aparams = abstract_params(model.param_specs())
+    pshard = tree_shardings(mesh, aparams, model.param_axes(), prules)
+
+    crules = cache_rules(seq_split)
+    acache = model.abstract_cache(B, max_len, scfg.kv_cache_dtype)
+    caxes = model.cache_axes(B, max_len, scfg.kv_cache_dtype)
+    cshard = tree_shardings(mesh, acache, caxes, crules)
+
+    tok_spec = spec_for((B,), ("batch",), crules, mesh)
+
+    def constraint(x):
+        # x: (S, B, C, H, D) split-KV tensors — pin S to the model axis
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*( ("model",) +
+                                        (None,) * (x.ndim - 1) ))))
+
+    use_fused = seq_split and scfg.decode_impl == "fused"
+    ctx = ops.DecodeContext(
+        policy=scfg.split_policy,
+        num_cores=model_ax,
+        min_splits=1 if use_fused else splits,
+        split_constraint=(None if use_fused else
+                          (constraint if seq_split else None)),
+        seq_shard_mesh=mesh if use_fused else None,
+        seq_shard_axis="model",
+    )
+
+    def step(params, caches, token, t):
+        with ops.decode_context(ctx), activation_mesh(mesh):
+            logits, caches = model.decode_step(
+                params, caches, token, t, policy=scfg.split_policy,
+                num_cores=model_ax)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, cshard,
+                      NamedSharding(mesh, tok_spec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, tok_spec), cshard),
+        donate_argnums=(1,),
+    )
+    return ServeStepBundle(model, scfg, mesh, jitted, pshard, cshard,
+                           max_len, splits)
+
+
+# ---------------------------------------------------------------------------
+# Prefill step (inference-prefill shapes)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefillStepBundle:
+    model: Model
+    scfg: ServeConfig
+    mesh: Mesh
+    step: Callable
+    param_shardings: Pytree
+    cache_shardings: Pytree
+    max_len: int
+    batch_shapes: Dict[str, jax.ShapeDtypeStruct]
+
+    def abstract_args(self):
+        aparams = abstract_params(self.model.param_specs())
+        return aparams, self.batch_shapes
+
+
+def build_prefill_step(model: Model, scfg: ServeConfig, mesh: Mesh
+                       ) -> PrefillStepBundle:
+    """Jitted prompt prefill: forward + decode-cache emission.
+
+    Inference layout (TP, no FSDP); caches come out sharded exactly as the
+    decode step consumes them, so prefill->decode needs no resharding.
+    """
+    from repro.training.train_step import batch_shardings as bshard_fn
+
+    cfg = model.cfg
+    B, L = scfg.shape.global_batch, scfg.shape.seq_len
+    model_ax = mesh.shape["model"]
+    max_len = -(-L // model_ax) * model_ax
+
+    splits = mesh_split_decision(cfg, scfg.shape, mesh, scfg.split_policy)
+    prules = serve_param_rules()
+    aparams = abstract_params(model.param_specs())
+    pshard = tree_shardings(mesh, aparams, model.param_axes(), prules)
+    crules = cache_rules(splits > 1)
+    acache = model.abstract_cache(B, max_len)
+    cshard = tree_shardings(mesh, acache, model.cache_axes(B, max_len),
+                            crules)
+
+    Lt = model.text_len(L)
+    bshapes: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((B, Lt), jnp.int32)}
+    for k, (shp, dt) in model.frontend_inputs(B, L).items():
+        bshapes[k] = jax.ShapeDtypeStruct(shp, jnp.dtype(dt))
+    bshard = bshard_fn(mesh, bshapes)
+
+    attn_ctx = (ops.AttnContext(seq_shard_mesh=mesh)
+                if cfg.num_heads % mesh.shape["model"] != 0
+                else ops.AttnContext())
+
+    def step(params, batch):
+        with activation_mesh(mesh), ops.attention_context(attn_ctx):
+            logits, caches = model.prefill(params, batch, max_len)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    tok_spec = spec_for((B,), ("batch",), crules, mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, bshard),
+        out_shardings=(NamedSharding(mesh, tok_spec), cshard),
+    )
+    return PrefillStepBundle(model, scfg, mesh, jitted, pshard, cshard,
+                             max_len, bshapes)

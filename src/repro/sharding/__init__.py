@@ -1,0 +1,10 @@
+"""Sharding: logical-axis rules -> NamedShardings over the production mesh."""
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules,
+    activation_rules,
+    cache_rules,
+    param_rules,
+    replicated,
+    spec_for,
+    tree_shardings,
+)

@@ -1,0 +1,144 @@
+"""Logical-axis -> mesh-axis rules, with divisibility-safe fallback.
+
+One place decides how every tensor in the system is laid out:
+
+- **Params**: FSDP + TP.  ``embed`` (the residual-stream dim, present in
+  every weight) shards over the data axes — fully-sharded parameters and
+  optimizer state, gathered per-layer inside the scan (GSPMD inserts the
+  all-gathers).  The "tensor" dims (``heads``/``ff``/``vocab``/``experts``/
+  ``state``) shard over the model axis — Megatron-style TP with expert
+  parallelism folded in.
+- **Activations**: ``batch`` over the data axes, ``heads``/``vocab`` over
+  model, residual dim replicated.
+- **KV caches**: ``batch`` over data; the *model-axis* placement is
+  decided per-workload by the paper's policy (sequence vs. head sharding
+  — see ``serving/decode_step.py``).
+
+A dim is sharded only if its size divides the axis size, and each mesh
+axis is used at most once per tensor (first dim in axis order wins) —
+otherwise the dim falls back to replicated.  This keeps every assigned
+architecture lowerable on the production mesh without per-arch rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes)."""
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def lookup(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        m = self.rules.get(logical)
+        if m is None:
+            return ()
+        return (m,) if isinstance(m, str) else tuple(m)
+
+
+def _axes_in_mesh(mesh: Mesh, axes: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+             rules: ShardingRules, mesh: Mesh) -> P:
+    """Divisibility- and conflict-safe PartitionSpec for one tensor."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        want = _axes_in_mesh(mesh, rules.lookup(name))
+        # drop axes already used by an earlier dim of this tensor
+        want = tuple(a for a in want if a not in used)
+        # greedy prefix that divides the dim size
+        chosen: Tuple[str, ...] = ()
+        size = 1
+        for a in want:
+            nsz = size * mesh.shape[a]
+            if dim % nsz == 0:
+                chosen += (a,)
+                size = nsz
+            else:
+                break
+        used.update(chosen)
+        if len(chosen) == 0:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, shapes: Pytree, logical: Pytree,
+                   rules: ShardingRules) -> Pytree:
+    """Pytree of NamedShardings. `shapes` leaves: ShapeDtypeStruct/arrays."""
+    def one(leaf, axes):
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape), axes, rules,
+                                            mesh))
+    # `logical` leaves are tuples — zip the two trees manually
+    flat_s, treedef = jax.tree_util.tree_flatten(shapes)
+    flat_a = treedef.flatten_up_to(logical)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, a) for s, a in zip(flat_s, flat_a)])
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets
+# ---------------------------------------------------------------------------
+
+
+def param_rules() -> ShardingRules:
+    return ShardingRules({
+        "embed": ("pod", "data"),          # FSDP
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "state": "model",
+        # layers / head_dim / seq: replicated
+    })
+
+
+def activation_rules() -> ShardingRules:
+    return ShardingRules({
+        "batch": ("pod", "data"),
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "state": "model",
+    })
+
+
+def cache_rules(seq_split: bool) -> ShardingRules:
+    """KV-cache rules; `seq_split` is the paper's mesh-level decision."""
+    base = {
+        "batch": ("pod", "data"),
+        "kv_heads": None if seq_split else "model",
+        "heads": "model",                  # ssm state heads
+        "state": "model",
+        "seq": "model" if seq_split else None,
+    }
+    return ShardingRules(base)
+
+
+def batch_spec(mesh: Mesh, batch_dim_first: bool = True) -> NamedSharding:
+    axes = _axes_in_mesh(mesh, ("pod", "data"))
+    return NamedSharding(mesh, P(axes if axes else None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, remat, microbatching, train step."""
+from repro.training.optimizer import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    lr_schedule,
+)
+from repro.training.train_step import (  # noqa: F401
+    TrainStepBundle,
+    build_train_step,
+    lm_loss,
+    make_batch_shapes,
+)

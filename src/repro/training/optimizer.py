@@ -1,0 +1,112 @@
+"""AdamW in pure JAX, spec-first like the models.
+
+Optimizer state mirrors the param tree (same logical axes, so the same
+sharding rules apply — fully-sharded optimizer state under FSDP).
+Moments are float32 regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+Pytree = Any
+
+
+def adamw_init(params: Pytree) -> Dict[str, Pytree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params: Pytree) -> Dict[str, Pytree]:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, abstract_params),
+        "v": jax.tree.map(f32, abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_state_axes(param_axes: Pytree) -> Dict[str, Pytree]:
+    ident = lambda a: a
+    copy = jax.tree.map(ident, param_axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return {"m": copy, "v": copy, "count": ()}
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Warmup then cosine/linear/constant decay; pure jnp (jit-safe)."""
+    stepf = step.astype(jnp.float32)
+    warm = jnp.maximum(1.0, float(cfg.warmup_steps))
+    warmup = stepf / warm
+    total = jnp.maximum(1.0, float(cfg.total_steps - cfg.warmup_steps))
+    t = jnp.clip((stepf - warm) / total, 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = jnp.ones(())
+    return cfg.lr * jnp.where(stepf < warm, warmup, decay)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: Pytree,
+    state: Dict[str, Pytree],
+    params: Pytree,
+    cfg: OptimizerConfig,
+) -> Tuple[Pytree, Dict[str, Pytree], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * gf
+        v_ = b2 * v + (1 - b2) * gf * gf
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m_, v_
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,35 @@
+"""Activation-checkpoint (remat) policies for the layer scan.
+
+The scan body (one superblock) is wrapped with ``jax.checkpoint`` under a
+named policy.  ``nothing_saveable`` (recompute everything from the layer
+boundary) is the production default at these batch sizes — the §Roofline
+``MODEL_FLOPS / HLO_FLOPs`` ratio surfaces its recompute cost explicitly,
+and the §Perf iteration trades it against memory.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+POLICIES = {
+    "none": None,                               # save everything
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def block_wrapper(policy: str) -> Optional[Callable]:
+    """-> wrapper for the scan body fn, or None for no remat."""
+    if policy not in POLICIES:
+        raise KeyError(f"unknown remat policy {policy!r}; "
+                       f"known: {sorted(POLICIES)}")
+    if policy == "none":
+        return None
+    pol = POLICIES[policy]
+
+    def wrap(fn):
+        return jax.checkpoint(fn, policy=pol)
+    return wrap

@@ -1,0 +1,217 @@
+"""Train-step builder: loss, microbatch accumulation, AdamW, pjit wiring.
+
+``build_train_step(model, tcfg, mesh)`` returns a bundle holding the
+jitted step function plus the abstract inputs / shardings the dry-run
+needs — lowering ``bundle.step`` with ``bundle.abstract_args()`` is
+exactly what ``launch/dryrun.py`` does for every (arch x shape x mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.common import abstract_params
+from repro.models.registry import Model
+from repro.sharding.ctx import activation_mesh
+from repro.sharding.rules import (
+    activation_rules,
+    param_rules,
+    spec_for,
+    tree_shardings,
+)
+from repro.training import remat as remat_mod
+from repro.training.optimizer import (
+    abstract_opt_state,
+    adamw_init,
+    adamw_update,
+)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(model: Model, params: Pytree, batch: Dict[str, jax.Array],
+            *, block_wrapper=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy over the label positions.
+
+    ``labels`` align with the LAST ``labels.shape[1]`` positions of the
+    logits (vlm: the text tail after the patch prefix).  ``label < 0``
+    masks a position out.
+    """
+    logits, aux = model.forward(params, batch, block_wrapper=block_wrapper)
+    labels = batch["labels"]
+    Lt = labels.shape[1]
+    lg = logits[:, -Lt:]                                  # (B, Lt, V) f32
+    # next-token shift: logits at i predict labels at i+1
+    lg = lg[:, :-1]
+    tgt = labels[:, 1:]
+    mask = (tgt >= 0).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)       # (B, Lt-1)
+    # label logit via one-hot contraction, NOT take_along_axis: a gather
+    # over the vocab-sharded logits makes GSPMD all-gather the full
+    # (B, L, V) tensor (~40 GiB/device at train_4k); the one-hot product
+    # reduces shard-locally and cross-shard sums are a tiny (B, L) psum.
+    onehot = jax.nn.one_hot(jnp.maximum(tgt, 0), lg.shape[-1],
+                            dtype=lg.dtype)
+    ll = jnp.sum(lg * onehot, axis=-1)
+    nll = (logz - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    aux_w = model.cfg.moe.aux_loss_weight if model.cfg.moe else 0.0
+    total = loss + aux_w * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "patches": ("batch", "seq", None),
+    "frames": ("batch", "seq", None),
+}
+
+
+def make_batch_shapes(model: Model, shape: ShapeConfig
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract train/prefill inputs for an (arch, shape) cell."""
+    B, L = shape.global_batch, shape.seq_len
+    Lt = model.text_len(L)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, Lt), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, Lt), jnp.int32),
+    }
+    for k, (shp, dt) in model.frontend_inputs(B, L).items():
+        out[k] = jax.ShapeDtypeStruct(shp, jnp.dtype(dt))
+    return out
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: Dict[str, jax.ShapeDtypeStruct]
+                    ) -> Dict[str, NamedSharding]:
+    rules = activation_rules()
+    out = {}
+    for k, s in batch_shapes.items():
+        axes = _BATCH_AXES[k]
+        # only the batch dim is sharded for inputs; seq stays whole
+        axes = tuple(a if a == "batch" else None for a in axes)
+        out[k] = NamedSharding(mesh, spec_for(tuple(s.shape), axes, rules,
+                                              mesh))
+    return out
+
+
+@dataclass
+class TrainStepBundle:
+    model: Model
+    tcfg: TrainConfig
+    mesh: Mesh
+    step: Callable                          # jitted
+    param_shardings: Pytree
+    opt_shardings: Pytree
+    batch_shapes: Dict[str, jax.ShapeDtypeStruct]
+    batch_shardings_: Dict[str, NamedSharding]
+
+    def abstract_args(self):
+        specs = self.model.param_specs()
+        aparams = abstract_params(specs)
+        aopt = abstract_opt_state(aparams)
+        return aparams, aopt, self.batch_shapes
+
+    def init(self, rng: jax.Array):
+        params = self.model.init_params(rng)
+        return params, adamw_init(params)
+
+
+def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
+                     ) -> TrainStepBundle:
+    cfg = model.cfg
+    rules = param_rules()
+    specs = model.param_specs()
+    aparams = abstract_params(specs)
+    paxes = model.param_axes()
+    pshard = tree_shardings(mesh, aparams, paxes, rules)
+    oshard = {
+        "m": pshard,
+        "v": pshard,
+        "count": NamedSharding(mesh, P()),
+    }
+    bshapes = make_batch_shapes(model, tcfg.shape)
+    bshard = batch_shardings(mesh, bshapes)
+    wrapper = remat_mod.block_wrapper(tcfg.remat_policy)
+    micro = max(1, tcfg.microbatches)
+
+    def loss_fn(params, batch):
+        return lm_loss(model, params, batch, block_wrapper=wrapper)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if micro == 1:
+            (total, metrics), grads = grad_fn(params, batch)
+            return total, metrics, grads
+
+        def split(x):
+            B = x.shape[0]
+            return x.reshape(micro, B // micro, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          params)
+        z = jnp.zeros((), jnp.float32)
+
+        def body(carry, mbatch):
+            gacc, tot, loss, aux, ntok = carry
+            (t, m), g = grad_fn(params, mbatch)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            return (gacc, tot + t, loss + m["loss"], aux + m["aux_loss"],
+                    ntok + m["tokens"]), None
+
+        (gacc, tot, loss, aux, ntok), _ = jax.lax.scan(
+            body, (g0, z, z, z, z), mb)
+        inv = 1.0 / micro
+        grads = jax.tree.map(lambda g, p: (g * inv).astype(p.dtype),
+                             gacc, params)
+        metrics = {"loss": loss * inv, "aux_loss": aux * inv,
+                   "tokens": ntok}
+        return tot * inv, metrics, grads
+
+    # sequence-parallel attention when heads can't shard the model axis
+    # (§Perf hillclimb A: head-replicated attention wastes axis-fold
+    # compute; query-sharding recovers it)
+    from repro.kernels import ops as _ops
+    attn_ctx = (_ops.AttnContext(seq_shard_mesh=mesh)
+                if cfg.num_heads % mesh.shape["model"] != 0
+                else _ops.AttnContext())
+
+    def step(params, opt_state, batch):
+        with activation_mesh(mesh), _ops.attention_context(attn_ctx):
+            total, metrics, grads = compute_grads(params, batch)
+            params, opt_state, opt_metrics = adamw_update(
+                grads, opt_state, params, tcfg.optimizer)
+        metrics = dict(metrics, total_loss=total, **opt_metrics)
+        return params, opt_state, metrics
+
+    metrics_shard = {k: NamedSharding(mesh, P()) for k in
+                     ("loss", "aux_loss", "tokens", "total_loss",
+                      "grad_norm", "lr")}
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, metrics_shard),
+        donate_argnums=(0, 1),
+    )
+    return TrainStepBundle(model, tcfg, mesh, jitted, pshard, oshard,
+                           bshapes, bshard)

@@ -1,0 +1,18 @@
+"""Shared pytest config.
+
+NOTE: no XLA_FLAGS here — the dry-run rules require tests to see ONE
+device; multi-device tests spawn subprocesses (test_multidevice.py).
+
+``jax.clear_caches()`` runs after every test module: a full-suite run
+compiles ~800 programs and jaxlib's in-process JIT dylib cache otherwise
+exhausts late in the run ("Failed to materialize symbols" INTERNAL
+errors from otherwise-green tests).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

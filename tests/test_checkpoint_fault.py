@@ -1,0 +1,151 @@
+"""Checkpointing (atomic/async/keep-k) + fault tolerance + elastic resume."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import OptimizerConfig, ShapeConfig, TrainConfig
+from repro.configs.reduced import reduced_config
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.fault.elastic import resumable_train_loop
+from repro.fault.watchdog import Heartbeat, StragglerDetector, Watchdog
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.training.train_step import build_train_step
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 3, t)
+    step, r = ckpt.restore(tmp_path, t)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_last_k(tmp_path):
+    for s in range(6):
+        ckpt.save(tmp_path, s, _tree(), keep=2)
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_crashed_tmp_dir_ignored(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    # simulate a crashed mid-write checkpoint
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert ckpt.latest_step(tmp_path) == 1
+    step, _ = ckpt.restore(tmp_path, _tree())
+    assert step == 1
+
+
+def test_async_checkpointer(tmp_path):
+    w = ckpt.AsyncCheckpointer(tmp_path, keep=3)
+    for s in range(3):
+        w.save(s, _tree())
+    w.wait()
+    assert ckpt.latest_step(tmp_path) == 2
+
+
+def test_restore_dtype_cast(tmp_path):
+    """Restore recasts to the target tree's dtypes (elastic config drift)."""
+    ckpt.save(tmp_path, 0, {"w": jnp.ones((3,), jnp.float32)})
+    _, r = ckpt.restore(tmp_path, {"w": jnp.zeros((3,), jnp.bfloat16)})
+    assert r["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# watchdog / straggler
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_detects_stale_heartbeat():
+    now = [0.0]
+    clock = lambda: now[0]
+    dead = []
+    wd = Watchdog(timeout_s=5.0, on_dead=dead.append, clock=clock)
+    hbs = [Heartbeat(f"w{i}", clock) for i in range(3)]
+    for hb in hbs:
+        wd.register(hb)
+    now[0] = 4.0
+    hbs[0].beat()
+    hbs[1].beat()              # w2 never beats
+    now[0] = 6.0
+    assert wd.check_once() == ["w2"]
+    assert dead == ["w2"]
+    now[0] = 20.0              # everyone stale now; w2 not re-reported
+    assert sorted(wd.check_once()) == ["w0", "w1"]
+
+
+def test_straggler_detector():
+    det = StragglerDetector(window=16, threshold=2.0, min_samples=4)
+    for step in range(8):
+        for w in range(4):
+            det.record(f"w{w}", 0.1)
+        det.record("w_slow", 0.5)
+    assert det.stragglers() == ["w_slow"]
+    assert "w0" not in det.stragglers()
+
+
+# ---------------------------------------------------------------------------
+# elastic resume: crash mid-run, resume, bit-identical final state
+# ---------------------------------------------------------------------------
+
+
+def _mk_bundle(model_axis=1):
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    mesh = make_host_mesh(model_axis)
+    shape = ShapeConfig("t", 16, 4, "train")
+    tcfg = TrainConfig(model=cfg, shape=shape,
+                       optimizer=OptimizerConfig(warmup_steps=2,
+                                                 total_steps=30))
+    return build_train_step(model, tcfg, mesh), cfg
+
+
+def test_crash_resume_matches_uninterrupted(tmp_path):
+    bundle, cfg = _mk_bundle()
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 4, seed=5))
+    quiet = lambda s: None
+
+    # uninterrupted reference
+    ref = resumable_train_loop(
+        bundle, data, total_steps=12, ckpt_dir=str(tmp_path / "ref"),
+        ckpt_every=4, async_ckpt=False, log_fn=quiet)
+
+    # crash at step 7, then resume (restores step 8 from ckpt at 7)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        resumable_train_loop(
+            bundle, data, total_steps=12, ckpt_dir=str(tmp_path / "cr"),
+            ckpt_every=4, async_ckpt=False, fail_at_step=7, log_fn=quiet)
+    out = resumable_train_loop(
+        bundle, data, total_steps=12, ckpt_dir=str(tmp_path / "cr"),
+        ckpt_every=4, async_ckpt=False, log_fn=quiet)
+    assert out["loss"] == pytest.approx(ref["loss"], rel=1e-5)
+
+
+def test_data_pipeline_deterministic_and_host_sharded():
+    d1 = SyntheticLM(DataConfig(64, 8, 4, seed=1))
+    d2 = SyntheticLM(DataConfig(64, 8, 4, seed=1))
+    np.testing.assert_array_equal(d1.batch_at(5)["tokens"],
+                                  d2.batch_at(5)["tokens"])
+    assert not np.array_equal(d1.batch_at(5)["tokens"],
+                              d1.batch_at(6)["tokens"])
+    # host sharding partitions the batch
+    h0 = SyntheticLM(DataConfig(64, 8, 4, seed=1, num_hosts=2, host_id=0))
+    h1 = SyntheticLM(DataConfig(64, 8, 4, seed=1, num_hosts=2, host_id=1))
+    b0, b1 = h0.batch_at(3)["tokens"], h1.batch_at(3)["tokens"]
+    assert b0.shape == (2, 8) and b1.shape == (2, 8)
+    assert not np.array_equal(b0, b1)

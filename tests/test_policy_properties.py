@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on the scheduling invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.occupancy import (
+    H100_SXM,
+    TPU_V5E,
+    modeled_latency_us,
+    occupancy_fraction,
+)
+from repro.core.scheduler_metadata import bucket_seqlen, get_scheduler_metadata
+from repro.core.split_policy import (
+    DecodeWorkload,
+    choose_mesh_splits,
+    choose_num_splits,
+    fa3_baseline,
+    paper_policy,
+    tpu_adaptive,
+)
+
+workloads = st.builds(
+    DecodeWorkload,
+    batch=st.integers(1, 64),
+    seqlen_q=st.just(1),
+    seqlen_k=st.integers(1, 65536),
+    num_heads_q=st.sampled_from([8, 16, 20, 32, 40, 64]),
+    num_heads_kv=st.sampled_from([1, 2, 4, 8, 20, 32]),
+    head_dim=st.sampled_from([64, 128, 256]),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(w=workloads, policy=st.sampled_from(["fa3_baseline", "paper",
+                                            "tpu_adaptive"]))
+def test_split_count_always_valid(w, policy):
+    s = choose_num_splits(w, policy=policy)
+    assert 1 <= s <= max(1, w.num_n_blocks)
+
+
+@settings(max_examples=60, deadline=None)
+@given(w=workloads, cores=st.sampled_from([4, 8, 16, 132]))
+def test_adaptive_never_regresses_modeled_latency(w, cores):
+    """tpu_adaptive <= fa3_baseline on the cost model, ALWAYS (its
+    argmin includes the baseline's choice)."""
+    s_base = fa3_baseline(w, num_cores=cores)
+    s_ada = tpu_adaptive(w, num_cores=cores)
+    t_base = modeled_latency_us(w, s_base, num_cores=cores)
+    t_ada = modeled_latency_us(w, s_ada, num_cores=cores)
+    assert t_ada <= t_base * 1.0000001
+
+
+@settings(max_examples=60, deadline=None)
+@given(w=workloads)
+def test_paper_only_deviates_in_boundary_bucket(w):
+    p, b = paper_policy(w), fa3_baseline(w)
+    if p != b:
+        assert w.num_n_blocks == 4 and w.total_mblocks < 4 and p == 3
+
+
+@settings(max_examples=40, deadline=None)
+@given(w=workloads, s=st.integers(1, 64))
+def test_occupancy_monotone_in_splits(w, s):
+    """More splits never DECREASE occupancy (they add tiles)."""
+    o1 = occupancy_fraction(w, s)
+    o2 = occupancy_fraction(w, s + 1)
+    assert o2 >= o1 - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(w=workloads, chips=st.sampled_from([2, 4, 8, 16, 32]),
+       policy=st.sampled_from(["paper", "tpu_adaptive"]))
+def test_mesh_splits_divide_axis(w, chips, policy):
+    s = choose_mesh_splits(w, chips, policy=policy)
+    assert chips % s == 0 and s >= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(lk=st.integers(1, 100000))
+def test_bucketing_is_policy_lossless(lk):
+    """Quantizing L_K to the KV block never changes the decision."""
+    w1 = DecodeWorkload(1, 1, lk, 64, 1)
+    w2 = DecodeWorkload(1, 1, bucket_seqlen(lk), 64, 1)
+    for pol in ("fa3_baseline", "paper", "tpu_adaptive"):
+        assert choose_num_splits(w1, policy=pol) == \
+            choose_num_splits(w2, policy=pol)
+
+
+def test_metadata_caching_and_override():
+    m1 = get_scheduler_metadata(1, 1, 512, 64, 1)
+    m2 = get_scheduler_metadata(1, 1, 512, 64, 1)
+    assert m1 is m2                       # lru cache hit
+    assert m1.num_splits == 3             # paper boundary override
+    forced = get_scheduler_metadata(1, 1, 512, 64, 1,
+                                    num_splits_override=16)
+    assert forced.num_splits == 4         # clamped to nblk
+
+
+def test_modeled_u_curve_shape():
+    """Fig. 3 structure: under-split slow, plateau past the knee."""
+    w = DecodeWorkload(1, 1, 512, 64, 1)
+    t1 = modeled_latency_us(w, 1, hw=H100_SXM, num_cores=132)
+    t3 = modeled_latency_us(w, 3, hw=H100_SXM, num_cores=132)
+    t16 = modeled_latency_us(w, 4, hw=H100_SXM, num_cores=132)
+    assert t3 < t1                        # splitting wins at the boundary
+    assert abs(t16 - t3) / t3 < 0.35      # broad plateau, no cliff

@@ -1,0 +1,90 @@
+"""Sharding rules: divisibility fallback, conflicts, per-device bytes."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.models.common import ParamSpec, abstract_params, logical_axes
+from repro.sharding.rules import (
+    ShardingRules,
+    activation_rules,
+    cache_rules,
+    param_rules,
+    spec_for,
+    tree_shardings,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape dict (spec_for needs no more)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_tp_fsdp_spec():
+    s = spec_for((4096, 11008), ("embed", "ff"), param_rules(), MESH)
+    assert s == P("data", "model")
+
+
+def test_divisibility_fallback_replicates():
+    # 20 kv heads on a 16-way axis: cannot shard -> None
+    s = spec_for((1280, 20, 64), ("embed", "kv_heads", "head_dim"),
+                 param_rules(), MESH)
+    assert s == P("data",)          # trailing Nones trimmed
+
+
+def test_conflict_first_dim_wins():
+    # experts and ff both want "model": experts (dim 0) wins
+    s = spec_for((128, 4096, 1536), ("experts", "embed", "ff"),
+                 param_rules(), MESH)
+    assert s == P("model", "data")
+
+
+def test_multi_axis_prefix():
+    # embed -> ("pod", "data"): 4096 divides 2 and 2*16
+    s = spec_for((4096, 100), ("embed", None), param_rules(), POD)
+    assert s == P(("pod", "data"))
+
+
+def test_multi_axis_partial_prefix():
+    # dim 6 divides pod (2) but not pod*data (32): greedy prefix stops
+    s = spec_for((6, 100), ("embed", None), param_rules(), POD)
+    assert s == P("pod")
+
+
+def test_batch_one_replicates():
+    s = spec_for((1, 2048), ("batch", None), activation_rules(), MESH)
+    assert s == P()
+
+
+def test_cache_rules_seq_split_toggle():
+    on = cache_rules(True)
+    off = cache_rules(False)
+    shape = (128, 32768, 32, 128)     # 32 kv heads divide the axis
+    axes = ("batch", "seq", "kv_heads", "head_dim")
+    assert spec_for(shape, axes, on, MESH) == P("data", "model")
+    assert spec_for(shape, axes, off, MESH) == P("data", None, "model")
+    # kv heads that DON'T divide the axis fall back to replicated — the
+    # serving builder then forces the storage-driven sequence split
+    assert spec_for((128, 32768, 20, 128), axes, off, MESH) == P("data",)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen3-moe-235b-a22b",
+                                  "whisper-large-v3", "mamba2-780m"])
+def test_tree_shardings_cover_all_params(arch):
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    model = build_model(get_arch(arch))
+    ap = abstract_params(model.param_specs())
+    sh = tree_shardings(mesh, ap, model.param_axes(), param_rules())
+    n_p = len(jax.tree.leaves(ap))
+    n_s = len(jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec")))
+    assert n_p == n_s

@@ -1,0 +1,125 @@
+"""The paper's policy, bit-exact against Fig. 2 + Table 1 + §5.3."""
+import math
+
+import pytest
+
+from repro.core.split_policy import (
+    KV_BLOCK,
+    DecodeWorkload,
+    choose_mesh_splits,
+    choose_num_splits,
+    fa3_baseline,
+    paper_policy,
+    tpu_adaptive,
+)
+
+
+def w(batch=1, lk=512, hq=64, hkv=1, lq=1, d=128):
+    return DecodeWorkload(batch, lq, lk, hq, hkv, d)
+
+
+class TestPaperFig2:
+    """The C++ policy decision table, literally (paper Fig. 2)."""
+
+    @pytest.mark.parametrize("lk", [1, 128, 256, 384])
+    @pytest.mark.parametrize("hkv", [1, 2, 4, 8, 32])
+    def test_guard1_short_contexts_unchanged(self, lk, hkv):
+        # nblk <= 3 -> s = 1 no matter how starved
+        assert paper_policy(w(lk=lk, hkv=hkv)) == 1
+
+    @pytest.mark.parametrize("batch,hkv", [(1, 4), (1, 8), (2, 2),
+                                           (4, 1), (8, 8), (2, 32)])
+    def test_guard2_saturated_boundary_unchanged(self, batch, hkv):
+        # nblk = 4 with tiles >= 4 -> s = 1
+        wl = w(batch=batch, lk=512, hkv=hkv)
+        assert wl.num_n_blocks == 4 and wl.total_mblocks >= 4
+        assert paper_policy(wl) == 1
+
+    @pytest.mark.parametrize("batch,hkv", [(1, 1), (1, 2)])
+    def test_low_tile_boundary_override_s3(self, batch, hkv):
+        # nblk = 4 and tiles < 4 -> s = 3 (the paper's single override)
+        wl = w(batch=batch, lk=512, hkv=hkv)
+        assert wl.num_n_blocks == 4 and wl.total_mblocks < 4
+        assert paper_policy(wl) == 3
+
+    def test_longer_contexts_fall_through_to_efficiency_loop(self):
+        # nblk > 4: identical to the baseline's efficiency loop
+        for lk in (640, 1024, 2048, 4096, 8192):
+            for hkv in (1, 2, 8):
+                wl = w(lk=lk, hkv=hkv)
+                assert paper_policy(wl) == fa3_baseline(wl)
+
+
+class TestBaselineFlaw:
+    def test_static_guard_ignores_tiles(self):
+        # the flaw: baseline returns 1 for L_K <= 512 even fully starved
+        assert fa3_baseline(w(lk=512, hkv=1)) == 1
+        assert fa3_baseline(w(lk=512, hkv=2)) == 1
+
+    def test_nblk_math(self):
+        assert w(lk=512).num_n_blocks == 512 // KV_BLOCK == 4
+        assert w(lk=513).num_n_blocks == 5
+        assert w(lk=1).num_n_blocks == 1
+
+
+class TestTable1:
+    """Paper Table 1: which (L_K, H_KV) cells change under the patch."""
+
+    @pytest.mark.parametrize("lk", [128, 256, 384, 2048, 4096])
+    @pytest.mark.parametrize("hkv", [1, 2, 8])
+    def test_unchanged_rows(self, lk, hkv):
+        assert paper_policy(w(lk=lk, hkv=hkv)) == \
+            fa3_baseline(w(lk=lk, hkv=hkv))
+
+    @pytest.mark.parametrize("hkv,expect", [(1, 3), (2, 3), (8, 1)])
+    def test_512_rows(self, hkv, expect):
+        assert paper_policy(w(lk=512, hkv=hkv)) == expect
+        assert fa3_baseline(w(lk=512, hkv=hkv)) == 1
+
+
+class TestSafetySweep:
+    """§5.3: the paper's 160-config regression matrix, on the policy."""
+
+    def test_no_policy_regression_vs_baseline(self):
+        # the patched policy only ever *adds* splits in the starved
+        # boundary bucket; everywhere else it equals the baseline
+        for batch in (1, 2, 4, 8):
+            for lk in (128, 256, 384, 512, 1024, 2048, 4096, 8192):
+                for hkv in (1, 2, 4, 8, 32):
+                    wl = w(batch=batch, lk=lk, hkv=hkv)
+                    p, b = paper_policy(wl), fa3_baseline(wl)
+                    if p != b:
+                        assert wl.num_n_blocks == 4
+                        assert wl.total_mblocks < 4
+                        assert p == 3
+
+
+class TestAdaptive:
+    def test_splits_when_starved(self):
+        s = tpu_adaptive(w(lk=4096, hkv=1), num_cores=16)
+        assert s > 1
+
+    def test_never_splits_when_saturated(self):
+        s = tpu_adaptive(w(batch=8, lk=512, hkv=8), num_cores=8)
+        assert s == 1
+
+    def test_bounded_by_nblk(self):
+        for lk in (128, 256, 512, 4096):
+            wl = w(lk=lk, hkv=1)
+            s = choose_num_splits(wl, policy="tpu_adaptive", num_cores=64)
+            assert 1 <= s <= wl.num_n_blocks
+
+
+class TestMeshSplits:
+    def test_divides_axis(self):
+        for chips in (4, 8, 16, 32):
+            for hkv in (1, 2, 8, 20):
+                s = choose_mesh_splits(w(lk=32768, hkv=hkv), chips)
+                assert chips % s == 0
+
+    def test_mqa_splits_full_axis_long_context(self):
+        assert choose_mesh_splits(w(lk=32768, hkv=1), 16,
+                                  policy="tpu_adaptive") > 1
+
+    def test_saturated_heads_no_split(self):
+        assert choose_mesh_splits(w(batch=16, lk=512, hkv=32), 16) == 1
