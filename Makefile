@@ -1,0 +1,21 @@
+# Test tiers (markers registered in pytest.ini):
+#   make verify      fast tier, < 120 s — everything not marked slow/multidevice
+#   make verify-all  the full tier-1 suite (what the roadmap's verify line runs)
+#   make bench       every benchmark (one per paper table/figure + serving A/B)
+
+PY := PYTHONPATH=src python
+
+.PHONY: verify verify-all bench golden
+
+verify:
+	$(PY) -m pytest -q -m "not multidevice and not slow"
+
+verify-all:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+# regenerate the policy decision golden table (commit the diff!)
+golden:
+	$(PY) tests/test_policy_golden.py --regen

@@ -1,0 +1,91 @@
+"""Metadata-enabled vs internal-heuristic serving path (paper §5 A/B).
+
+Drives the REAL ``DecodeEngine`` end-to-end on the paper's low-head-count
+regime (MQA reduced model, B=1 slot, prompts crossing the L_K = 512
+boundary bucket) under each split policy, twice:
+
+- ``metadata`` — plan cache on: one frozen ``SchedulerMetadata`` per
+  cache-length bucket, jitted step specialized per plan, policy runs
+  zero times inside the traced program.
+- ``heuristic`` — plan cache off: one generic step, policy re-evaluated
+  at trace time on the padded cache length (the upstream default the
+  paper improves on).
+
+Reports steps/s plus the plan-cache counters and the in-dispatch
+policy-evaluation count, so the A/B doubles as a living proof that the
+metadata path is exercised (benchmarks/tests assert the same counters).
+On this CPU container the wall-clock delta is noise; the *structural*
+columns (plans, splits frozen per bucket, policy evals = 0) are the
+reproducible claim.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.core.scheduler_metadata import metadata_cache_info
+from repro.kernels import ops
+from repro.models import build_model
+from repro.serving.engine import DecodeEngine, Request
+
+from benchmarks.common import print_table, write_csv
+
+MAX_LEN = 512
+PROMPT_LEN = 400            # crosses the 128/256/384/512 buckets
+NEW_TOKENS = 16
+
+
+def _requests():
+    prompt = [1 + (i * 7) % 250 for i in range(PROMPT_LEN)]
+    return [Request(0, list(prompt), max_new_tokens=NEW_TOKENS)]
+
+
+def run_cell(model, params, policy: str, use_metadata: bool) -> list:
+    scfg = ServeConfig(model=model.cfg, split_policy=policy,
+                       use_scheduler_metadata=use_metadata)
+    eng = DecodeEngine(model, scfg, max_len=MAX_LEN, batch_slots=1)
+    eng.load(params)
+    ops.reset_policy_eval_count()
+    t0 = time.time()
+    out = eng.generate(_requests())
+    dt = time.time() - t0
+    steps = sum(c.steps for c in out)
+    st = eng.stats
+    plans = eng.planned_splits()
+    return [policy, "metadata" if use_metadata else "heuristic",
+            steps, round(steps / dt, 1), st.misses, st.hits,
+            ops.policy_eval_count(),
+            ";".join(f"{lk}:{s}" for lk, s in sorted(plans.items()))]
+
+
+def main() -> None:
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    assert cfg.num_kv_heads == 1, "A/B needs the MQA low-head-count shape"
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    header = ["policy", "path", "steps", "steps_per_s", "plan_misses",
+              "plan_hits", "policy_evals_in_dispatch",
+              "frozen_splits_per_bucket"]
+    rows = []
+    for policy in ("fa3_baseline", "paper", "tpu_adaptive"):
+        for use_md in (True, False):
+            rows.append(run_cell(model, params, policy, use_md))
+    print_table(header, rows, "metadata-enabled vs internal-heuristic "
+                              "decode path (engine end-to-end)")
+    write_csv("metadata_ab", header, rows)
+
+    md_rows = [r for r in rows if r[1] == "metadata"]
+    assert all(r[6] == 0 for r in md_rows), "policy ran inside a plan step"
+    assert any("512:3" in r[7] for r in md_rows), \
+        "paper policy should freeze 3 splits for the 512 bucket"
+    print("\nmetadata path: policy evals in dispatch = 0 across all "
+          "policies; paper freezes 512->3 splits (boundary override)")
+    print(f"process-wide metadata cache: {metadata_cache_info()}")
+
+
+if __name__ == "__main__":
+    main()

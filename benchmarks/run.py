@@ -10,6 +10,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        metadata_ab,
         regression_sweep,
         roofline_report,
         table1_ab,
@@ -22,6 +23,7 @@ def main() -> None:
         ("regression_sweep (paper §5.3, 160 configs)",
          regression_sweep.main),
         ("roofline_report (§Roofline)", roofline_report.main),
+        ("metadata_ab (paper §5 serving path)", metadata_ab.main),
     ]
     failures = 0
     for name, fn in jobs:

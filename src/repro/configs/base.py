@@ -216,7 +216,19 @@ class ServeConfig:
     mesh: MeshConfig = SINGLE_POD
     shape: ShapeConfig = DECODE_32K
     split_policy: str = "paper"        # fa3_baseline | paper | tpu_adaptive
+    # metadata-enabled path (paper §5): precompute one SchedulerMetadata
+    # plan per (batch, cache-length bucket) and launch the decode step
+    # specialized on it.  False = the paper's weaker "internal heuristic"
+    # path (policy re-evaluated at trace time inside the step).
     use_scheduler_metadata: bool = True
+    # cache-length bucket width for plan lookup.  The policy's decision
+    # only depends on ceil(L_K / KV_BLOCK), so any multiple of KV_BLOCK
+    # (128) is decision-lossless; wider buckets = fewer specializations.
+    seqlen_bucket: int = 128
+    # max resident (plan, jitted step) specializations; oldest evicted
+    # first.  0/None = unbounded (decode lengths are already bucketed,
+    # so the population is max_len / seqlen_bucket at worst).
+    plan_cache_capacity: Optional[int] = None
     # mesh-level split realization: "fused" = shard_map cache-write +
     # partial softmax + psum LSE combine (production default);
     # "auto" = GSPMD-auto partitioning of the functional update+attention

@@ -11,6 +11,7 @@ from repro.core.scheduler_metadata import (  # noqa: F401
     SchedulerMetadata,
     bucket_seqlen,
     get_scheduler_metadata,
+    metadata_cache_info,
 )
 from repro.core.split_policy import (  # noqa: F401
     DEFAULT_NUM_CORES,

@@ -67,6 +67,11 @@ def get_scheduler_metadata(
     return SchedulerMetadata(w, s, pack_gqa, policy, num_cores)
 
 
+def metadata_cache_info():
+    """Hit/miss counters of the process-wide metadata cache (observability)."""
+    return get_scheduler_metadata.cache_info()
+
+
 def bucket_seqlen(seqlen_k: int, bucket: int = 128) -> int:
     """Round a cache length up to its block bucket so metadata cache hits.
 

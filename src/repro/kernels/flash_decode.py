@@ -29,7 +29,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.compat import tpu_compiler_params
 
 from repro.kernels.ref import NEG_INF
 
@@ -161,7 +163,7 @@ def flash_decode_partials(
             jax.ShapeDtypeStruct((B, Hkv, S, G, STATS_LANES), jnp.float32),
             jax.ShapeDtypeStruct((B, Hkv, S, G, STATS_LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -19,7 +19,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.compat import tpu_compiler_params
 
 from repro.kernels.ref import NEG_INF
 
@@ -146,7 +148,7 @@ def flash_prefill(
             pltpu.VMEM((block_q, STATS_LANES), jnp.float32),
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -51,9 +51,16 @@ class DecodeContext:
     (B, H, D)-sized LSE partials cross the wire (a psum) — vs the
     GSPMD-auto path, which re-gathers the whole cache around the scatter
     (~536 MB/layer at decode_32k; measured in EXPERIMENTS.md §Perf).
+
+    ``metadata`` is the FROZEN launch plan (paper's metadata-enabled
+    path): when set, every decode-attention op traced under this context
+    launches from it and the policy is evaluated zero times inside the
+    step — the serve-step builder / engine computed the plan once per
+    (batch, length-bucket) outside the hot loop.
     """
     policy: str = "paper"
     num_cores: Optional[int] = None
+    metadata: Optional[SchedulerMetadata] = None
     min_splits: int = 1
     # applied to the (S, B, C, H, D) split-KV tensors and (S, ...) partials
     split_constraint: Optional[Callable[[jax.Array], jax.Array]] = None
@@ -76,6 +83,22 @@ def decode_context(ctx: DecodeContext):
 
 def current_decode_context() -> DecodeContext:
     return _CTX[-1]
+
+
+# How many times the split policy ran INSIDE a decode-attention dispatch
+# (the paper's weaker "internal heuristic path").  Happens at trace time
+# only — num_splits is static — so a jitted metadata-enabled step must
+# leave this untouched; tests and benchmarks assert exactly that.
+_POLICY_EVALS: int = 0
+
+
+def policy_eval_count() -> int:
+    return _POLICY_EVALS
+
+
+def reset_policy_eval_count() -> None:
+    global _POLICY_EVALS
+    _POLICY_EVALS = 0
 
 
 @dataclass(frozen=True)
@@ -184,6 +207,7 @@ def decode_attention(
     kv_len: jax.Array,       # (B,) int32 valid lengths
     *,
     metadata: Optional[SchedulerMetadata] = None,
+    use_ctx_metadata: bool = True,
     policy: str = "paper",
     num_cores: Optional[int] = None,
     impl: str = "xla",
@@ -205,7 +229,13 @@ def decode_attention(
     ctx = current_decode_context()
     B, Hq, D = q.shape
     _, Lk, Hkv, _ = k.shape
+    if metadata is None and use_ctx_metadata:
+        # ``use_ctx_metadata=False`` opts a differently-shaped launch
+        # (e.g. encdec cross-attention) out of the context's frozen plan
+        metadata = ctx.metadata
     if metadata is None:
+        global _POLICY_EVALS
+        _POLICY_EVALS += 1
         cores = ctx.num_cores if ctx.num_cores is not None else num_cores
         pol = ctx.policy if ctx.num_cores is not None else policy
         kwargs = {} if cores is None else {"num_cores": cores}
@@ -239,6 +269,8 @@ def decode_attention_update(
     *,
     v_width: Optional[int] = None,  # MLA: v = k[..., :v_width]
     scale: Optional[float] = None,
+    metadata: Optional[SchedulerMetadata] = None,
+    use_ctx_metadata: bool = True,
     policy: str = "paper",
     num_cores: Optional[int] = None,
     quant: Optional[dict] = None,   # int8 cache: {"k_s","v_s","k_ns","v_ns"}
@@ -281,10 +313,14 @@ def decode_attention_update(
         kf = dequantize_kv(cache_k, k_s)
         vf = dequantize_kv(cache_v, v_s)
         out = decode_attention(q, kf, vf, kv_len, scale=scale,
+                               metadata=metadata,
+                               use_ctx_metadata=use_ctx_metadata,
                                policy=policy, num_cores=num_cores)
         return out, cache_k, cache_v, k_s, v_s
     v_used = cache_v if cache_v is not None else cache_k[..., :v_width]
     out = decode_attention(q, cache_k, v_used, kv_len, scale=scale,
+                           metadata=metadata,
+                           use_ctx_metadata=use_ctx_metadata,
                            policy=policy, num_cores=num_cores)
     return out, cache_k, cache_v
 

@@ -8,23 +8,21 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = one v5e pod (256 chips); 2x16x16 = two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     """Mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
     data = n // model_axis
-    return jax.make_mesh(
-        (data, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_axis), ("data", "model"))
 
 
 def mesh_name(mesh: jax.sharding.Mesh) -> str:

@@ -179,10 +179,12 @@ def cross_attention_decode(
         q = q + params["bq"].astype(q.dtype)
     Lk = cross_cache["k"].shape[1]
     kv_len = jnp.full((B,), Lk, jnp.int32)
+    # encoder length != decoder cache length: an ambient DecodeContext
+    # plan was frozen for the SELF-attention shape and must not apply
     out = ops.decode_attention(
         q[:, 0], cross_cache["k"], cross_cache["v"], kv_len,
-        metadata=metadata, policy=policy, num_cores=num_cores,
-        impl=impl or cfg.attention_impl)
+        metadata=metadata, use_ctx_metadata=False, policy=policy,
+        num_cores=num_cores, impl=impl or cfg.attention_impl)
     return jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
 
 
@@ -272,6 +274,13 @@ def attention_decode(
     positions = tv[:, None]
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     cache_len = cache["k"].shape[1]
+    # windowed layers attend over the ring cache — a different L_K than
+    # the full-cache shape any frozen plan (explicit or ambient
+    # DecodeContext) describes, so both are dropped here rather than
+    # trusting every call site to know that
+    use_ctx_md = window is None
+    if window is not None:
+        metadata = None
     if window is not None:
         # local attention: ring-buffer cache sized to the window.  RoPE is
         # applied at absolute positions before the write, so slot order is
@@ -285,13 +294,14 @@ def attention_decode(
         cache = cache_update(cache, k_new[:, 0], v_new[:, 0], write_t)
         out = ops.decode_attention(
             q[:, 0], cache["k"], cache["v"], kv_len,
-            metadata=metadata, policy=policy, num_cores=num_cores,
-            impl="pallas")
+            metadata=metadata, use_ctx_metadata=use_ctx_md,
+            policy=policy, num_cores=num_cores, impl="pallas")
     elif "k_s" in cache:                    # int8 KV cache (§Perf C.4)
         kq, kns = quantize_kv(k_new[:, 0])
         vq, vns = quantize_kv(v_new[:, 0])
         out, ck, cv, ks, vs = ops.decode_attention_update(
             q[:, 0], cache["k"], cache["v"], kq, vq, write_t, kv_len,
+            metadata=metadata, use_ctx_metadata=use_ctx_md,
             policy=policy, num_cores=num_cores,
             quant={"k_s": cache["k_s"], "v_s": cache["v_s"],
                    "k_ns": kns, "v_ns": vns})
@@ -299,7 +309,9 @@ def attention_decode(
     else:
         out, ck, cv = ops.decode_attention_update(
             q[:, 0], cache["k"], cache["v"], k_new[:, 0], v_new[:, 0],
-            write_t, kv_len, policy=policy, num_cores=num_cores)
+            write_t, kv_len, metadata=metadata,
+            use_ctx_metadata=use_ctx_md, policy=policy,
+            num_cores=num_cores)
         cache = {"k": ck, "v": cv}
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
     return y[:, None], cache

@@ -220,6 +220,7 @@ def encdec_decode_step(
     token: jax.Array,                   # (B,)
     t: jax.Array,
     *,
+    metadata=None,                      # frozen plan for SELF-attention
     policy: str = "paper",
     num_cores: Optional[int] = None,
 ) -> Tuple[jax.Array, Pytree]:
@@ -234,10 +235,12 @@ def encdec_decode_step(
         xc = shard_activation(xc, ("batch", None, None))
         h = apply_norm(lp["ln1"], xc, cfg.norm_eps)
         mix, new_self = attn_mod.attention_decode(
-            lp["self"], cfg, h, lc["self"], t, policy=policy,
-            num_cores=num_cores)
+            lp["self"], cfg, h, lc["self"], t, metadata=metadata,
+            policy=policy, num_cores=num_cores)
         xc = xc + mix
         hx = apply_norm(lp["lnx"], xc, cfg.norm_eps)
+        # cross-attention decodes against a FIXED encoder length — a
+        # different workload shape, so the self-attn plan does not apply
         xc = xc + attn_mod.cross_attention_decode(
             lp["cross"], cfg, hx, lc["cross"], policy=policy,
             num_cores=num_cores)

@@ -212,22 +212,31 @@ def block_cache_specs(cfg: ModelConfig, kind: str, batch: int,
 
 def block_decode(params, cfg: ModelConfig, kind: str, x: jax.Array,
                  cache: Pytree, t: jax.Array, *,
-                 policy: str = "paper", num_cores: Optional[int] = None
+                 metadata=None, policy: str = "paper",
+                 num_cores: Optional[int] = None
                  ) -> Tuple[jax.Array, Pytree]:
-    """One block, one token. x: (B, 1, d)."""
+    """One block, one token. x: (B, 1, d).
+
+    ``metadata`` is the frozen :class:`SchedulerMetadata` launch plan
+    (static); it applies to full-attention layers, which all see the
+    same decode shape.  Window layers attend over the ring cache
+    (L_K = window, a DIFFERENT shape), so they fall back to an in-line
+    policy evaluation on their own static length instead of consuming a
+    plan frozen for the full cache.
+    """
     h = apply_norm(params["ln1"], x, cfg.norm_eps)
     if kind == "attn":
         mix, cache = attn_mod.attention_decode(
-            params["mix"], cfg, h, cache, t, policy=policy,
-            num_cores=num_cores)
+            params["mix"], cfg, h, cache, t, metadata=metadata,
+            policy=policy, num_cores=num_cores)
     elif kind == "attn_window":
         mix, cache = attn_mod.attention_decode(
             params["mix"], cfg, h, cache, t, policy=policy,
             num_cores=num_cores, window=cfg.hybrid.window)
     elif kind == "mla":
         mix, cache = mla_mod.mla_decode(
-            params["mix"], cfg, h, cache, t, policy=policy,
-            num_cores=num_cores)
+            params["mix"], cfg, h, cache, t, metadata=metadata,
+            policy=policy, num_cores=num_cores)
     elif kind == "rglru":
         mix, cache = rglru_mod.apply_rglru_decode(params["mix"], cfg, h,
                                                   cache)
@@ -396,10 +405,16 @@ def lm_decode_step(
     token: jax.Array,                   # (B,) int32 — the new token
     t: jax.Array,                       # scalar int32 — its position
     *,
+    metadata=None,
     policy: str = "paper",
     num_cores: Optional[int] = None,
 ) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
-    """One decode step. Returns (logits (B, vocab) f32, new caches)."""
+    """One decode step. Returns (logits (B, vocab) f32, new caches).
+
+    ``metadata``: precomputed launch plan (the metadata-enabled path);
+    threaded into every attention block so the split policy never runs
+    inside this (traced) function.
+    """
     x = embed_tokens(params["embed"], token[:, None])    # (B, 1, d)
     x = shard_activation(x, _ACT)
 
@@ -414,8 +429,8 @@ def lm_decode_step(
             new_lc = []
             for ki, kind in enumerate(pattern):
                 xc, c = block_decode(layer_params[ki], cfg, kind, xc,
-                                     layer_cache[ki], t, policy=policy,
-                                     num_cores=num_cores)
+                                     layer_cache[ki], t, metadata=metadata,
+                                     policy=policy, num_cores=num_cores)
                 new_lc.append(c)
             return shard_activation(xc, _ACT), tuple(new_lc)
 

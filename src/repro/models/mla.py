@@ -181,7 +181,7 @@ def mla_decode(
     out_lat, lat, _ = ops.decode_attention_update(
         q_cat * scale, cache["latent"], None,
         new_entry[:, 0, None, :], None, tv, kv_len,
-        v_width=m.kv_lora_rank, scale=1.0,
+        v_width=m.kv_lora_rank, scale=1.0, metadata=metadata,
         policy=policy, num_cores=num_cores)                      # (B,H,r)
     cache = {"latent": lat}
     out = jnp.einsum("bhr,rhk->bhk", out_lat, params["v_up"])    # absorb W_uv

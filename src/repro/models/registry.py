@@ -98,16 +98,25 @@ class Model:
                                  kv_dtype=kv_dtype)
 
     def decode_step(self, params: Pytree, caches: Pytree, token: jax.Array,
-                    t: jax.Array, *, policy: str = "paper",
+                    t: jax.Array, *, metadata=None, policy: str = "paper",
                     num_cores: Optional[int] = None
                     ) -> Tuple[jax.Array, Pytree]:
+        """One decode step.
+
+        ``metadata``: a frozen :class:`SchedulerMetadata` launch plan
+        (static Python value, NOT a traced array).  When supplied, every
+        attention layer launches from it and the split policy is never
+        evaluated inside this function — callers jitting this must
+        specialize on the plan (close over it / static argnum).
+        """
         cfg = self.cfg
         if cfg.family == "encdec":
             return encdec_mod.encdec_decode_step(
-                params, cfg, caches, token, t, policy=policy,
-                num_cores=num_cores)
+                params, cfg, caches, token, t, metadata=metadata,
+                policy=policy, num_cores=num_cores)
         return lm_mod.lm_decode_step(params, cfg, caches, token, t,
-                                     policy=policy, num_cores=num_cores)
+                                     metadata=metadata, policy=policy,
+                                     num_cores=num_cores)
 
     # --- frontend stubs ---------------------------------------------------------
 

@@ -3,7 +3,13 @@ from repro.serving.decode_step import (  # noqa: F401
     ServeStepBundle,
     build_serve_step,
     decode_workload,
+    mesh_plan,
     mesh_split_decision,
     serve_param_rules,
 )
-from repro.serving.engine import Completion, DecodeEngine, Request  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    Completion,
+    DecodeEngine,
+    PlanCacheStats,
+    Request,
+)

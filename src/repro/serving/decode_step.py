@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ServeConfig, ShapeConfig
+from repro.core.scheduler_metadata import SchedulerMetadata, get_scheduler_metadata
 from repro.core.split_policy import DecodeWorkload, choose_mesh_splits
 from repro.kernels import ops
 from repro.models.common import abstract_params
@@ -81,9 +82,16 @@ def decode_workload(cfg: ModelConfig, shape: ShapeConfig) -> DecodeWorkload:
     )
 
 
-def mesh_split_decision(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                        policy: str) -> int:
-    """How many ways the model axis sequence-shards the KV cache (1 = off).
+def mesh_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              policy: str) -> Tuple[Optional[SchedulerMetadata], int]:
+    """The mesh-level launch plan: (frozen metadata, sequence-shard ways).
+
+    This is the serving engine's plan-cache idea applied once, statically,
+    at build time: ``get_scheduler_metadata`` freezes the split decision
+    for the (arch, shape) cell and BOTH consumers read it — the sharding
+    layout below and the decode ops inside the jitted step (via
+    :class:`~repro.kernels.ops.DecodeContext.metadata`), so the policy is
+    never re-evaluated inside the traced program.
 
     Two reasons to split: (a) the paper's occupancy policy says the model
     axis is starved, or (b) *storage*: when H_KV doesn't divide the model
@@ -92,16 +100,31 @@ def mesh_split_decision(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     then strictly better regardless of the compute policy.
     """
     if cfg.family == "ssm":
-        return 1                              # attention-free (DESIGN.md §5)
+        return None, 1                        # attention-free (DESIGN.md §5)
     model_ax = mesh.shape["model"]
-    kv = effective_kv_heads(cfg)
-    if kv % model_ax != 0:
-        return model_ax                       # storage-driven split (b)
     w = decode_workload(cfg, shape)
-    s = choose_mesh_splits(w, model_ax, policy=policy)
-    # binary realization on a fixed mesh: any split -> whole-axis shard
+    kv = effective_kv_heads(cfg)
+    if kv % model_ax != 0:                    # storage-driven split (b)
+        md = get_scheduler_metadata(
+            w.batch, 1, w.seqlen_k, w.num_heads_q, w.num_heads_kv,
+            w.head_dim, policy=policy, num_cores=model_ax,
+            num_splits_override=model_ax)
+        return md, model_ax
+    md = get_scheduler_metadata(
+        w.batch, 1, w.seqlen_k, w.num_heads_q, w.num_heads_kv,
+        w.head_dim, policy=policy, num_cores=model_ax)
+    # the SHARD decision keeps the divisor constraint (an axis with no
+    # usable divisor <= the split count stays head-sharded); binary
+    # realization on a fixed mesh: any split -> whole-axis shard
     # (fractional axis splits need sub-axes; recorded as future work)
-    return model_ax if s > 1 else 1
+    s_mesh = choose_mesh_splits(w, model_ax, policy=policy)
+    return md, (model_ax if s_mesh > 1 else 1)
+
+
+def mesh_split_decision(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        policy: str) -> int:
+    """How many ways the model axis sequence-shards the KV cache (1 = off)."""
+    return mesh_plan(cfg, shape, mesh, policy)[1]
 
 
 @dataclass
@@ -114,6 +137,9 @@ class ServeStepBundle:
     cache_shardings: Pytree
     max_len: int
     mesh_splits: int                          # 1 = head-sharded path
+    # frozen launch plan the step was specialized on (None = the
+    # internal-heuristic path or an attention-free family)
+    metadata: Optional[SchedulerMetadata] = None
 
     def abstract_args(self):
         aparams = abstract_params(self.model.param_specs())
@@ -133,7 +159,9 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
     # cache length padded so a whole-axis sequence shard divides evenly
     max_len = -(-L // model_ax) * model_ax
 
-    splits = mesh_split_decision(cfg, scfg.shape, mesh, scfg.split_policy)
+    metadata, splits = mesh_plan(cfg, scfg.shape, mesh, scfg.split_policy)
+    if not scfg.use_scheduler_metadata:
+        metadata = None                   # internal-heuristic A/B path
     seq_split = splits > 1
 
     prules = serve_param_rules()
@@ -157,6 +185,7 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
     ctx = ops.DecodeContext(
         policy=scfg.split_policy,
         num_cores=model_ax,
+        metadata=metadata,
         min_splits=1 if use_fused else splits,
         split_constraint=(None if use_fused else
                           (constraint if seq_split else None)),
@@ -167,8 +196,8 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
     def step(params, caches, token, t):
         with ops.decode_context(ctx), activation_mesh(mesh):
             logits, caches = model.decode_step(
-                params, caches, token, t, policy=scfg.split_policy,
-                num_cores=model_ax)
+                params, caches, token, t, metadata=metadata,
+                policy=scfg.split_policy, num_cores=model_ax)
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, caches
 
@@ -181,7 +210,7 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
         donate_argnums=(1,),
     )
     return ServeStepBundle(model, scfg, mesh, jitted, pshard, cshard,
-                           max_len, splits)
+                           max_len, splits, metadata)
 
 
 # ---------------------------------------------------------------------------

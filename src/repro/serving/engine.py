@@ -12,22 +12,48 @@ the short-prompt regime the paper targets (L_K <= 512) this is the
 latency-dominant path the split policy accelerates; a fused prefill is a
 recorded future optimization.
 
-The engine uses the **metadata-enabled path** (paper §5): split plans are
-precomputed per cache-length bucket via ``get_scheduler_metadata`` and
-the jitted step is specialized on them.
+Metadata-enabled path (paper §5)
+--------------------------------
+The paper's 21-24% decoder-efficiency win applies to deployments that
+*precompute* scheduling metadata (FA3 / vLLM ``get_scheduler_metadata``)
+instead of re-running the split heuristic at every launch.  The engine
+realizes that as a three-stage flow:
+
+1. **bucket** — before each step, the live cache length ``t_max + 1`` is
+   quantized to a ``seqlen_bucket``-wide bucket (decision-lossless: the
+   policy only reads ``ceil(L_K / KV_BLOCK)``).
+2. **plan** — the first time a bucket is seen, ``get_scheduler_metadata``
+   freezes a :class:`SchedulerMetadata` launch plan for it (policy runs
+   exactly once per bucket, OUTSIDE any traced code).
+3. **specialized step** — each plan owns its own jitted decode step with
+   the plan closed over as a static value, so XLA specializes the whole
+   program (kernel grid included) on the frozen ``num_splits``.  Inside
+   the jitted body the policy is evaluated **zero** times
+   (``kernels.ops.policy_eval_count`` stays flat — asserted in tests).
+
+Plan-cache observability lives in :class:`PlanCacheStats`
+(``engine.stats``): hits/misses, per-bucket launch counters, and the
+full plans-used trace, so tests and benchmarks can assert the metadata
+path was actually exercised.  ``use_scheduler_metadata=False`` keeps the
+paper's weaker "internal heuristic" path for A/B comparison.
 """
 from __future__ import annotations
 
+import functools
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ServeConfig
-from repro.core.scheduler_metadata import bucket_seqlen, get_scheduler_metadata
-from repro.kernels import ops
+from repro.configs.base import ServeConfig
+from repro.core.scheduler_metadata import (
+    SchedulerMetadata,
+    bucket_seqlen,
+    get_scheduler_metadata,
+)
 from repro.models.registry import Model
 
 Pytree = Any
@@ -49,6 +75,49 @@ class Completion:
     steps: int = 0
 
 
+@dataclass
+class PlanCacheStats:
+    """Observability for the metadata-enabled path.
+
+    ``misses`` is also the recompile count: every miss builds one new
+    specialized (plan, jitted step) pair, and nothing else does.  With
+    an unbounded plan cache (the default) misses == distinct buckets;
+    under a ``plan_cache_capacity`` bound, re-visiting an evicted
+    bucket re-specializes and counts as a fresh miss — the capacity
+    knob trades steady-state recompiles for bounded residency.
+    """
+    # trace keeps the most recent TRACE_CAP steps (a long-lived engine
+    # must not grow it unboundedly); counters are exact forever
+    TRACE_CAP = 4096
+
+    hits: int = 0
+    misses: int = 0
+    launches: Dict[int, int] = field(default_factory=dict)  # bucket -> n
+    trace: List[int] = field(default_factory=list)          # bucket per step
+
+    @property
+    def total_launches(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def distinct_buckets(self) -> int:
+        return len(set(self.trace))
+
+    def reset(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.launches.clear()
+        self.trace.clear()
+
+
+@dataclass
+class _Plan:
+    """One plan-cache entry: a frozen launch plan + its specialized step."""
+    bucket: int                      # bucketed L_K this plan covers
+    metadata: SchedulerMetadata
+    step: Any                        # jitted, specialized on ``metadata``
+
+
 class DecodeEngine:
     """Single-host engine over a (possibly 1-device) mesh."""
 
@@ -60,8 +129,16 @@ class DecodeEngine:
         self.policy = policy or scfg.split_policy
         self.max_len = max_len
         self.B = batch_slots
+        self.use_metadata = scfg.use_scheduler_metadata
+        self.bucket_width = scfg.seqlen_bucket
+        self.plan_capacity = scfg.plan_cache_capacity
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
+        self._plans: "OrderedDict[int, _Plan]" = OrderedDict()
+        self.stats = PlanCacheStats()
+        # internal-heuristic fallback: ONE step for all lengths, policy
+        # evaluated at trace time on the padded cache length (the A/B
+        # baseline the paper measures its metadata path against)
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
 
     # --- state ----------------------------------------------------------------
@@ -70,17 +147,52 @@ class DecodeEngine:
         self._params = params
         self._caches = self.model.init_cache(self.B, self.max_len)
 
-    def _metadata(self, t_max: int):
-        """Precompute the launch plan for the current length bucket."""
-        lk = bucket_seqlen(min(t_max + 1, self.max_len))
+    # --- plan cache (metadata-enabled path) -----------------------------------
+
+    def _bucket(self, t_max: int) -> int:
+        """Cache-length bucket for the longest live position."""
+        return bucket_seqlen(min(int(t_max) + 1, self.max_len),
+                             self.bucket_width)
+
+    def _metadata(self, t_max: int) -> SchedulerMetadata:
+        """Compute (not cache) the launch plan for the current bucket."""
         return get_scheduler_metadata(
-            self.B, 1, lk, self.cfg.num_heads,
+            self.B, 1, self._bucket(t_max), self.cfg.num_heads,
             1 if self.cfg.mla else self.cfg.num_kv_heads,
             self.cfg.resolved_head_dim, policy=self.policy)
 
-    def _step_impl(self, params, caches, token, t):
+    def _plan(self, t_max: int) -> _Plan:
+        """Plan-cache lookup: one specialized jitted step per bucket."""
+        lk = self._bucket(t_max)
+        plan = self._plans.get(lk)
+        if plan is None:
+            self.stats.misses += 1
+            md = self._metadata(t_max)
+            step = jax.jit(
+                functools.partial(self._step_impl, metadata=md),
+                donate_argnums=(1,))
+            plan = _Plan(lk, md, step)
+            self._plans[lk] = plan
+            if self.plan_capacity and len(self._plans) > self.plan_capacity:
+                self._plans.popitem(last=False)
+        else:
+            self._plans.move_to_end(lk)
+            self.stats.hits += 1
+        self.stats.launches[lk] = self.stats.launches.get(lk, 0) + 1
+        self.stats.trace.append(lk)
+        if len(self.stats.trace) > 2 * PlanCacheStats.TRACE_CAP:
+            del self.stats.trace[:-PlanCacheStats.TRACE_CAP]
+        return plan
+
+    def planned_splits(self) -> Dict[int, int]:
+        """bucket -> frozen num_splits, for every resident plan."""
+        return {lk: p.metadata.num_splits for lk, p in self._plans.items()}
+
+    def _step_impl(self, params, caches, token, t,
+                   metadata: Optional[SchedulerMetadata] = None):
         logits, caches = self.model.decode_step(
-            params, caches, token, t, policy=self.policy)
+            params, caches, token, t, metadata=metadata,
+            policy=self.policy)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
 
     # --- scheduling -------------------------------------------------------------
@@ -102,6 +214,18 @@ class DecodeEngine:
         next_token = np.zeros(self.B, np.int32)
         done: List[Completion] = []
 
+        # validate up front: a bad request must fail fast, not abort the
+        # batch mid-flight after other requests already completed
+        for req in pending:
+            if not req.prompt:
+                raise ValueError(f"request {req.request_id}: empty prompt")
+            if len(req.prompt) >= self.max_len:
+                # prefill would write past the cache and silently corrupt
+                # the last row (dynamic_update_slice clamps) — refuse
+                raise ValueError(
+                    f"request {req.request_id}: prompt length "
+                    f"{len(req.prompt)} >= max_len ({self.max_len})")
+
         def refill(i: int) -> None:
             if not pending:
                 return
@@ -120,8 +244,13 @@ class DecodeEngine:
         while any(s is not None for s in slots):
             tok = jnp.asarray(next_token)
             t = jnp.asarray(slot_pos)
-            out, self._caches = self._step(self._params, self._caches,
-                                           tok, t)
+            if self.use_metadata:
+                t_max = max(int(slot_pos[i]) for i, s in enumerate(slots)
+                            if s is not None)
+                step = self._plan(t_max).step
+            else:
+                step = self._step
+            out, self._caches = step(self._params, self._caches, tok, t)
             out = np.asarray(out)
             for i, comp in enumerate(slots):
                 if comp is None:

@@ -1,0 +1,143 @@
+"""Hypothesis compatibility shim: real package when installed, vendored
+deterministic fallback otherwise.
+
+The property tests (`test_kernels.py`, `test_policy_properties.py`,
+`test_training.py`) import ``given`` / ``settings`` / ``strategies``
+from here instead of from ``hypothesis`` directly, so tier-1 collection
+works on a clean machine with no extra dependencies.  When the real
+package is importable it is re-exported unchanged (full shrinking,
+database, coverage-guided generation); the fallback below keeps the same
+call surface and runs each property over a fixed-seed deterministic
+sample — strictly weaker at finding new counterexamples, but it keeps
+the invariants executable and regressions visible everywhere.
+"""
+from __future__ import annotations
+
+try:                                        # pragma: no cover - env-dependent
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    from types import SimpleNamespace
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 25
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        """A draw rule: deterministic given the shared Random instance."""
+
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    def _integers(min_value: int, max_value: int) -> _Strategy:
+        def draw(rng):
+            # over-weight the endpoints — the cheap stand-in for
+            # hypothesis's boundary-value bias
+            r = rng.random()
+            if r < 0.125:
+                return min_value
+            if r < 0.25:
+                return max_value
+            return rng.randint(min_value, max_value)
+        return _Strategy(draw)
+
+    def _floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+                allow_infinity: bool = True) -> _Strategy:
+        def draw(rng):
+            r = rng.random()
+            if r < 0.1:
+                return float(min_value)
+            if r < 0.2:
+                return float(max_value)
+            if r < 0.3:
+                return 0.0
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    def _sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def _just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    def _booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _lists(elements: _Strategy, *, min_size: int = 0,
+               max_size: int | None = None) -> _Strategy:
+        hi = max_size if max_size is not None else min_size + 16
+
+        def draw(rng):
+            n = rng.randint(min_size, hi)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _tuples(*parts: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(p.draw(rng) for p in parts))
+
+    def _builds(target, *args: _Strategy, **kwargs: _Strategy) -> _Strategy:
+        def draw(rng):
+            return target(*(a.draw(rng) for a in args),
+                          **{k: v.draw(rng) for k, v in kwargs.items()})
+        return _Strategy(draw)
+
+    strategies = SimpleNamespace(
+        integers=_integers,
+        floats=_floats,
+        sampled_from=_sampled_from,
+        just=_just,
+        booleans=_booleans,
+        lists=_lists,
+        tuples=_tuples,
+        builds=_builds,
+    )
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Decorator: records max_examples on the (given-wrapped) test."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        """Run the test body over a fixed-seed deterministic sample."""
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn_args, **kwargs, **drawn_kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (shim, seed={_SEED:#x}): "
+                            f"args={drawn_args!r} kwargs={drawn_kw!r}"
+                        ) from e
+
+            # pytest must not mistake the drawn parameters for fixtures:
+            # hide the wrapped signature and present a 0-arg test.
+            del wrapper.__wrapped__
+            params = [
+                p for name, p in
+                inspect.signature(fn).parameters.items()
+                if name not in kw_strategies
+            ]
+            if arg_strategies:      # positional draws fill rightmost params
+                params = params[:-len(arg_strategies)]
+            wrapper.__signature__ = inspect.Signature(params)
+            return wrapper
+        return deco

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_decode import flash_decode_partials
@@ -23,6 +23,7 @@ def _rand(rng, shape, dtype=jnp.float32, scale=1.0):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     b=st.integers(1, 3),

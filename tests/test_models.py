@@ -57,6 +57,7 @@ def _batch(model, cfg, rng):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward(arch):
     cfg = reduced_config(arch)
@@ -73,6 +74,7 @@ def test_smoke_forward(arch):
     assert not bool(jnp.isnan(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     cfg = reduced_config(arch)
@@ -94,6 +96,7 @@ def test_smoke_train_step(arch):
                    for x in jax.tree.leaves(params))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_forward(arch):
     cfg = reduced_config(arch)
@@ -124,6 +127,7 @@ def test_decode_matches_forward(arch):
     assert rel < TOL[cfg.family], f"{arch}: rel={rel}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_then_decode(arch):
     cfg = reduced_config(arch)

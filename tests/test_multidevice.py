@@ -13,6 +13,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 REPO = Path(__file__).resolve().parents[1]
 
 
@@ -20,7 +22,8 @@ def run_py(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = str(REPO / "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    code = "from repro.compat import make_mesh\n" + textwrap.dedent(code)
+    r = subprocess.run([sys.executable, "-c", code],
                        capture_output=True, text=True, env=env,
                        timeout=560)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
@@ -33,8 +36,7 @@ def test_fused_seqsharded_decode_matches_oracle():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.kernels import ops, ref
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         B, L, Hkv, G, D = 4, 64, 1, 8, 32
         rng = jax.random.PRNGKey(0)
         ks = jax.random.split(rng, 5)
@@ -77,8 +79,7 @@ def test_fused_decode_mla_latent_matches_oracle():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.kernels import ops, ref
 
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((1, 8), ("data", "model"))
         B, L, H, W, R = 2, 64, 8, 40, 32
         rng = jax.random.PRNGKey(1)
         ks = jax.random.split(rng, 3)
@@ -130,9 +131,7 @@ def test_sharded_train_step_matches_single_device():
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
 
         def run(mesh_shape):
-            mesh = jax.make_mesh(
-                mesh_shape, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh(mesh_shape, ("data", "model"))
             b = build_train_step(model, tcfg, mesh)
             params, opt = b.init(jax.random.PRNGKey(0))
             for _ in range(2):
@@ -157,8 +156,7 @@ def test_compressed_dp_grads_close_to_exact():
         from repro.training.compression import (
             build_compressed_dp_grads, init_error_feedback)
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         W = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
         X = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
         Y = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
@@ -192,8 +190,7 @@ def test_moe_ep_shard_map_matches_gather():
         from repro.models.common import init_params
         from repro.sharding.ctx import activation_mesh
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = reduced_config("qwen3-moe-235b-a22b", d_model=32)
         # capacity high enough that neither path drops tokens: results
         # must then agree exactly (E=8 pads to 8 on a 4-axis: ok)
@@ -220,8 +217,7 @@ def test_seqpar_attention_matches_reference():
         import jax, jax.numpy as jnp, numpy as np
         from repro.kernels import ops, ref
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         B, L, H, D = 2, 64, 5, 16      # 5 heads: not divisible by 4
         rng = jax.random.PRNGKey(0)
         ks = jax.random.split(rng, 3)
@@ -268,9 +264,7 @@ def test_elastic_remesh_restore():
         quiet = lambda s: None
 
         def mk(mesh_shape):
-            mesh = jax.make_mesh(
-                mesh_shape, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh(mesh_shape, ("data", "model"))
             return build_train_step(model, tcfg, mesh)
 
         with tempfile.TemporaryDirectory() as d:

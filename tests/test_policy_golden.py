@@ -1,0 +1,72 @@
+"""Golden decision table: lock the three policies' split choices.
+
+``golden/split_policy_table.json`` pins ``choose_num_splits`` for every
+policy over a committed grid of (batch, L_K, H_Q, H_KV, num_cores)
+shapes — the decision surface the paper's Table 1 / Fig. 2 claims live
+on.  A policy refactor that changes ANY cell now fails loudly and the
+diff documents exactly which shapes moved; regenerate intentionally
+with:
+
+    PYTHONPATH=src python tests/test_policy_golden.py --regen
+"""
+import json
+import sys
+from pathlib import Path
+
+from repro.core.split_policy import DecodeWorkload, POLICIES, choose_num_splits
+
+GOLDEN = Path(__file__).parent / "golden" / "split_policy_table.json"
+
+# the committed grid: low-head-count decode shapes (the paper's regime),
+# the nblk=4 boundary bucket at several tile counts, and long-context
+# shapes that exercise the upstream efficiency loop
+BATCHES = (1, 2, 8, 64)
+SEQLENS_K = (128, 256, 384, 448, 512, 640, 1024, 4096, 32768)
+HEADS = ((64, 1), (32, 4), (16, 2), (40, 8), (20, 20), (8, 8))
+NUM_CORES = (8, 16, 132)
+
+
+def compute_table() -> dict:
+    table = {}
+    for policy in sorted(POLICIES):
+        for b in BATCHES:
+            for lk in SEQLENS_K:
+                for hq, hkv in HEADS:
+                    for cores in NUM_CORES:
+                        w = DecodeWorkload(b, 1, lk, hq, hkv, 128)
+                        key = f"{policy}|B{b}|L{lk}|Hq{hq}|Hkv{hkv}|C{cores}"
+                        table[key] = choose_num_splits(
+                            w, policy=policy, num_cores=cores)
+    return table
+
+
+def test_policy_decision_table_matches_golden():
+    assert GOLDEN.exists(), (
+        f"golden file missing: {GOLDEN} — regenerate with "
+        "`PYTHONPATH=src python tests/test_policy_golden.py --regen`")
+    want = json.loads(GOLDEN.read_text())
+    got = compute_table()
+    changed = {k: (want.get(k), got.get(k))
+               for k in set(want) | set(got) if want.get(k) != got.get(k)}
+    assert not changed, (
+        f"{len(changed)} policy decisions drifted from the golden table "
+        f"(first 10: {dict(list(sorted(changed.items()))[:10])}); if "
+        "intentional, regenerate via --regen and commit the diff")
+
+
+def test_golden_pins_the_papers_headline_cell():
+    """The table must contain the paper's motivating decision: B=1, MQA,
+    L_K=512 — fa3_baseline refuses to split, paper picks 3."""
+    want = json.loads(GOLDEN.read_text())
+    assert want["fa3_baseline|B1|L512|Hq64|Hkv1|C132"] == 1
+    assert want["paper|B1|L512|Hq64|Hkv1|C132"] == 3
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(compute_table(), indent=0,
+                                     sort_keys=True) + "\n")
+        print(f"wrote {GOLDEN}")
+    else:
+        print(__doc__)

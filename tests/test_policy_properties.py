@@ -1,7 +1,7 @@
 """Property-based tests (hypothesis) on the scheduling invariants."""
 import math
 
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.core.occupancy import (
     H100_SXM,

@@ -7,6 +7,7 @@ import pytest
 from repro.configs.base import ServeConfig
 from repro.configs.reduced import reduced_config
 from repro.core.scheduler_metadata import get_scheduler_metadata
+from repro.kernels import ops
 from repro.models import build_model
 from repro.serving.engine import DecodeEngine, Request
 
@@ -85,3 +86,89 @@ def test_metadata_plan_lookup(tiny_model):
                            batch_slots=2)
     md2 = eng_big._metadata(500)
     assert md2.workload.seqlen_k == 512         # bucketed, not clamped
+
+
+# ---------------------------------------------------------------------------
+# Metadata-enabled path: plan cache, specialization, policy A/B
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hits_and_recompile_count(tiny_model):
+    """Repeated buckets HIT the plan cache; the recompile count (== plan
+    misses) equals the number of distinct buckets actually visited."""
+    cfg, model, params = tiny_model
+    eng = DecodeEngine(model, ServeConfig(model=cfg), max_len=300,
+                       batch_slots=2)
+    eng.load(params)
+    # run past position 128 so both the 128 and 256 buckets are visited
+    eng.generate([Request(0, [1, 2, 3], max_new_tokens=8),
+                  Request(1, [4, 5], max_new_tokens=150)])
+    st = eng.stats
+    assert st.total_launches == len(st.trace) == sum(st.launches.values())
+    assert st.distinct_buckets == 2                  # 128 then 256
+    assert st.misses == st.distinct_buckets          # one compile per bucket
+    assert st.misses == len(eng.planned_splits())
+    assert st.hits == st.total_launches - st.misses > 0
+    assert st.launches[128] > 0 and st.launches[256] > 0
+
+
+def test_plan_cache_capacity_evicts_oldest(tiny_model):
+    cfg, model, params = tiny_model
+    eng = DecodeEngine(
+        model, ServeConfig(model=cfg, plan_cache_capacity=1),
+        max_len=300, batch_slots=1)
+    eng.load(params)
+    eng.generate([Request(0, [1, 2], max_new_tokens=150)])
+    assert eng.stats.distinct_buckets == 2
+    assert len(eng.planned_splits()) == 1            # oldest plan evicted
+    assert list(eng.planned_splits()) == [256]
+
+
+def test_policy_never_evaluated_inside_metadata_step(tiny_model):
+    """The frozen-plan step must not run the split policy at trace time;
+    the internal-heuristic fallback must (that is the A/B the paper
+    draws).  Fresh engines force a fresh trace either way."""
+    cfg, model, params = tiny_model
+    reqs = lambda: [Request(0, [1, 2, 3], max_new_tokens=6)]
+
+    eng = _engine(cfg, model, params, 1)
+    ops.reset_policy_eval_count()
+    out_md = eng.generate(reqs())
+    assert ops.policy_eval_count() == 0
+
+    eng_fb = DecodeEngine(
+        model, ServeConfig(model=cfg, use_scheduler_metadata=False),
+        max_len=64, batch_slots=1)
+    eng_fb.load(params)
+    out_fb = eng_fb.generate(reqs())
+    assert ops.policy_eval_count() > 0               # trace-time eval
+    assert eng_fb.stats.total_launches == 0          # plan cache idle
+    assert [c.tokens for c in out_md] == [c.tokens for c in out_fb]
+
+
+def test_policy_ab_low_head_count_shape(tiny_model):
+    """The paper's target shape (B=1, MQA H_KV=1, L_K=512): fa3_baseline
+    and paper policies freeze DIFFERENT split plans, yet decode the same
+    tokens (the policy changes the schedule, never the math)."""
+    cfg, model, params = tiny_model
+    assert cfg.num_kv_heads == 1                     # reduced qwen is MQA
+
+    def engine(policy):
+        eng = DecodeEngine(
+            model, ServeConfig(model=cfg, split_policy=policy),
+            max_len=512, batch_slots=1)
+        eng.load(params)
+        return eng
+
+    base, pap = engine("fa3_baseline"), engine("paper")
+    md_base, md_pap = base._metadata(500), pap._metadata(500)
+    assert md_base.workload.seqlen_k == 512
+    assert md_base.num_splits == 1                   # flawed guard: no split
+    assert md_pap.num_splits == 3                    # paper Fig. 2 override
+    # run both engines THROUGH the 512 bucket: 400-token prompt + decode
+    prompt = [1 + (i * 7) % 250 for i in range(400)]
+    out_b = base.generate([Request(0, list(prompt), max_new_tokens=8)])
+    out_p = pap.generate([Request(0, list(prompt), max_new_tokens=8)])
+    assert base.planned_splits()[512] == 1
+    assert pap.planned_splits()[512] == 3            # plan actually differs
+    assert out_b[0].tokens == out_p[0].tokens        # math identical

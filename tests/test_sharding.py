@@ -1,5 +1,7 @@
 """Sharding rules: divisibility fallback, conflicts, per-device bytes."""
 import jax
+
+from repro.compat import make_mesh
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -79,9 +81,7 @@ def test_cache_rules_seq_split_toggle():
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "qwen3-moe-235b-a22b",
                                   "whisper-large-v3", "mamba2-780m"])
 def test_tree_shardings_cover_all_params(arch):
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     model = build_model(get_arch(arch))
     ap = abstract_params(model.param_specs())
     sh = tree_shardings(mesh, ap, model.param_axes(), param_rules())

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st
 
 from repro.configs.base import OptimizerConfig, ShapeConfig, TrainConfig
 from repro.configs.reduced import reduced_config
