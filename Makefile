@@ -1,13 +1,14 @@
 # Test tiers (markers registered in pytest.ini):
-#   make verify      fast tier, < 120 s — everything not marked slow/multidevice
+#   make verify      fast tier, < 120 s — plan-golden first, then everything
+#                    not marked slow/multidevice
 #   make verify-all  the full tier-1 suite (what the roadmap's verify line runs)
 #   make bench       every benchmark (one per paper table/figure + serving A/B)
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify verify-all bench golden
+.PHONY: verify verify-all bench golden plan-golden
 
-verify:
+verify: plan-golden
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 verify-all:
@@ -15,6 +16,12 @@ verify-all:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# fast gate: the Planner must reproduce the committed golden decision
+# table bit-exact (plan-API drift fails here before the full tier runs)
+plan-golden:
+	$(PY) -m pytest -q tests/test_policy_golden.py \
+	    tests/test_plan.py::test_planner_reproduces_golden_table_bit_exact
 
 # regenerate the policy decision golden table (commit the diff!)
 golden:

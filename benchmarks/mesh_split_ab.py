@@ -26,6 +26,7 @@ def main() -> None:
     from repro.configs.base import ServeConfig, ShapeConfig
     from repro.launch.mesh import make_production_mesh
     from repro.models.registry import build_model
+    from repro.plan import AttentionSpec, Planner
     from repro.roofline.analysis import HBM_BW, ICI_LINK_BW
     from repro.roofline.hlo import collective_bytes, wire_bytes
     from repro.roofline.probe import analytic_memory_bytes
@@ -39,8 +40,6 @@ def main() -> None:
     cfg = get_arch("qwen2.5-3b")
     model = build_model(cfg)
 
-    from repro.core.scheduler_metadata import get_scheduler_metadata
-
     rows = []
     for policy in ("fa3_baseline", "paper", "tpu_adaptive"):
         scfg = ServeConfig(model=cfg, shape=shape, split_policy=policy)
@@ -53,9 +52,9 @@ def main() -> None:
                                     kind="decode",
                                     seq_split=bundle.mesh_splits > 1)
         # the KERNEL-level plan for the same shape (per-chip split count)
-        md = get_scheduler_metadata(1, 1, 512, cfg.num_heads,
-                                    cfg.num_kv_heads,
-                                    cfg.resolved_head_dim, policy=policy)
+        md = Planner(policy=policy).plan(
+            AttentionSpec.decode(1, 512, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim))
         rows.append([policy, bundle.mesh_splits, md.num_splits,
                      round(wire / 2**20, 1),
                      round(wire / ICI_LINK_BW * 1e3, 3),

@@ -29,6 +29,7 @@ from repro.configs.reduced import reduced_config
 from repro.core.scheduler_metadata import metadata_cache_info
 from repro.kernels import ops
 from repro.models import build_model
+from repro.plan import AttentionSpec, Planner
 from repro.serving.engine import DecodeEngine, Request
 
 from benchmarks.common import print_table, write_csv
@@ -82,8 +83,29 @@ def main() -> None:
     assert all(r[6] == 0 for r in md_rows), "policy ran inside a plan step"
     assert any("512:3" in r[7] for r in md_rows), \
         "paper policy should freeze 3 splits for the 512 bucket"
+
+    # plan equivalence: the engine's frozen buckets must match what a
+    # standalone Planner produces for the same specs (the engine is just
+    # a PlanCache over the public Planner — no second decision path)
+    for policy, row in zip(("fa3_baseline", "paper", "tpu_adaptive"),
+                           md_rows):
+        planner = Planner(policy=policy)
+        for cell in filter(None, row[7].split(";")):
+            lk, s = map(int, cell.split(":"))
+            spec = AttentionSpec.decode(1, lk, cfg.num_heads,
+                                        cfg.num_kv_heads,
+                                        cfg.resolved_head_dim)
+            assert planner.plan(spec).num_splits == s, (policy, lk)
+    # explicit-override API (FA3's num_splits argument): the Planner
+    # bypasses the policy, clamped per-shape to num_n_blocks
+    forced = Planner(num_splits_override=2).plan(
+        AttentionSpec.decode(1, 512, cfg.num_heads, cfg.num_kv_heads,
+                             cfg.resolved_head_dim))
+    assert forced.num_splits == 2
+
     print("\nmetadata path: policy evals in dispatch = 0 across all "
-          "policies; paper freezes 512->3 splits (boundary override)")
+          "policies; paper freezes 512->3 splits (boundary override); "
+          "engine plans == Planner plans")
     print(f"process-wide metadata cache: {metadata_cache_info()}")
 
 

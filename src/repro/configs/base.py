@@ -216,8 +216,12 @@ class ServeConfig:
     mesh: MeshConfig = SINGLE_POD
     shape: ShapeConfig = DECODE_32K
     split_policy: str = "paper"        # fa3_baseline | paper | tpu_adaptive
-    # metadata-enabled path (paper §5): precompute one SchedulerMetadata
-    # plan per (batch, cache-length bucket) and launch the decode step
+    # explicit split-count override (FA3's explicit ``num_splits``): the
+    # engine's Planner bypasses the policy and freezes this count
+    # (clamped per-shape to num_n_blocks).  None = the policy decides.
+    num_splits_override: Optional[int] = None
+    # metadata-enabled path (paper §5): precompute one LaunchPlan per
+    # (batch, cache-length bucket) and launch the decode step
     # specialized on it.  False = the paper's weaker "internal heuristic"
     # path (policy re-evaluated at trace time inside the step).
     use_scheduler_metadata: bool = True

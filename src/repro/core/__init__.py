@@ -1,27 +1,30 @@
-"""Core: the paper's contribution — sequence-aware split-KV scheduling."""
-from repro.core.occupancy import (  # noqa: F401
-    H100_SXM,
-    HardwareModel,
-    TPU_V5E,
-    modeled_latency_us,
-    modeled_speedup,
-    occupancy_fraction,
-)
-from repro.core.scheduler_metadata import (  # noqa: F401
-    SchedulerMetadata,
-    bucket_seqlen,
-    get_scheduler_metadata,
-    metadata_cache_info,
-)
-from repro.core.split_policy import (  # noqa: F401
-    DEFAULT_NUM_CORES,
-    KV_BLOCK,
-    DecodeWorkload,
-    POLICIES,
-    choose_mesh_splits,
-    choose_num_splits,
-    fa3_baseline,
-    get_policy,
-    paper_policy,
-    tpu_adaptive,
-)
+"""Core: the paper's contribution — sequence-aware split-KV scheduling.
+
+Re-exports are lazy (PEP 562): ``repro.core.scheduler_metadata`` is a
+shim over ``repro.plan``, whose modules import
+``repro.core.split_policy`` — eager re-exports here would close an
+import cycle.  Everything the old eager ``__init__`` exposed is still
+importable from this package.
+"""
+_SUBMODULE_EXPORTS = {
+    "repro.core.occupancy": (
+        "H100_SXM", "HardwareModel", "TPU_V5E", "modeled_latency_us",
+        "modeled_speedup", "occupancy_fraction"),
+    "repro.core.scheduler_metadata": (
+        "SchedulerMetadata", "bucket_seqlen", "get_scheduler_metadata",
+        "metadata_cache_info"),
+    "repro.core.split_policy": (
+        "DEFAULT_NUM_CORES", "KV_BLOCK", "DecodeWorkload", "POLICIES",
+        "choose_mesh_splits", "choose_num_splits", "fa3_baseline",
+        "get_policy", "paper_policy", "tpu_adaptive"),
+}
+
+__all__ = sorted(n for names in _SUBMODULE_EXPORTS.values() for n in names)
+
+
+def __getattr__(name):
+    import importlib
+    for mod, names in _SUBMODULE_EXPORTS.items():
+        if name in names:
+            return getattr(importlib.import_module(mod), name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

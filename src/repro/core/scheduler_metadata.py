@@ -1,42 +1,37 @@
-"""Precomputed scheduler metadata — the paper's metadata-enabled path.
+"""Legacy shim over ``repro.plan`` — the paper's metadata-enabled path.
 
-Paper SS5: the 21-24% wins apply to deployments that *precompute* scheduling
-metadata (``get_scheduler_metadata()`` in FA3 / vLLM) and pass explicit
-``num_splits`` at launch, instead of re-running the heuristic inside the
-kernel dispatch.  This module is that API for our stack: the serving engine
-calls :func:`get_scheduler_metadata` once per (batch-shape, cache-length
-bucket) and hands the frozen plan to the attention op, keeping the policy
-out of the hot loop (and out of the jitted graph — the split count is a
-static Python int, so XLA specializes the kernel grid on it).
+The planning API moved to the first-class ``repro.plan`` package
+(AttentionSpec -> Planner -> LaunchPlan -> PlanCache); this module keeps
+the original FA3-style entry points importable:
+
+- :class:`SchedulerMetadata` is now an alias of
+  :class:`~repro.plan.LaunchPlan` (a strict superset of the old frozen
+  plan: same ``workload`` / ``num_splits`` / ``pack_gqa`` / ``policy`` /
+  ``num_cores`` surface, plus impl / block_k / bucket / mesh fields).
+- :func:`get_scheduler_metadata` mirrors FA3 / vLLM's entry point and
+  delegates to a default :class:`~repro.plan.Planner` behind a bounded
+  process-wide :class:`~repro.plan.PlanCache` (which replaced the old
+  unbounded ``functools.lru_cache``).
+
+New code should construct a ``Planner`` directly — see README
+"Architecture" for the migration map.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import lru_cache
-from typing import Optional, Tuple
+from typing import Optional
 
-from repro.core.split_policy import (
-    DEFAULT_NUM_CORES,
-    DecodeWorkload,
-    choose_num_splits,
-)
+from repro.core.split_policy import DEFAULT_NUM_CORES
+from repro.plan import AttentionSpec, LaunchPlan, PlanCache, Planner
+from repro.plan import bucket_seqlen  # noqa: F401  (canonical home moved)
 
+# Deprecated alias: the frozen plan type is LaunchPlan now.
+SchedulerMetadata = LaunchPlan
 
-@dataclass(frozen=True)
-class SchedulerMetadata:
-    """Frozen launch plan for one decode-attention shape."""
-    workload: DecodeWorkload
-    num_splits: int
-    pack_gqa: bool
-    policy: str
-    num_cores: int
-
-    @property
-    def uses_split(self) -> bool:
-        return self.num_splits > 1
+# Process-wide plan cache (bounded, unlike the lru_cache it replaced;
+# launch traces off — only hit/miss counters matter here).
+_PLAN_CACHE = PlanCache(capacity=4096, track_launches=False)
 
 
-@lru_cache(maxsize=4096)
 def get_scheduler_metadata(
     batch: int,
     seqlen_q: int,
@@ -49,33 +44,26 @@ def get_scheduler_metadata(
     num_cores: int = DEFAULT_NUM_CORES,
     num_splits_override: Optional[int] = None,
     pack_gqa: Optional[bool] = None,
-) -> SchedulerMetadata:
+) -> LaunchPlan:
     """Compute (and cache) the launch plan for a decode shape.
 
     ``num_splits_override`` mirrors FA3's explicit ``num_splits`` argument:
     benchmarks use it to force a split count (e.g. the Fig. 3 U-curve sweep)
     while production callers leave it ``None`` and get the policy's choice.
     """
-    w = DecodeWorkload(batch, seqlen_q, seqlen_k, num_heads_q, num_heads_kv,
-                       head_dim)
-    if num_splits_override is not None:
-        s = max(1, min(int(num_splits_override), w.num_n_blocks))
-    else:
-        s = choose_num_splits(w, policy=policy, num_cores=num_cores)
-    if pack_gqa is None:
-        pack_gqa = num_heads_q > num_heads_kv
-    return SchedulerMetadata(w, s, pack_gqa, policy, num_cores)
+    key = (batch, seqlen_q, seqlen_k, num_heads_q, num_heads_kv, head_dim,
+           policy, num_cores, num_splits_override, pack_gqa)
+
+    def build() -> LaunchPlan:
+        spec = AttentionSpec("decode", batch, seqlen_q, seqlen_k,
+                             num_heads_q, num_heads_kv, head_dim)
+        return Planner(policy=policy, num_cores=num_cores,
+                       num_splits_override=num_splits_override,
+                       pack_gqa=pack_gqa).plan(spec)
+
+    return _PLAN_CACHE.get_or_build(key, build)
 
 
 def metadata_cache_info():
-    """Hit/miss counters of the process-wide metadata cache (observability)."""
-    return get_scheduler_metadata.cache_info()
-
-
-def bucket_seqlen(seqlen_k: int, bucket: int = 128) -> int:
-    """Round a cache length up to its block bucket so metadata cache hits.
-
-    The serving engine quantizes L_K to the KV block width: the policy's
-    decision only depends on ``num_n_blocks``, so this is lossless.
-    """
-    return ((max(1, seqlen_k) + bucket - 1) // bucket) * bucket
+    """Hit/miss counters of the process-wide plan cache (observability)."""
+    return _PLAN_CACHE.cache_info()

@@ -85,5 +85,8 @@ def resumable_train_loop(
                 ckpt.save(ckpt_dir, step, state, keep=keep)
     if writer:
         writer.wait()
-    metrics = {k: float(v) for k, v in m.items()}
+    if start < total_steps:
+        # a resume landing exactly at total_steps runs zero steps; the
+        # last logged metrics (possibly empty) are all there is
+        metrics = {k: float(v) for k, v in m.items()}
     return metrics

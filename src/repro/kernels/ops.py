@@ -9,81 +9,97 @@ Two execution paths per op, selected by ``impl``:
   TPU-native hot path; numerics validated against ``ref.py`` in tests.
 
 ``decode_attention`` is the op the paper targets: its split count comes
-from precomputed :class:`~repro.core.scheduler_metadata.SchedulerMetadata`
-(the paper's "metadata-enabled path") or, if none is supplied, from an
-in-line policy evaluation at trace time (the paper's weaker "internal
-heuristic path").
+from a frozen :class:`~repro.plan.LaunchPlan` (the paper's
+"metadata-enabled path") — passed explicitly via ``plan=`` / legacy
+``metadata=``, or injected ambiently by the serve-step builder through
+:func:`repro.plan.plan_scope`.  With no frozen plan in reach, the policy
+runs at trace time (the paper's weaker "internal heuristic path") using
+the policy/num_cores overrides of whatever context-only plan applies.
+
+The old ``DecodeContext`` / ``AttnContext`` dual context stacks are
+deprecated shims over the single ``plan_scope`` stack; they keep old
+call sites importing (with a ``DeprecationWarning``) but new code should
+push a ``LaunchPlan``.
 """
 from __future__ import annotations
 
-import contextlib
-from dataclasses import dataclass
+import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.scheduler_metadata import SchedulerMetadata, get_scheduler_metadata
+from repro.core.scheduler_metadata import get_scheduler_metadata
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_partials
 from repro.kernels.flash_prefill import flash_prefill
+from repro.plan import LaunchPlan, current_plan, plan_scope
+
+_DEFAULT_POLICY = "paper"
 
 
 # ---------------------------------------------------------------------------
-# Decode context: how the serving engine injects the mesh-level split
+# Deprecated context shims (pre-repro.plan API)
 # ---------------------------------------------------------------------------
 
 
-@dataclass(frozen=True)
-class DecodeContext:
-    """Trace-time decode configuration (set by the serve-step builder).
-
-    ``policy`` / ``num_cores`` parameterize the paper's split heuristic.
-    ``min_splits`` and ``split_constraint`` realize the MESH-level split:
-    when the policy decides to sequence-shard the KV cache over the model
-    axis, the split axis of the partials is pinned to that mesh axis and
-    the kernel split count is rounded up to a multiple of it — each chip
-    then owns ``s / axis_size`` local splits and the LSE combine lowers to
-    the all-reduce the roofline's collective term measures.
-
-    ``seq_shard_mesh``/``seq_shard_axis`` select the fused shard_map path
-    instead: cache write + partial softmax run shard-locally and ONLY the
-    (B, H, D)-sized LSE partials cross the wire (a psum) — vs the
-    GSPMD-auto path, which re-gathers the whole cache around the scatter
-    (~536 MB/layer at decode_32k; measured in EXPERIMENTS.md §Perf).
-
-    ``metadata`` is the FROZEN launch plan (paper's metadata-enabled
-    path): when set, every decode-attention op traced under this context
-    launches from it and the policy is evaluated zero times inside the
-    step — the serve-step builder / engine computed the plan once per
-    (batch, length-bucket) outside the hot loop.
-    """
-    policy: str = "paper"
-    num_cores: Optional[int] = None
-    metadata: Optional[SchedulerMetadata] = None
-    min_splits: int = 1
-    # applied to the (S, B, C, H, D) split-KV tensors and (S, ...) partials
-    split_constraint: Optional[Callable[[jax.Array], jax.Array]] = None
-    # fused shard_map sequence-sharded decode (optimized path)
-    seq_shard_mesh: Optional[object] = None
-    seq_shard_axis: str = "model"
+def DecodeContext(policy: str = _DEFAULT_POLICY,
+                  num_cores: Optional[int] = None,
+                  metadata: Optional[LaunchPlan] = None,
+                  min_splits: int = 1,
+                  split_constraint: Optional[Callable] = None,
+                  seq_shard_mesh: Optional[object] = None,
+                  seq_shard_axis: str = "model") -> LaunchPlan:
+    """Deprecated: build a :class:`repro.plan.LaunchPlan` instead."""
+    warnings.warn(
+        "ops.DecodeContext is deprecated; build a repro.plan.LaunchPlan "
+        "(via Planner) and enter it with repro.plan.plan_scope",
+        DeprecationWarning, stacklevel=2)
+    base = metadata if metadata is not None else LaunchPlan(kind="decode")
+    return dataclasses.replace(
+        base, kind="decode", policy=policy,
+        num_cores=num_cores if num_cores is not None else base.num_cores,
+        min_splits=min_splits, split_constraint=split_constraint,
+        seq_shard_mesh=seq_shard_mesh, seq_shard_axis=seq_shard_axis)
 
 
-_CTX: list = [DecodeContext()]
+def AttnContext(seq_shard_mesh: Optional[object] = None,
+                seq_shard_axis: str = "model") -> LaunchPlan:
+    """Deprecated: build a prefill-kind :class:`repro.plan.LaunchPlan`."""
+    warnings.warn(
+        "ops.AttnContext is deprecated; build a prefill-kind "
+        "repro.plan.LaunchPlan and enter it with repro.plan.plan_scope",
+        DeprecationWarning, stacklevel=2)
+    return LaunchPlan(kind="prefill", seq_shard_mesh=seq_shard_mesh,
+                      seq_shard_axis=seq_shard_axis)
 
 
-@contextlib.contextmanager
-def decode_context(ctx: DecodeContext):
-    _CTX.append(ctx)
-    try:
-        yield
-    finally:
-        _CTX.pop()
+def decode_context(ctx: LaunchPlan):
+    """Deprecated alias of :func:`repro.plan.plan_scope`."""
+    return plan_scope(ctx)
 
 
-def current_decode_context() -> DecodeContext:
-    return _CTX[-1]
+def attention_context(ctx: LaunchPlan):
+    """Deprecated alias of :func:`repro.plan.plan_scope`."""
+    return plan_scope(ctx)
 
+
+def current_decode_context() -> LaunchPlan:
+    """Deprecated: the ambient decode plan (or an empty one)."""
+    plan = current_plan("decode")
+    return plan if plan is not None else LaunchPlan(kind="decode")
+
+
+def current_attention_context() -> LaunchPlan:
+    """Deprecated: the ambient prefill plan (or an empty one)."""
+    plan = current_plan("prefill")
+    return plan if plan is not None else LaunchPlan(kind="prefill")
+
+
+# ---------------------------------------------------------------------------
+# Observability: in-dispatch policy evaluations
+# ---------------------------------------------------------------------------
 
 # How many times the split policy ran INSIDE a decode-attention dispatch
 # (the paper's weaker "internal heuristic path").  Happens at trace time
@@ -91,46 +107,54 @@ def current_decode_context() -> DecodeContext:
 # leave this untouched; tests and benchmarks assert exactly that.
 _POLICY_EVALS: int = 0
 
+# The plan the most recent inline evaluation resolved to (regression
+# surface for the scope-precedence rules; trace-time only, like the
+# counter above).
+_LAST_INLINE: Optional[LaunchPlan] = None
+
 
 def policy_eval_count() -> int:
     return _POLICY_EVALS
 
 
 def reset_policy_eval_count() -> None:
-    global _POLICY_EVALS
+    global _POLICY_EVALS, _LAST_INLINE
     _POLICY_EVALS = 0
+    _LAST_INLINE = None
 
 
-@dataclass(frozen=True)
-class AttnContext:
-    """Trace-time config for full-sequence attention (train/prefill).
+def last_inline_plan() -> Optional[LaunchPlan]:
+    """The frozen plan produced by the most recent in-dispatch policy
+    evaluation (None if every launch so far consumed a precomputed plan)."""
+    return _LAST_INLINE
 
-    ``seq_shard_mesh`` turns on sequence-parallel attention: the QUERY
-    rows shard over ``seq_shard_axis`` and each chip runs blocked flash
-    on its chunk with the right ``q_offset`` (K/V stay whole).  This is
-    the §Perf fix for head counts that don't divide the model axis
-    (MiniCPM3: 40, Whisper: 20): head-replicated attention re-computes
-    everything ``axis``-fold; query-sharding recovers the 16x at the
-    price of one output all-gather per layer.
+
+def _resolve_policy(scope: Optional[LaunchPlan], plan: Optional[LaunchPlan],
+                    policy: str, num_cores: Optional[int]):
+    """Policy/num_cores precedence for the inline-heuristic path.
+
+    Call-site kwargs are the base; the ambient scope overrides them; an
+    explicit (context-only) plan overrides the scope.  An override's
+    policy applies whenever it was deliberately set — i.e. it differs
+    from the default OR its num_cores is pinned.  (The old DecodeContext
+    keyed the policy override off ``num_cores is not None`` alone, so a
+    context with ``policy="tpu_adaptive"`` but no num_cores was silently
+    ignored.)
     """
-    seq_shard_mesh: Optional[object] = None
-    seq_shard_axis: str = "model"
+    pol, cores = policy, num_cores
+    for over in (scope, plan):
+        if over is None:
+            continue
+        if over.num_cores is not None:
+            cores = over.num_cores
+        if over.policy != _DEFAULT_POLICY or over.num_cores is not None:
+            pol = over.policy
+    return pol, cores
 
 
-_ATTN_CTX: list = [AttnContext()]
-
-
-@contextlib.contextmanager
-def attention_context(ctx: AttnContext):
-    _ATTN_CTX.append(ctx)
-    try:
-        yield
-    finally:
-        _ATTN_CTX.pop()
-
-
-def current_attention_context() -> AttnContext:
-    return _ATTN_CTX[-1]
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill) attention
+# ---------------------------------------------------------------------------
 
 
 def attention(
@@ -144,16 +168,24 @@ def attention(
     impl: str = "xla",
     interpret: bool = True,
 ) -> jax.Array:
-    """Full (training / prefill) attention."""
-    actx = current_attention_context()
-    if (actx.seq_shard_mesh is not None and impl in ("xla", "naive")
-            and isinstance(q_offset, int)):
-        mesh = actx.seq_shard_mesh
-        n = mesh.shape[actx.seq_shard_axis]
+    """Full (training / prefill) attention.
+
+    An ambient prefill-kind :class:`LaunchPlan` (``plan_scope``) with
+    ``seq_shard_mesh`` turns on sequence-parallel attention: the QUERY
+    rows shard over ``seq_shard_axis`` and each chip runs blocked flash
+    on its chunk with the right ``q_offset`` (K/V stay whole).  This is
+    the §Perf fix for head counts that don't divide the model axis
+    (MiniCPM3: 40, Whisper: 20).
+    """
+    scope = current_plan("prefill")
+    if (scope is not None and scope.seq_shard_mesh is not None
+            and impl in ("xla", "naive") and isinstance(q_offset, int)):
+        mesh = scope.seq_shard_mesh
+        n = mesh.shape[scope.seq_shard_axis]
         if q.shape[1] % n == 0 and q.shape[1] >= 2 * n:
             return _attention_seqpar(
                 q, k, v, causal=causal, window=window, q_offset=q_offset,
-                mesh=mesh, axis=actx.seq_shard_axis, impl=impl)
+                mesh=mesh, axis=scope.seq_shard_axis, impl=impl)
     if impl == "pallas":
         if not isinstance(q_offset, int):
             raise ValueError("pallas prefill path needs a static q_offset")
@@ -200,15 +232,21 @@ def _attention_seqpar(q, k, v, *, causal, window, q_offset, mesh,
     return fn(q, k, v)
 
 
+# ---------------------------------------------------------------------------
+# Split-KV decode attention
+# ---------------------------------------------------------------------------
+
+
 def decode_attention(
     q: jax.Array,            # (B, Hq, D) — one new token per sequence
     k: jax.Array,            # (B, Lk, Hkv, D) padded KV cache
     v: jax.Array,
     kv_len: jax.Array,       # (B,) int32 valid lengths
     *,
-    metadata: Optional[SchedulerMetadata] = None,
+    plan: Optional[LaunchPlan] = None,
+    metadata: Optional[LaunchPlan] = None,   # legacy alias of ``plan``
     use_ctx_metadata: bool = True,
-    policy: str = "paper",
+    policy: str = _DEFAULT_POLICY,
     num_cores: Optional[int] = None,
     impl: str = "xla",
     interpret: bool = True,
@@ -216,46 +254,60 @@ def decode_attention(
 ) -> jax.Array:
     """Split-KV decode attention, split count from the paper's policy.
 
-    ``metadata`` (precomputed launch plan) is the paper's fast path; when
-    ``None`` the policy runs at trace time (internal-heuristic path).
-    ``num_splits`` is always a static Python int, so XLA / Pallas
-    specialize the schedule on it — changing the policy changes the
-    *compiled program*, which is exactly what the dry-run measures.
+    A frozen ``plan`` (precomputed :class:`LaunchPlan`) is the paper's
+    fast path; otherwise the policy runs at trace time (internal-
+    heuristic path).  ``num_splits`` is always a static Python int, so
+    XLA / Pallas specialize the schedule on it — changing the policy
+    changes the *compiled program*, which is exactly what the dry-run
+    measures.
 
-    An active :class:`DecodeContext` (serving engine) overrides policy /
-    num_cores and can pin the split axis onto a mesh axis (mesh-level
-    sequence split of the KV cache).
+    An ambient plan (:func:`repro.plan.plan_scope`, set by the serving
+    engine / serve-step builder) supplies the frozen decision when no
+    explicit one is passed, overrides policy / num_cores for inline
+    evaluation, and can pin the split axis onto a mesh axis (mesh-level
+    sequence split of the KV cache).  ``use_ctx_metadata=False`` opts a
+    differently-shaped launch (e.g. encdec cross-attention) out of the
+    ambient frozen plan.
     """
-    ctx = current_decode_context()
+    scope = current_plan("decode")
+    if plan is None:
+        plan = metadata
+    if (plan is None or not plan.frozen) and use_ctx_metadata \
+            and scope is not None and scope.frozen:
+        plan = scope
+
     B, Hq, D = q.shape
     _, Lk, Hkv, _ = k.shape
-    if metadata is None and use_ctx_metadata:
-        # ``use_ctx_metadata=False`` opts a differently-shaped launch
-        # (e.g. encdec cross-attention) out of the context's frozen plan
-        metadata = ctx.metadata
-    if metadata is None:
-        global _POLICY_EVALS
+    if plan is not None and plan.impl is not None:
+        impl = plan.impl
+    if plan is None or not plan.frozen:
+        global _POLICY_EVALS, _LAST_INLINE
         _POLICY_EVALS += 1
-        cores = ctx.num_cores if ctx.num_cores is not None else num_cores
-        pol = ctx.policy if ctx.num_cores is not None else policy
+        pol, cores = _resolve_policy(scope, plan, policy, num_cores)
         kwargs = {} if cores is None else {"num_cores": cores}
-        metadata = get_scheduler_metadata(
-            B, 1, Lk, Hq, Hkv, D, policy=pol, **kwargs)
-    s = max(1, min(metadata.num_splits, Lk))
-    if ctx.min_splits > 1:
+        plan = get_scheduler_metadata(B, 1, Lk, Hq, Hkv, D, policy=pol,
+                                      **kwargs)
+        _LAST_INLINE = plan
+    s = max(1, min(plan.num_splits, Lk))
+    min_splits = max(plan.min_splits,
+                     scope.min_splits if scope is not None else 1)
+    if min_splits > 1:
         # mesh-level split: round s up to a multiple of the sharded axis so
         # the S axis shards evenly (serving pads caches so min_splits | Lk)
-        s = -(-s // ctx.min_splits) * ctx.min_splits
+        s = -(-s // min_splits) * min_splits
         s = min(s, Lk)
+    split_constraint = plan.split_constraint
+    if split_constraint is None and scope is not None:
+        split_constraint = scope.split_constraint
 
     if impl == "pallas":
         assert scale is None, "pallas path computes its own scale"
         return _decode_pallas(q, k, v, kv_len, num_splits=s,
-                              interpret=interpret)
+                              block_k=plan.block_k, interpret=interpret)
     if impl == "naive":
         return ref.naive_decode_attention(q, k, v, kv_len, scale=scale)
     return ref.split_decode_xla(q, k, v, kv_len, s, scale=scale,
-                                shard_split=ctx.split_constraint)
+                                shard_split=split_constraint)
 
 
 def decode_attention_update(
@@ -269,16 +321,17 @@ def decode_attention_update(
     *,
     v_width: Optional[int] = None,  # MLA: v = k[..., :v_width]
     scale: Optional[float] = None,
-    metadata: Optional[SchedulerMetadata] = None,
+    plan: Optional[LaunchPlan] = None,
+    metadata: Optional[LaunchPlan] = None,   # legacy alias of ``plan``
     use_ctx_metadata: bool = True,
-    policy: str = "paper",
+    policy: str = _DEFAULT_POLICY,
     num_cores: Optional[int] = None,
     quant: Optional[dict] = None,   # int8 cache: {"k_s","v_s","k_ns","v_ns"}
 ) -> tuple:
     """Fused cache-write + split decode attention.
 
     Default path: functional update then :func:`decode_attention` (GSPMD
-    decides the collectives).  When the active :class:`DecodeContext` has
+    decides the collectives).  When the ambient plan has
     ``seq_shard_mesh``, the fused shard_map path runs instead: each chip
     writes only its own cache shard and computes a partial softmax over
     it; partials merge with a psum/pmax LSE combine — the paper's
@@ -286,11 +339,19 @@ def decode_attention_update(
 
     Returns (out (B, Hq, Dv), new_cache_k, new_cache_v).
     """
-    ctx = current_decode_context()
-    if ctx.seq_shard_mesh is not None:
+    scope = current_plan("decode")
+    if plan is None:
+        plan = metadata
+    # explicit plan overrides the ambient scope (same precedence as
+    # decode_attention); a plan without a mesh defers to the scope
+    if plan is not None and plan.seq_shard_mesh is not None:
+        shard = plan
+    else:
+        shard = scope
+    if shard is not None and shard.seq_shard_mesh is not None:
         return _decode_seqsharded(
             q, cache_k, cache_v, k_new, v_new, t, kv_len,
-            mesh=ctx.seq_shard_mesh, axis=ctx.seq_shard_axis,
+            mesh=shard.seq_shard_mesh, axis=shard.seq_shard_axis,
             v_width=v_width, scale=scale, quant=quant)
 
     # functional update + policy-split attention (auto-SPMD path)
@@ -312,14 +373,13 @@ def decode_attention_update(
         v_s = jax.vmap(upd2)(quant["v_s"], quant["v_ns"], t)
         kf = dequantize_kv(cache_k, k_s)
         vf = dequantize_kv(cache_v, v_s)
-        out = decode_attention(q, kf, vf, kv_len, scale=scale,
-                               metadata=metadata,
+        out = decode_attention(q, kf, vf, kv_len, scale=scale, plan=plan,
                                use_ctx_metadata=use_ctx_metadata,
                                policy=policy, num_cores=num_cores)
         return out, cache_k, cache_v, k_s, v_s
     v_used = cache_v if cache_v is not None else cache_k[..., :v_width]
     out = decode_attention(q, cache_k, v_used, kv_len, scale=scale,
-                           metadata=metadata,
+                           plan=plan,
                            use_ctx_metadata=use_ctx_metadata,
                            policy=policy, num_cores=num_cores)
     return out, cache_k, cache_v
@@ -439,6 +499,7 @@ def _prod(it) -> int:
 
 
 def _decode_pallas(q, k, v, kv_len, *, num_splits: int,
+                   block_k: Optional[int] = None,
                    interpret: bool) -> jax.Array:
     """GQA-pack, pad, run the Pallas split kernel, LSE-combine."""
     from repro.kernels.flash_decode import DEFAULT_BLOCK_K
@@ -449,7 +510,7 @@ def _decode_pallas(q, k, v, kv_len, *, num_splits: int,
     scale = D ** -0.5
     qp = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
 
-    block_k = min(DEFAULT_BLOCK_K, Lk)
+    block_k = min(block_k or DEFAULT_BLOCK_K, Lk)
     # pad cache so blocks divide evenly into splits
     blocks = -(-Lk // block_k)
     blocks = -(-blocks // num_splits) * num_splits

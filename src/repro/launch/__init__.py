@@ -1,2 +1,7 @@
 """Launchers: production mesh, dry-run, train, serve."""
-from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_name  # noqa: F401
+from repro.launch.mesh import (  # noqa: F401
+    make_host_mesh,
+    make_production_mesh,
+    mesh_name,
+    planner_for_mesh,
+)

@@ -158,6 +158,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "counted once); roofline uses the probe-corrected values")
     if kind == "decode":
         rec["mesh_splits"] = bundle.mesh_splits
+        # the frozen LaunchPlan the step was specialized on (Planner
+        # output; None for attention-free families / heuristic path)
+        rec["plan"] = (bundle.metadata.describe()
+                       if bundle.metadata is not None else None)
 
     if verbose:
         ma = rec.get("memory_analysis", {})

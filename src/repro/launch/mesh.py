@@ -1,14 +1,23 @@
-"""Production mesh construction.
+"""Production mesh construction + the mesh-level planner entry point.
 
 ``make_production_mesh`` is a FUNCTION (never a module-level constant) so
 importing this module never touches jax device state — the dry-run must
 set ``XLA_FLAGS`` before the first jax initialization.
+
+``planner_for_mesh`` is how every launcher (serve-step builder, dry-run,
+benchmarks) obtains the :class:`~repro.plan.Planner` that freezes
+mesh-level launch plans: the policy's ``num_cores`` becomes the chip
+count on the sharding axis, so the paper's occupancy decision runs with
+chips in place of SMs.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
 from repro.compat import make_mesh
+from repro.plan import Planner
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -27,3 +36,11 @@ def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
 
 def mesh_name(mesh: jax.sharding.Mesh) -> str:
     return "x".join(str(s) for s in mesh.devices.shape)
+
+
+def planner_for_mesh(mesh: jax.sharding.Mesh, *, policy: str = "paper",
+                     axis: str = "model",
+                     num_splits_override: Optional[int] = None) -> Planner:
+    """The planner whose machine model is ``axis`` of ``mesh``."""
+    return Planner(policy=policy, num_cores=mesh.shape[axis],
+                   num_splits_override=num_splits_override)

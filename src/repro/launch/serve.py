@@ -24,7 +24,8 @@ from repro.serving.engine import DecodeEngine, Request
 def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 policy: str = "paper", batch_slots: int = 4,
                 max_len: int = 256, d_model: int = 128,
-                num_layers: int = 2, seed: int = 0, log_fn=print):
+                num_layers: int = 2, seed: int = 0,
+                num_splits_override=None, log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -33,8 +34,11 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
             "exercised by the tests")
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
-    engine = DecodeEngine(model, ServeConfig(model=cfg, split_policy=policy),
-                          max_len=max_len, batch_slots=batch_slots)
+    engine = DecodeEngine(
+        model,
+        ServeConfig(model=cfg, split_policy=policy,
+                    num_splits_override=num_splits_override),
+        max_len=max_len, batch_slots=batch_slots)
     engine.load(params)
 
     rng = np.random.default_rng(seed)
@@ -51,6 +55,8 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                f"{c.tokens[:8]}{'...' if len(c.tokens) > 8 else ''}")
     log_fn(f"policy={policy}: {len(outs)} requests, {total_new} tokens "
            f"in {dt:.2f}s ({1e3 * dt / max(1, total_new):.1f} ms/token)")
+    log_fn("frozen plans (bucket -> num_splits): "
+           f"{engine.planned_splits()}")
     return outs
 
 
@@ -62,10 +68,15 @@ def main() -> None:
     ap.add_argument("--policy", default="paper",
                     choices=("fa3_baseline", "paper", "tpu_adaptive"))
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--splits", type=int, default=None,
+                    help="explicit num_splits override: the engine's "
+                         "Planner bypasses the policy (FA3's explicit "
+                         "num_splits argument)")
     args = ap.parse_args()
     run_serving(args.arch, num_requests=args.requests,
                 max_new=args.max_new, policy=args.policy,
-                batch_slots=args.slots)
+                batch_slots=args.slots,
+                num_splits_override=args.splits)
 
 
 if __name__ == "__main__":

@@ -19,9 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.scheduler_metadata import SchedulerMetadata
 from repro.kernels import ops
 from repro.models.common import ParamSpec, apply_rope
+from repro.plan import LaunchPlan
 
 Params = Dict[str, jax.Array]
 
@@ -162,9 +162,7 @@ def cross_attention_decode(
     x: jax.Array,                       # (B, 1, d)
     cross_cache: Dict[str, jax.Array],  # precomputed k/v (B, Lk, Hkv, D)
     *,
-    metadata: Optional[SchedulerMetadata] = None,
-    policy: str = "paper",
-    num_cores: Optional[int] = None,
+    plan: Optional[LaunchPlan] = None,
     impl: Optional[str] = None,
 ) -> jax.Array:
     """Decode-time cross attention against a FIXED-length memory.
@@ -179,12 +177,15 @@ def cross_attention_decode(
         q = q + params["bq"].astype(q.dtype)
     Lk = cross_cache["k"].shape[1]
     kv_len = jnp.full((B,), Lk, jnp.int32)
-    # encoder length != decoder cache length: an ambient DecodeContext
-    # plan was frozen for the SELF-attention shape and must not apply
+    # encoder length != decoder cache length: any plan frozen for the
+    # SELF-attention shape (explicit or ambient) must not apply — keep
+    # only the policy/num_cores overrides
+    if plan is not None and plan.frozen:
+        plan = plan.context_only()
     out = ops.decode_attention(
         q[:, 0], cross_cache["k"], cross_cache["v"], kv_len,
-        metadata=metadata, use_ctx_metadata=False, policy=policy,
-        num_cores=num_cores, impl=impl or cfg.attention_impl)
+        plan=plan, use_ctx_metadata=False,
+        impl=impl or cfg.attention_impl)
     return jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
 
 
@@ -259,9 +260,7 @@ def attention_decode(
     cache: Dict[str, jax.Array],
     t: jax.Array,                       # scalar int32: current position
     *,
-    metadata: Optional[SchedulerMetadata] = None,
-    policy: str = "paper",
-    num_cores: Optional[int] = None,
+    plan: Optional[LaunchPlan] = None,
     window: Optional[int] = None,
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
@@ -275,12 +274,12 @@ def attention_decode(
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     cache_len = cache["k"].shape[1]
     # windowed layers attend over the ring cache — a different L_K than
-    # the full-cache shape any frozen plan (explicit or ambient
-    # DecodeContext) describes, so both are dropped here rather than
-    # trusting every call site to know that
+    # the full-cache shape any frozen plan (explicit or ambient scope)
+    # describes, so the frozen decision is dropped here (policy overrides
+    # survive) rather than trusting every call site to know that
     use_ctx_md = window is None
-    if window is not None:
-        metadata = None
+    if window is not None and plan is not None and plan.frozen:
+        plan = plan.context_only()
     if window is not None:
         # local attention: ring-buffer cache sized to the window.  RoPE is
         # applied at absolute positions before the write, so slot order is
@@ -294,24 +293,20 @@ def attention_decode(
         cache = cache_update(cache, k_new[:, 0], v_new[:, 0], write_t)
         out = ops.decode_attention(
             q[:, 0], cache["k"], cache["v"], kv_len,
-            metadata=metadata, use_ctx_metadata=use_ctx_md,
-            policy=policy, num_cores=num_cores, impl="pallas")
+            plan=plan, use_ctx_metadata=use_ctx_md, impl="pallas")
     elif "k_s" in cache:                    # int8 KV cache (§Perf C.4)
         kq, kns = quantize_kv(k_new[:, 0])
         vq, vns = quantize_kv(v_new[:, 0])
         out, ck, cv, ks, vs = ops.decode_attention_update(
             q[:, 0], cache["k"], cache["v"], kq, vq, write_t, kv_len,
-            metadata=metadata, use_ctx_metadata=use_ctx_md,
-            policy=policy, num_cores=num_cores,
+            plan=plan, use_ctx_metadata=use_ctx_md,
             quant={"k_s": cache["k_s"], "v_s": cache["v_s"],
                    "k_ns": kns, "v_ns": vns})
         cache = {"k": ck, "v": cv, "k_s": ks, "v_s": vs}
     else:
         out, ck, cv = ops.decode_attention_update(
             q[:, 0], cache["k"], cache["v"], k_new[:, 0], v_new[:, 0],
-            write_t, kv_len, metadata=metadata,
-            use_ctx_metadata=use_ctx_md, policy=policy,
-            num_cores=num_cores)
+            write_t, kv_len, plan=plan, use_ctx_metadata=use_ctx_md)
         cache = {"k": ck, "v": cv}
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
     return y[:, None], cache

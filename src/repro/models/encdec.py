@@ -220,9 +220,7 @@ def encdec_decode_step(
     token: jax.Array,                   # (B,)
     t: jax.Array,
     *,
-    metadata=None,                      # frozen plan for SELF-attention
-    policy: str = "paper",
-    num_cores: Optional[int] = None,
+    plan=None,                          # frozen plan for SELF-attention
 ) -> Tuple[jax.Array, Pytree]:
     B = token.shape[0]
     tv = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
@@ -235,15 +233,14 @@ def encdec_decode_step(
         xc = shard_activation(xc, ("batch", None, None))
         h = apply_norm(lp["ln1"], xc, cfg.norm_eps)
         mix, new_self = attn_mod.attention_decode(
-            lp["self"], cfg, h, lc["self"], t, metadata=metadata,
-            policy=policy, num_cores=num_cores)
+            lp["self"], cfg, h, lc["self"], t, plan=plan)
         xc = xc + mix
         hx = apply_norm(lp["lnx"], xc, cfg.norm_eps)
         # cross-attention decodes against a FIXED encoder length — a
         # different workload shape, so the self-attn plan does not apply
+        # (cross_attention_decode keeps only the policy overrides)
         xc = xc + attn_mod.cross_attention_decode(
-            lp["cross"], cfg, hx, lc["cross"], policy=policy,
-            num_cores=num_cores)
+            lp["cross"], cfg, hx, lc["cross"], plan=plan)
         h2 = apply_norm(lp["ln2"], xc, cfg.norm_eps)
         xc = xc + apply_mlp(lp["ffn"], h2, cfg.mlp_kind)
         return xc, {"self": new_self, "cross": lc["cross"]}

@@ -212,31 +212,28 @@ def block_cache_specs(cfg: ModelConfig, kind: str, batch: int,
 
 def block_decode(params, cfg: ModelConfig, kind: str, x: jax.Array,
                  cache: Pytree, t: jax.Array, *,
-                 metadata=None, policy: str = "paper",
-                 num_cores: Optional[int] = None
-                 ) -> Tuple[jax.Array, Pytree]:
+                 plan=None) -> Tuple[jax.Array, Pytree]:
     """One block, one token. x: (B, 1, d).
 
-    ``metadata`` is the frozen :class:`SchedulerMetadata` launch plan
-    (static); it applies to full-attention layers, which all see the
-    same decode shape.  Window layers attend over the ring cache
-    (L_K = window, a DIFFERENT shape), so they fall back to an in-line
-    policy evaluation on their own static length instead of consuming a
-    plan frozen for the full cache.
+    ``plan`` is the frozen :class:`~repro.plan.LaunchPlan` (static); it
+    applies to full-attention layers, which all see the same decode
+    shape.  Window layers attend over the ring cache (L_K = window, a
+    DIFFERENT shape), so they fall back to an in-line policy evaluation
+    on their own static length instead of consuming a plan frozen for
+    the full cache (``attention_decode`` drops the frozen decision,
+    keeping the policy overrides).
     """
     h = apply_norm(params["ln1"], x, cfg.norm_eps)
     if kind == "attn":
         mix, cache = attn_mod.attention_decode(
-            params["mix"], cfg, h, cache, t, metadata=metadata,
-            policy=policy, num_cores=num_cores)
+            params["mix"], cfg, h, cache, t, plan=plan)
     elif kind == "attn_window":
         mix, cache = attn_mod.attention_decode(
-            params["mix"], cfg, h, cache, t, policy=policy,
-            num_cores=num_cores, window=cfg.hybrid.window)
+            params["mix"], cfg, h, cache, t, plan=plan,
+            window=cfg.hybrid.window)
     elif kind == "mla":
         mix, cache = mla_mod.mla_decode(
-            params["mix"], cfg, h, cache, t, metadata=metadata,
-            policy=policy, num_cores=num_cores)
+            params["mix"], cfg, h, cache, t, plan=plan)
     elif kind == "rglru":
         mix, cache = rglru_mod.apply_rglru_decode(params["mix"], cfg, h,
                                                   cache)
@@ -405,15 +402,13 @@ def lm_decode_step(
     token: jax.Array,                   # (B,) int32 — the new token
     t: jax.Array,                       # scalar int32 — its position
     *,
-    metadata=None,
-    policy: str = "paper",
-    num_cores: Optional[int] = None,
+    plan=None,
 ) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
     """One decode step. Returns (logits (B, vocab) f32, new caches).
 
-    ``metadata``: precomputed launch plan (the metadata-enabled path);
-    threaded into every attention block so the split policy never runs
-    inside this (traced) function.
+    ``plan``: precomputed :class:`~repro.plan.LaunchPlan` (the
+    metadata-enabled path); threaded into every attention block so the
+    split policy never runs inside this (traced) function.
     """
     x = embed_tokens(params["embed"], token[:, None])    # (B, 1, d)
     x = shard_activation(x, _ACT)
@@ -429,8 +424,7 @@ def lm_decode_step(
             new_lc = []
             for ki, kind in enumerate(pattern):
                 xc, c = block_decode(layer_params[ki], cfg, kind, xc,
-                                     layer_cache[ki], t, metadata=metadata,
-                                     policy=policy, num_cores=num_cores)
+                                     layer_cache[ki], t, plan=plan)
                 new_lc.append(c)
             return shard_activation(xc, _ACT), tuple(new_lc)
 

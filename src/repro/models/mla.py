@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.scheduler_metadata import SchedulerMetadata
 from repro.kernels import ops, ref
+from repro.plan import LaunchPlan
 from repro.models.common import ParamSpec, apply_rope, rms_norm
 from repro.sharding.ctx import shard_activation
 
@@ -156,9 +156,7 @@ def mla_decode(
     cache: Dict[str, jax.Array],
     t: jax.Array,
     *,
-    metadata: Optional[SchedulerMetadata] = None,
-    policy: str = "paper",
-    num_cores: Optional[int] = None,
+    plan: Optional[LaunchPlan] = None,
     impl: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     m = cfg.mla
@@ -181,8 +179,7 @@ def mla_decode(
     out_lat, lat, _ = ops.decode_attention_update(
         q_cat * scale, cache["latent"], None,
         new_entry[:, 0, None, :], None, tv, kv_len,
-        v_width=m.kv_lora_rank, scale=1.0, metadata=metadata,
-        policy=policy, num_cores=num_cores)                      # (B,H,r)
+        v_width=m.kv_lora_rank, scale=1.0, plan=plan)            # (B,H,r)
     cache = {"latent": lat}
     out = jnp.einsum("bhr,rhk->bhk", out_lat, params["v_up"])    # absorb W_uv
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])

@@ -98,25 +98,34 @@ class Model:
                                  kv_dtype=kv_dtype)
 
     def decode_step(self, params: Pytree, caches: Pytree, token: jax.Array,
-                    t: jax.Array, *, metadata=None, policy: str = "paper",
+                    t: jax.Array, *, plan=None, metadata=None,
+                    policy: str = "paper",
                     num_cores: Optional[int] = None
                     ) -> Tuple[jax.Array, Pytree]:
         """One decode step.
 
-        ``metadata``: a frozen :class:`SchedulerMetadata` launch plan
-        (static Python value, NOT a traced array).  When supplied, every
-        attention layer launches from it and the split policy is never
-        evaluated inside this function — callers jitting this must
-        specialize on the plan (close over it / static argnum).
+        ``plan``: a :class:`~repro.plan.LaunchPlan` (static Python value,
+        NOT a traced array).  When frozen, every attention layer launches
+        from it and the split policy is never evaluated inside this
+        function — callers jitting this must specialize on the plan
+        (close over it / static argnum).  A context-only plan (or the
+        legacy ``metadata`` / ``policy`` / ``num_cores`` kwargs, kept as
+        a migration shim) selects the internal-heuristic path with those
+        overrides.
         """
         cfg = self.cfg
+        if plan is None:
+            if metadata is not None:
+                plan = metadata
+            elif policy != "paper" or num_cores is not None:
+                from repro.plan import LaunchPlan
+                plan = LaunchPlan(kind="decode", policy=policy,
+                                  num_cores=num_cores)
         if cfg.family == "encdec":
             return encdec_mod.encdec_decode_step(
-                params, cfg, caches, token, t, metadata=metadata,
-                policy=policy, num_cores=num_cores)
+                params, cfg, caches, token, t, plan=plan)
         return lm_mod.lm_decode_step(params, cfg, caches, token, t,
-                                     metadata=metadata, policy=policy,
-                                     num_cores=num_cores)
+                                     plan=plan)
 
     # --- frontend stubs ---------------------------------------------------------
 

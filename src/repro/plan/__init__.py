@@ -1,0 +1,32 @@
+"""``repro.plan`` — the launch-planning subsystem (Spec -> Plan -> Cache).
+
+Single source of truth for "how do we launch attention", the way FA3 /
+vLLM route scheduling through ``get_scheduler_metadata``:
+
+- :class:`AttentionSpec`  — declarative description of one attention
+  launch (kind, shapes, window, MLA v_width, quantization, mesh axis).
+- :class:`Planner`        — compiles a spec into a frozen
+  :class:`LaunchPlan` through a pluggable policy backend
+  (``fa3_baseline`` / ``paper`` / ``tpu_adaptive`` / explicit
+  ``num_splits_override``), including the mesh-level decision
+  (:meth:`Planner.mesh_plan`).
+- :class:`LaunchPlan`     — the frozen launch decision: split count,
+  pack_gqa, impl, block_k, mesh min_splits / seq-shard, cache bucket.
+- :class:`PlanCache`      — reusable capacity-bounded plan cache with
+  built-in :class:`PlanCacheStats` (hits / misses / launches / trace /
+  persistent seen-bucket set).
+- :func:`plan_scope`      — the ONE ambient-context stack through which
+  serve-step builders inject a plan into traced code (replaces the old
+  ``DecodeContext`` / ``AttnContext`` dual stacks in ``kernels.ops``).
+
+The kernels (``repro.kernels.ops``), the serving engine
+(``repro.serving.engine``), the mesh serve-step builder
+(``repro.serving.decode_step``) and the benchmarks all consume plans
+through this package; ``repro.core.scheduler_metadata`` remains as a
+thin legacy shim over it.
+"""
+from repro.plan.cache import CacheInfo, PlanCache, PlanCacheStats  # noqa: F401
+from repro.plan.plan import LaunchPlan  # noqa: F401
+from repro.plan.planner import Planner  # noqa: F401
+from repro.plan.scope import current_plan, plan_scope  # noqa: F401
+from repro.plan.spec import AttentionSpec, bucket_seqlen  # noqa: F401

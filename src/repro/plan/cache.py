@@ -1,0 +1,129 @@
+"""PlanCache: capacity-bounded plan residency with built-in stats.
+
+One cache class serves both users that previously rolled their own:
+
+- the serving engine's per-bucket (plan, specialized jitted step) map
+  (formerly a private OrderedDict inside ``DecodeEngine``), and
+- the process-wide metadata cache (formerly an unbounded
+  ``functools.lru_cache`` in ``core.scheduler_metadata``).
+
+Eviction is LRU-by-insertion-or-touch; a re-visited evicted key
+re-builds (and, for the engine, re-specializes) and counts as a fresh
+miss — the capacity knob trades steady-state recompiles for bounded
+residency.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, namedtuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Hashable, List, Optional, Set
+
+CacheInfo = namedtuple("CacheInfo", ("hits", "misses", "maxsize",
+                                     "currsize"))
+
+
+@dataclass
+class PlanCacheStats:
+    """Observability for the metadata-enabled path.
+
+    ``misses`` is also the recompile count for a cache holding jitted
+    steps: every miss builds one new specialized entry, and nothing else
+    does.  With an unbounded cache, misses == distinct keys; under a
+    capacity bound, re-visiting an evicted key counts as a fresh miss.
+
+    ``trace`` keeps only the most recent ``TRACE_CAP`` launches (a
+    long-lived engine must not grow it unboundedly); ``seen_buckets`` is
+    the PERSISTENT set of every key ever launched, so
+    ``distinct_buckets`` stays exact forever — it must never be derived
+    from the trimmed trace.
+    """
+    TRACE_CAP = 4096
+
+    hits: int = 0
+    misses: int = 0
+    launches: Dict[Hashable, int] = field(default_factory=dict)
+    trace: List[Hashable] = field(default_factory=list)  # key per launch
+    seen_buckets: Set[Hashable] = field(default_factory=set)
+
+    @property
+    def total_launches(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def distinct_buckets(self) -> int:
+        return len(self.seen_buckets)
+
+    def record_launch(self, key: Hashable) -> None:
+        self.launches[key] = self.launches.get(key, 0) + 1
+        self.seen_buckets.add(key)
+        self.trace.append(key)
+        if len(self.trace) > 2 * self.TRACE_CAP:
+            del self.trace[:-self.TRACE_CAP]
+
+    def reset(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.launches.clear()
+        self.trace.clear()
+        self.seen_buckets.clear()
+
+
+class PlanCache:
+    """LRU cache of plans (or plan-derived values, e.g. jitted steps).
+
+    ``capacity`` of 0/None = unbounded.  ``track_launches=False`` keeps
+    only the hit/miss counters (the process-wide metadata cache does not
+    need per-key launch traces).
+    """
+
+    def __init__(self, capacity: Optional[int] = None, *,
+                 track_launches: bool = True):
+        self.capacity = capacity or None
+        self.track_launches = track_launches
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.stats = PlanCacheStats()
+
+    def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, building (and possibly
+        evicting the oldest entry) on a miss."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            value = self._entries[key]
+        else:
+            self.stats.misses += 1
+            value = build()
+            self._entries[key] = value
+            if self.capacity and len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+        if self.track_launches:
+            self.stats.record_launch(key)
+        return value
+
+    def peek(self, key: Hashable) -> Optional[Any]:
+        """Lookup without touching LRU order or stats."""
+        return self._entries.get(key)
+
+    def cache_info(self) -> CacheInfo:
+        """lru_cache-compatible counters (observability)."""
+        return CacheInfo(self.stats.hits, self.stats.misses,
+                         self.capacity, len(self._entries))
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats.reset()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return self._entries.keys()
+
+    def values(self):
+        return self._entries.values()
+
+    def items(self):
+        return self._entries.items()

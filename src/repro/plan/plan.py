@@ -1,0 +1,99 @@
+"""LaunchPlan: the frozen output of the planner.
+
+A plan is a static Python value — jitted steps close over it, so XLA
+specializes the whole program (kernel grid included) on the frozen
+``num_splits``.  It is a superset of the old ``SchedulerMetadata``:
+besides the split decision it carries the impl choice, the Pallas
+``block_k``, GQA packing, the cache-length bucket it covers, and the
+mesh-level realization (``mesh_splits`` / ``min_splits`` / seq-shard
+fields the serve-step builder pins into the ambient scope).
+
+``num_splits is None`` marks a *context-only* plan: nothing frozen, the
+split policy runs at trace time with this plan's ``policy`` /
+``num_cores`` (the paper's weaker "internal heuristic" path, kept for
+A/B).  ``plan.frozen`` distinguishes the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.split_policy import DecodeWorkload
+from repro.plan.spec import AttentionSpec
+
+
+@dataclass(frozen=True)
+class LaunchPlan:
+    """Frozen launch decision for one attention shape (or a context-only
+    override when ``num_splits`` is None)."""
+    kind: str = "decode"                  # decode | decode_update | prefill | cross
+    spec: Optional[AttentionSpec] = None
+    num_splits: Optional[int] = None      # None = not frozen (heuristic path)
+    pack_gqa: bool = False
+    policy: str = "paper"
+    num_cores: Optional[int] = None       # None = policy default
+    impl: Optional[str] = None            # xla | pallas | naive; None = caller's
+    block_k: Optional[int] = None         # Pallas KV block; None = kernel default
+    bucket: Optional[int] = None          # cache-length bucket this plan covers
+    # --- mesh-level realization (serve-step builder) -----------------------
+    mesh_splits: int = 1                  # ways the model axis seq-shards KV
+    min_splits: int = 1                   # kernel split rounded up to this
+    # applied to the (S, B, C, H, D) split-KV tensors and (S, ...) partials
+    split_constraint: Optional[Callable] = None
+    # fused shard_map sequence-sharded decode (optimized path)
+    seq_shard_mesh: Optional[object] = None
+    seq_shard_axis: str = "model"
+
+    # --- predicates --------------------------------------------------------
+
+    @property
+    def frozen(self) -> bool:
+        """True when the split decision is precomputed (metadata path)."""
+        return self.num_splits is not None
+
+    @property
+    def uses_split(self) -> bool:
+        return self.num_splits is not None and self.num_splits > 1
+
+    # --- legacy SchedulerMetadata surface ----------------------------------
+
+    @property
+    def workload(self) -> Optional[DecodeWorkload]:
+        """The policy-facing shape tuple (old ``SchedulerMetadata.workload``)."""
+        return None if self.spec is None else self.spec.workload()
+
+    # --- derivations -------------------------------------------------------
+
+    def context_only(self) -> "LaunchPlan":
+        """Drop the frozen decision, keep the overrides.
+
+        Used where a frozen plan must NOT transfer — e.g. cross-attention
+        decodes against the encoder length, window layers against the
+        ring cache: different shapes than the plan was frozen for — while
+        the policy / num_cores / mesh context still apply.
+        """
+        return dataclasses.replace(self, spec=None, num_splits=None,
+                                   bucket=None)
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-safe summary (dry-run records, logs)."""
+        d: Dict[str, Any] = {
+            "kind": self.kind, "policy": self.policy,
+            "num_splits": self.num_splits, "pack_gqa": self.pack_gqa,
+            "mesh_splits": self.mesh_splits,
+        }
+        if self.num_cores is not None:
+            d["num_cores"] = self.num_cores
+        if self.bucket is not None:
+            d["bucket"] = self.bucket
+        if self.impl is not None:
+            d["impl"] = self.impl
+        if self.block_k is not None:
+            d["block_k"] = self.block_k
+        if self.spec is not None:
+            w = self.spec.workload()
+            d["shape"] = (f"B{w.batch} Lq{w.seqlen_q} Lk{w.seqlen_k} "
+                          f"Hq{w.num_heads_q} Hkv{w.num_heads_kv} "
+                          f"D{w.head_dim}")
+        return d

@@ -1,0 +1,107 @@
+"""Planner: compiles an AttentionSpec into a frozen LaunchPlan.
+
+The policy backend is pluggable by name (``fa3_baseline`` / ``paper`` /
+``tpu_adaptive`` — the registry in ``repro.core.split_policy``) or
+bypassed entirely with ``num_splits_override`` (FA3's explicit
+``num_splits`` argument; benchmarks use it for forced-split sweeps).
+
+Two planning levels share one entry point:
+
+- :meth:`Planner.plan`       — the kernel-level decision (the paper's
+  split count) for one launch shape.
+- :meth:`Planner.mesh_plan`  — the same decision lifted to a mesh axis:
+  how many ways the KV cache sequence-shards across chips
+  (``mesh_splits``), including the storage-forced case where H_KV does
+  not divide the axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.split_policy import (
+    DEFAULT_NUM_CORES,
+    choose_mesh_splits,
+    choose_num_splits,
+    get_policy,
+)
+from repro.plan.plan import LaunchPlan
+from repro.plan.spec import AttentionSpec
+
+
+@dataclass(frozen=True)
+class Planner:
+    """Pluggable policy backend -> frozen launch plans.
+
+    ``num_cores = None`` means "the policy's default machine model"
+    (:data:`DEFAULT_NUM_CORES`); mesh planning substitutes the axis size.
+    """
+    policy: str = "paper"
+    num_cores: Optional[int] = None
+    num_splits_override: Optional[int] = None
+    pack_gqa: Optional[bool] = None       # None = pack iff H_Q > H_KV
+    impl: Optional[str] = None            # xla | pallas | naive
+    block_k: Optional[int] = None         # Pallas KV block width
+
+    def __post_init__(self):
+        get_policy(self.policy)           # fail fast on unknown backends
+
+    # --- kernel-level planning ---------------------------------------------
+
+    def plan(self, spec: AttentionSpec, *,
+             bucket: Optional[int] = None) -> LaunchPlan:
+        """Freeze the launch decision for one attention shape."""
+        w = spec.workload()
+        cores = self.num_cores if self.num_cores is not None \
+            else DEFAULT_NUM_CORES
+        if spec.kind == "prefill":
+            s = 1                         # prefill never splits KV
+        elif self.num_splits_override is not None:
+            s = max(1, min(int(self.num_splits_override), w.num_n_blocks))
+        else:
+            s = choose_num_splits(w, policy=self.policy, num_cores=cores)
+        pack = self.pack_gqa if self.pack_gqa is not None \
+            else spec.num_heads_q > spec.num_heads_kv
+        return LaunchPlan(kind=spec.kind, spec=spec, num_splits=s,
+                          pack_gqa=pack, policy=self.policy,
+                          num_cores=cores, impl=self.impl,
+                          block_k=self.block_k, bucket=bucket)
+
+    def context(self, kind: str = "decode", **overrides) -> LaunchPlan:
+        """A context-only plan: nothing frozen, policy runs at trace time
+        with this planner's backend (the internal-heuristic A/B path)."""
+        return LaunchPlan(kind=kind, policy=self.policy,
+                          num_cores=self.num_cores, impl=self.impl,
+                          block_k=self.block_k, **overrides)
+
+    # --- mesh-level planning -----------------------------------------------
+
+    def mesh_plan(self, spec: AttentionSpec, *, axis_size: int,
+                  axis: str = "model") -> LaunchPlan:
+        """Kernel plan + the mesh-level sequence-shard decision.
+
+        Two reasons to shard the cache over ``axis`` (``mesh_splits`` =
+        axis size): (a) the occupancy policy says the axis is starved —
+        the paper's grid starvation with chips in place of SMs; or (b)
+        *storage*: H_KV doesn't divide the axis, so head-sharding
+        degenerates to full replication and sequence-sharding is
+        strictly better regardless of the compute policy.  The split is
+        binary on a fixed mesh (any split -> whole-axis shard; fractional
+        axis splits need sub-axes, recorded as future work).
+        """
+        w = spec.workload()
+        mesh_spec = dataclasses.replace(spec, mesh_axis=axis,
+                                        mesh_axis_size=axis_size)
+        planner = dataclasses.replace(self, num_cores=axis_size)
+        if spec.num_heads_kv % axis_size != 0:      # storage-driven (b)
+            planner = dataclasses.replace(planner,
+                                          num_splits_override=axis_size)
+            p = planner.plan(mesh_spec)
+            return dataclasses.replace(p, mesh_splits=axis_size,
+                                       seq_shard_axis=axis)
+        p = planner.plan(mesh_spec)
+        s_mesh = choose_mesh_splits(w, axis_size, policy=self.policy)
+        return dataclasses.replace(
+            p, mesh_splits=axis_size if s_mesh > 1 else 1,
+            seq_shard_axis=axis)

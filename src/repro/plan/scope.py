@@ -1,0 +1,50 @@
+"""plan_scope: the ONE ambient plan stack.
+
+Replaces the two thread-local context stacks that used to live in
+``kernels.ops`` (``DecodeContext`` for decode launches, ``AttnContext``
+for full-sequence attention).  A serve-step builder pushes one
+:class:`~repro.plan.LaunchPlan`; every attention op traced under the
+scope reads it back filtered by launch kind, so a decode plan never
+leaks into a prefill launch and vice versa.
+
+The stack is trace-time state (plans are static Python values), exactly
+like the old contexts — nothing here is traced.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional
+
+from repro.plan.plan import LaunchPlan
+
+_SCOPE: List[Optional[LaunchPlan]] = [None]
+
+
+@contextlib.contextmanager
+def plan_scope(plan: Optional[LaunchPlan]):
+    """Make ``plan`` the ambient launch plan for ops traced inside.
+
+    ``plan=None`` pushes an empty scope (shadowing any outer plan), which
+    keeps nesting semantics uniform for callers that conditionally have
+    a plan.
+    """
+    _SCOPE.append(plan)
+    try:
+        yield plan
+    finally:
+        _SCOPE.pop()
+
+
+def current_plan(kind: Optional[str] = None) -> Optional[LaunchPlan]:
+    """The innermost ambient plan, filtered by launch-kind family.
+
+    ``kind="prefill"`` only returns prefill plans; any decode-family kind
+    (``decode`` / ``decode_update`` / ``cross``) only returns
+    decode-family plans.  ``kind=None`` returns whatever is on top.
+    """
+    plan = _SCOPE[-1]
+    if plan is None or kind is None:
+        return plan
+    if (plan.kind == "prefill") != (kind == "prefill"):
+        return None
+    return plan

@@ -1,0 +1,85 @@
+"""AttentionSpec: the declarative input to the planner.
+
+A spec answers "WHAT are we launching" — kind and shapes — and nothing
+about HOW (splits, impl, sharding); the :class:`~repro.plan.Planner`
+compiles the how into a :class:`~repro.plan.LaunchPlan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.split_policy import KV_BLOCK, DecodeWorkload
+
+# The launch kinds the planner understands.  ``decode`` and
+# ``decode_update`` share one decision surface (the paper's split-KV
+# policy); ``cross`` is decode against a fixed encoder memory (same
+# policy, different L_K); ``prefill`` never splits KV.
+KINDS = ("decode", "decode_update", "prefill", "cross")
+
+
+def bucket_seqlen(seqlen_k: int, bucket: int = KV_BLOCK) -> int:
+    """Round a cache length up to its block bucket so plan lookups hit.
+
+    The serving engine quantizes L_K to the KV block width: the policy's
+    decision only depends on ``num_n_blocks``, so this is lossless.
+    """
+    return ((max(1, seqlen_k) + bucket - 1) // bucket) * bucket
+
+
+@dataclass(frozen=True)
+class AttentionSpec:
+    """One attention launch, declaratively.
+
+    Mirrors the paper's shape tuple (Batch, L_Q, L_K, H_Q, H_KV, D) plus
+    the launch kind and the launch-affecting extras: sliding ``window``
+    (ring cache => L_K = window), MLA ``v_width`` (v = k[..., :v_width]),
+    int8-``quantized`` KV, and the mesh axis the launch may shard over.
+    """
+    kind: str                           # one of KINDS
+    batch: int
+    seqlen_q: int
+    seqlen_k: int
+    num_heads_q: int
+    num_heads_kv: int
+    head_dim: int = 128
+    window: Optional[int] = None
+    v_width: Optional[int] = None       # MLA latent: v ⊂ k
+    quantized: bool = False             # int8 KV cache
+    mesh_axis: Optional[str] = None     # sharding axis name (mesh plans)
+    mesh_axis_size: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown attention kind {self.kind!r}; known: {KINDS}")
+
+    def workload(self) -> DecodeWorkload:
+        """The policy-facing shape tuple (what the split heuristic reads)."""
+        lk = self.seqlen_k if self.window is None \
+            else min(self.window, self.seqlen_k)
+        return DecodeWorkload(self.batch, self.seqlen_q, lk,
+                              self.num_heads_q, self.num_heads_kv,
+                              self.head_dim)
+
+    def bucketed(self, bucket: int = KV_BLOCK) -> "AttentionSpec":
+        """Spec with L_K rounded up to its cache-length bucket."""
+        return dataclasses.replace(
+            self, seqlen_k=bucket_seqlen(self.seqlen_k, bucket))
+
+    # --- convenience constructors ------------------------------------------
+
+    @classmethod
+    def decode(cls, batch: int, seqlen_k: int, num_heads_q: int,
+               num_heads_kv: int, head_dim: int = 128,
+               **kw) -> "AttentionSpec":
+        """Pure decode: one new query token against a KV cache."""
+        return cls("decode", batch, 1, seqlen_k, num_heads_q, num_heads_kv,
+                   head_dim, **kw)
+
+    @classmethod
+    def from_workload(cls, w: DecodeWorkload, kind: str = "decode",
+                      **kw) -> "AttentionSpec":
+        return cls(kind, w.batch, w.seqlen_q, w.seqlen_k, w.num_heads_q,
+                   w.num_heads_kv, w.head_dim, **kw)

@@ -1,8 +1,10 @@
 """Serving: policy-driven batched decode (mesh-level split) + engine."""
 from repro.serving.decode_step import (  # noqa: F401
     ServeStepBundle,
+    attention_spec,
     build_serve_step,
     decode_workload,
+    mesh_launch_plan,
     mesh_plan,
     mesh_split_decision,
     serve_param_rules,

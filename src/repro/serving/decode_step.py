@@ -11,15 +11,17 @@ batch rides the data axes; the **model axis** is where starvation lives:
   over its shard, and the LSE-combine algebra runs as an all-reduce —
   identical math to the paper's split-KV, with chips in place of SMs.
 
-``build_serve_step`` asks the selected policy (fa3_baseline / paper /
-tpu_adaptive) whether to split, builds the cache shardings accordingly,
-and pins the split axis inside the decode ops via
-:class:`~repro.kernels.ops.DecodeContext`.  The decision is *per
+``build_serve_step`` freezes one :class:`~repro.plan.LaunchPlan`
+through the mesh-level :class:`~repro.plan.Planner`
+(:func:`~repro.launch.mesh.planner_for_mesh`), builds the cache
+shardings from its ``mesh_splits`` decision, and pins the plan into the
+decode ops via :func:`repro.plan.plan_scope`.  The decision is *per
 (arch, shape)* and entirely static — the A/B between policies compiles
 two different programs, which the dry-run + roofline compare.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -28,11 +30,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ServeConfig, ShapeConfig
-from repro.core.scheduler_metadata import SchedulerMetadata, get_scheduler_metadata
-from repro.core.split_policy import DecodeWorkload, choose_mesh_splits
-from repro.kernels import ops
+from repro.core.split_policy import DecodeWorkload
+from repro.launch.mesh import planner_for_mesh
 from repro.models.common import abstract_params
 from repro.models.registry import Model
+from repro.plan import AttentionSpec, LaunchPlan, plan_scope
 from repro.sharding.ctx import activation_mesh
 from repro.sharding.rules import (
     ShardingRules,
@@ -68,57 +70,48 @@ def effective_kv_heads(cfg: ModelConfig) -> int:
     return cfg.num_kv_heads
 
 
-def decode_workload(cfg: ModelConfig, shape: ShapeConfig) -> DecodeWorkload:
-    lk = shape.seq_len
-    if cfg.family == "hybrid":
-        lk = min(cfg.hybrid.window, lk)
-    return DecodeWorkload(
-        batch=1,                              # per-replica view of the axis
-        seqlen_q=1,
-        seqlen_k=lk,
-        num_heads_q=cfg.num_heads,
-        num_heads_kv=effective_kv_heads(cfg),
-        head_dim=cfg.resolved_head_dim,
+def attention_spec(cfg: ModelConfig, shape: ShapeConfig) -> AttentionSpec:
+    """The per-replica decode launch spec for one (arch, shape) cell."""
+    return AttentionSpec.decode(
+        1,                                    # per-replica view of the axis
+        shape.seq_len,
+        cfg.num_heads,
+        effective_kv_heads(cfg),
+        cfg.resolved_head_dim,
+        window=cfg.hybrid.window if cfg.family == "hybrid" else None,
+        v_width=cfg.mla.kv_lora_rank if cfg.mla is not None else None,
     )
 
 
-def mesh_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-              policy: str) -> Tuple[Optional[SchedulerMetadata], int]:
-    """The mesh-level launch plan: (frozen metadata, sequence-shard ways).
+def decode_workload(cfg: ModelConfig, shape: ShapeConfig) -> DecodeWorkload:
+    return attention_spec(cfg, shape).workload()
 
-    This is the serving engine's plan-cache idea applied once, statically,
-    at build time: ``get_scheduler_metadata`` freezes the split decision
-    for the (arch, shape) cell and BOTH consumers read it — the sharding
-    layout below and the decode ops inside the jitted step (via
-    :class:`~repro.kernels.ops.DecodeContext.metadata`), so the policy is
-    never re-evaluated inside the traced program.
 
-    Two reasons to split: (a) the paper's occupancy policy says the model
-    axis is starved, or (b) *storage*: when H_KV doesn't divide the model
-    axis, head-sharding falls back to full replication (whisper kv=20 on
-    a 16-axis: 42 GiB/device of cache, measured) — sequence-sharding is
-    then strictly better regardless of the compute policy.
+def mesh_launch_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     policy: str) -> Optional[LaunchPlan]:
+    """The mesh-level launch plan, frozen once at build time.
+
+    This is the serving engine's plan-cache idea applied statically: the
+    mesh :class:`~repro.plan.Planner` freezes the split decision for the
+    (arch, shape) cell and BOTH consumers read it — the sharding layout
+    in :func:`build_serve_step` (via ``plan.mesh_splits``) and the decode
+    ops inside the jitted step (via :func:`repro.plan.plan_scope`) — so
+    the policy is never re-evaluated inside the traced program.  See
+    :meth:`repro.plan.Planner.mesh_plan` for the occupancy- vs
+    storage-driven split reasons.  ``None`` for attention-free families.
     """
     if cfg.family == "ssm":
-        return None, 1                        # attention-free (DESIGN.md §5)
-    model_ax = mesh.shape["model"]
-    w = decode_workload(cfg, shape)
-    kv = effective_kv_heads(cfg)
-    if kv % model_ax != 0:                    # storage-driven split (b)
-        md = get_scheduler_metadata(
-            w.batch, 1, w.seqlen_k, w.num_heads_q, w.num_heads_kv,
-            w.head_dim, policy=policy, num_cores=model_ax,
-            num_splits_override=model_ax)
-        return md, model_ax
-    md = get_scheduler_metadata(
-        w.batch, 1, w.seqlen_k, w.num_heads_q, w.num_heads_kv,
-        w.head_dim, policy=policy, num_cores=model_ax)
-    # the SHARD decision keeps the divisor constraint (an axis with no
-    # usable divisor <= the split count stays head-sharded); binary
-    # realization on a fixed mesh: any split -> whole-axis shard
-    # (fractional axis splits need sub-axes; recorded as future work)
-    s_mesh = choose_mesh_splits(w, model_ax, policy=policy)
-    return md, (model_ax if s_mesh > 1 else 1)
+        return None                           # attention-free (DESIGN.md §5)
+    return planner_for_mesh(mesh, policy=policy).mesh_plan(
+        attention_spec(cfg, shape), axis_size=mesh.shape["model"],
+        axis="model")
+
+
+def mesh_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              policy: str) -> Tuple[Optional[LaunchPlan], int]:
+    """Legacy surface: (frozen plan, sequence-shard ways)."""
+    plan = mesh_launch_plan(cfg, shape, mesh, policy)
+    return plan, (plan.mesh_splits if plan is not None else 1)
 
 
 def mesh_split_decision(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
@@ -137,9 +130,15 @@ class ServeStepBundle:
     cache_shardings: Pytree
     max_len: int
     mesh_splits: int                          # 1 = head-sharded path
-    # frozen launch plan the step was specialized on (None = the
-    # internal-heuristic path or an attention-free family)
-    metadata: Optional[SchedulerMetadata] = None
+    # launch plan the step was specialized on (context-only under the
+    # internal-heuristic A/B path; None for attention-free families)
+    plan: Optional[LaunchPlan] = None
+
+    @property
+    def metadata(self) -> Optional[LaunchPlan]:
+        """Legacy name: the frozen plan (None when nothing is frozen)."""
+        return self.plan if (self.plan is not None
+                             and self.plan.frozen) else None
 
     def abstract_args(self):
         aparams = abstract_params(self.model.param_specs())
@@ -159,9 +158,12 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
     # cache length padded so a whole-axis sequence shard divides evenly
     max_len = -(-L // model_ax) * model_ax
 
-    metadata, splits = mesh_plan(cfg, scfg.shape, mesh, scfg.split_policy)
-    if not scfg.use_scheduler_metadata:
-        metadata = None                   # internal-heuristic A/B path
+    plan = mesh_launch_plan(cfg, scfg.shape, mesh, scfg.split_policy)
+    splits = plan.mesh_splits if plan is not None else 1
+    if plan is not None and not scfg.use_scheduler_metadata:
+        # internal-heuristic A/B path: drop the frozen decision, keep the
+        # policy / num_cores overrides and the mesh-shard realization
+        plan = plan.context_only()
     seq_split = splits > 1
 
     prules = serve_param_rules()
@@ -181,11 +183,14 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
             x, NamedSharding(mesh, P(*( ("model",) +
                                         (None,) * (x.ndim - 1) ))))
 
+    # the scope realizes the plan's mesh decision on THIS mesh: fused =
+    # shard_map cache-write + psum LSE combine; auto = GSPMD split-axis
+    # constraint with the kernel split rounded up to the axis
     use_fused = seq_split and scfg.decode_impl == "fused"
-    ctx = ops.DecodeContext(
-        policy=scfg.split_policy,
-        num_cores=model_ax,
-        metadata=metadata,
+    scope = plan if plan is not None else LaunchPlan(
+        kind="decode", policy=scfg.split_policy, num_cores=model_ax)
+    scope = dataclasses.replace(
+        scope,
         min_splits=1 if use_fused else splits,
         split_constraint=(None if use_fused else
                           (constraint if seq_split else None)),
@@ -194,10 +199,9 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
     )
 
     def step(params, caches, token, t):
-        with ops.decode_context(ctx), activation_mesh(mesh):
+        with plan_scope(scope), activation_mesh(mesh):
             logits, caches = model.decode_step(
-                params, caches, token, t, metadata=metadata,
-                policy=scfg.split_policy, num_cores=model_ax)
+                params, caches, token, t, plan=scope)
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, caches
 
@@ -210,7 +214,7 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
         donate_argnums=(1,),
     )
     return ServeStepBundle(model, scfg, mesh, jitted, pshard, cshard,
-                           max_len, splits, metadata)
+                           max_len, splits, scope)
 
 
 # ---------------------------------------------------------------------------
@@ -264,12 +268,15 @@ def build_prefill_step(model: Model, scfg: ServeConfig, mesh: Mesh
         bshapes[k] = jax.ShapeDtypeStruct(shp, jnp.dtype(dt))
     bshard = bshard_fn(mesh, bshapes)
 
-    attn_ctx = (ops.AttnContext(seq_shard_mesh=mesh)
-                if cfg.num_heads % mesh.shape["model"] != 0
-                else ops.AttnContext())
+    # prefill-kind plan: sequence-parallel attention when head counts
+    # don't divide the model axis (MiniCPM3: 40, Whisper: 20)
+    prefill_plan = LaunchPlan(
+        kind="prefill",
+        seq_shard_mesh=(mesh if cfg.num_heads % mesh.shape["model"] != 0
+                        else None))
 
     def step(params, batch):
-        with activation_mesh(mesh), ops.attention_context(attn_ctx):
+        with activation_mesh(mesh), plan_scope(prefill_plan):
             logits, caches = model.prefill(params, batch, max_len)
             next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, caches

@@ -31,16 +31,20 @@ realizes that as a three-stage flow:
    the jitted body the policy is evaluated **zero** times
    (``kernels.ops.policy_eval_count`` stays flat — asserted in tests).
 
-Plan-cache observability lives in :class:`PlanCacheStats`
-(``engine.stats``): hits/misses, per-bucket launch counters, and the
-full plans-used trace, so tests and benchmarks can assert the metadata
-path was actually exercised.  ``use_scheduler_metadata=False`` keeps the
+The planning itself lives in ``repro.plan``: the engine owns a
+:class:`~repro.plan.Planner` (policy backend + optional
+``num_splits_override`` from :class:`ServeConfig`) and a shared
+:class:`~repro.plan.PlanCache` of per-bucket (plan, jitted step)
+specializations.  Observability lives in the cache's built-in
+:class:`~repro.plan.PlanCacheStats` (``engine.stats``): hits/misses,
+per-bucket launch counters, the recent-launch trace, and the persistent
+seen-bucket set, so tests and benchmarks can assert the metadata path
+was actually exercised.  ``use_scheduler_metadata=False`` keeps the
 paper's weaker "internal heuristic" path for A/B comparison.
 """
 from __future__ import annotations
 
 import functools
-from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -49,12 +53,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
-from repro.core.scheduler_metadata import (
-    SchedulerMetadata,
-    bucket_seqlen,
-    get_scheduler_metadata,
-)
 from repro.models.registry import Model
+from repro.plan import (
+    AttentionSpec,
+    LaunchPlan,
+    PlanCache,
+    PlanCacheStats,
+    Planner,
+    bucket_seqlen,
+)
 
 Pytree = Any
 
@@ -76,46 +83,15 @@ class Completion:
 
 
 @dataclass
-class PlanCacheStats:
-    """Observability for the metadata-enabled path.
-
-    ``misses`` is also the recompile count: every miss builds one new
-    specialized (plan, jitted step) pair, and nothing else does.  With
-    an unbounded plan cache (the default) misses == distinct buckets;
-    under a ``plan_cache_capacity`` bound, re-visiting an evicted
-    bucket re-specializes and counts as a fresh miss — the capacity
-    knob trades steady-state recompiles for bounded residency.
-    """
-    # trace keeps the most recent TRACE_CAP steps (a long-lived engine
-    # must not grow it unboundedly); counters are exact forever
-    TRACE_CAP = 4096
-
-    hits: int = 0
-    misses: int = 0
-    launches: Dict[int, int] = field(default_factory=dict)  # bucket -> n
-    trace: List[int] = field(default_factory=list)          # bucket per step
-
-    @property
-    def total_launches(self) -> int:
-        return self.hits + self.misses
-
-    @property
-    def distinct_buckets(self) -> int:
-        return len(set(self.trace))
-
-    def reset(self) -> None:
-        self.hits = 0
-        self.misses = 0
-        self.launches.clear()
-        self.trace.clear()
-
-
-@dataclass
 class _Plan:
     """One plan-cache entry: a frozen launch plan + its specialized step."""
     bucket: int                      # bucketed L_K this plan covers
-    metadata: SchedulerMetadata
-    step: Any                        # jitted, specialized on ``metadata``
+    plan: LaunchPlan
+    step: Any                        # jitted, specialized on ``plan``
+
+    @property
+    def metadata(self) -> LaunchPlan:   # legacy field name
+        return self.plan
 
 
 class DecodeEngine:
@@ -134,12 +110,18 @@ class DecodeEngine:
         self.plan_capacity = scfg.plan_cache_capacity
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
-        self._plans: "OrderedDict[int, _Plan]" = OrderedDict()
-        self.stats = PlanCacheStats()
+        self.planner = Planner(
+            policy=self.policy,
+            num_splits_override=scfg.num_splits_override)
+        self._plans: PlanCache = PlanCache(self.plan_capacity)
         # internal-heuristic fallback: ONE step for all lengths, policy
         # evaluated at trace time on the padded cache length (the A/B
         # baseline the paper measures its metadata path against)
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+    @property
+    def stats(self) -> PlanCacheStats:
+        return self._plans.stats
 
     # --- state ----------------------------------------------------------------
 
@@ -154,45 +136,39 @@ class DecodeEngine:
         return bucket_seqlen(min(int(t_max) + 1, self.max_len),
                              self.bucket_width)
 
-    def _metadata(self, t_max: int) -> SchedulerMetadata:
-        """Compute (not cache) the launch plan for the current bucket."""
-        return get_scheduler_metadata(
-            self.B, 1, self._bucket(t_max), self.cfg.num_heads,
+    def _spec(self, t_max: int) -> AttentionSpec:
+        """Declarative launch spec for the current bucket."""
+        return AttentionSpec.decode(
+            self.B, self._bucket(t_max), self.cfg.num_heads,
             1 if self.cfg.mla else self.cfg.num_kv_heads,
-            self.cfg.resolved_head_dim, policy=self.policy)
+            self.cfg.resolved_head_dim)
+
+    def _metadata(self, t_max: int) -> LaunchPlan:
+        """Compute (not cache) the launch plan for the current bucket."""
+        lk = self._bucket(t_max)
+        return self.planner.plan(self._spec(t_max), bucket=lk)
 
     def _plan(self, t_max: int) -> _Plan:
         """Plan-cache lookup: one specialized jitted step per bucket."""
         lk = self._bucket(t_max)
-        plan = self._plans.get(lk)
-        if plan is None:
-            self.stats.misses += 1
-            md = self._metadata(t_max)
+
+        def build() -> _Plan:
+            plan = self._metadata(t_max)
             step = jax.jit(
-                functools.partial(self._step_impl, metadata=md),
+                functools.partial(self._step_impl, plan=plan),
                 donate_argnums=(1,))
-            plan = _Plan(lk, md, step)
-            self._plans[lk] = plan
-            if self.plan_capacity and len(self._plans) > self.plan_capacity:
-                self._plans.popitem(last=False)
-        else:
-            self._plans.move_to_end(lk)
-            self.stats.hits += 1
-        self.stats.launches[lk] = self.stats.launches.get(lk, 0) + 1
-        self.stats.trace.append(lk)
-        if len(self.stats.trace) > 2 * PlanCacheStats.TRACE_CAP:
-            del self.stats.trace[:-PlanCacheStats.TRACE_CAP]
-        return plan
+            return _Plan(lk, plan, step)
+
+        return self._plans.get_or_build(lk, build)
 
     def planned_splits(self) -> Dict[int, int]:
         """bucket -> frozen num_splits, for every resident plan."""
-        return {lk: p.metadata.num_splits for lk, p in self._plans.items()}
+        return {lk: p.plan.num_splits for lk, p in self._plans.items()}
 
     def _step_impl(self, params, caches, token, t,
-                   metadata: Optional[SchedulerMetadata] = None):
+                   plan: Optional[LaunchPlan] = None):
         logits, caches = self.model.decode_step(
-            params, caches, token, t, metadata=metadata,
-            policy=self.policy)
+            params, caches, token, t, plan=plan, policy=self.policy)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
 
     # --- scheduling -------------------------------------------------------------

@@ -191,13 +191,14 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh
     # sequence-parallel attention when heads can't shard the model axis
     # (§Perf hillclimb A: head-replicated attention wastes axis-fold
     # compute; query-sharding recovers it)
-    from repro.kernels import ops as _ops
-    attn_ctx = (_ops.AttnContext(seq_shard_mesh=mesh)
-                if cfg.num_heads % mesh.shape["model"] != 0
-                else _ops.AttnContext())
+    from repro.plan import LaunchPlan, plan_scope
+    attn_plan = LaunchPlan(
+        kind="prefill",
+        seq_shard_mesh=(mesh if cfg.num_heads % mesh.shape["model"] != 0
+                        else None))
 
     def step(params, opt_state, batch):
-        with activation_mesh(mesh), _ops.attention_context(attn_ctx):
+        with activation_mesh(mesh), plan_scope(attn_plan):
             total, metrics, grads = compute_grads(params, batch)
             params, opt_state, opt_metrics = adamw_update(
                 grads, opt_state, params, tcfg.optimizer)

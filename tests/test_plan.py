@@ -1,0 +1,267 @@
+"""repro.plan subsystem: Spec -> Plan -> Cache, scope, shims, equivalence.
+
+The load-bearing guarantees:
+
+- the :class:`Planner` reproduces the committed golden decision table
+  bit-exact for all three policy backends (no second decision path),
+- :class:`PlanCache` eviction re-specializes and keeps stats consistent,
+- ``distinct_buckets`` survives trace trimming (persistent seen set),
+- scope-precedence regression: a context policy override applies even
+  with ``num_cores`` unset (the old ``DecodeContext`` bug),
+- the single plan_scope stack keeps decode / prefill plans apart,
+- the deprecated ``DecodeContext`` / ``AttnContext`` shims still work.
+"""
+import json
+import re
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.core.split_policy import POLICIES, DecodeWorkload
+from repro.kernels import ops
+from repro.models import build_model
+from repro.plan import (
+    AttentionSpec,
+    LaunchPlan,
+    PlanCache,
+    PlanCacheStats,
+    Planner,
+    bucket_seqlen,
+    current_plan,
+    plan_scope,
+)
+from repro.serving.engine import DecodeEngine, Request
+
+GOLDEN = Path(__file__).parent / "golden" / "split_policy_table.json"
+_KEY = re.compile(r"^(\w+)\|B(\d+)\|L(\d+)\|Hq(\d+)\|Hkv(\d+)\|C(\d+)$")
+
+
+# ---------------------------------------------------------------------------
+# Planner: decision equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_planner_reproduces_golden_table_bit_exact():
+    """Every cell of the committed decision table, via the public
+    Planner API — the new subsystem must not introduce a second
+    decision surface."""
+    table = json.loads(GOLDEN.read_text())
+    assert table, "golden table empty?"
+    seen_policies = set()
+    for key, want in table.items():
+        m = _KEY.match(key)
+        assert m, f"unparseable golden key {key!r}"
+        policy, b, lk, hq, hkv, cores = m.group(1), *map(int, m.groups()[1:])
+        seen_policies.add(policy)
+        spec = AttentionSpec.decode(b, lk, hq, hkv, 128)
+        got = Planner(policy=policy, num_cores=cores).plan(spec).num_splits
+        assert got == want, f"{key}: planner={got} golden={want}"
+    assert seen_policies == set(POLICIES)
+
+
+def test_planner_override_clamps_and_prefill_never_splits():
+    spec = AttentionSpec.decode(1, 512, 64, 1, 128)     # 4 KV blocks
+    assert Planner(num_splits_override=3).plan(spec).num_splits == 3
+    assert Planner(num_splits_override=99).plan(spec).num_splits == 4
+    pre = AttentionSpec("prefill", 1, 512, 512, 64, 1, 128)
+    assert Planner(policy="tpu_adaptive",
+                   num_cores=132).plan(pre).num_splits == 1
+
+
+def test_planner_rejects_unknown_policy():
+    with pytest.raises(KeyError):
+        Planner(policy="nope")
+
+
+def test_plan_carries_superset_fields():
+    plan = Planner(policy="paper", impl="pallas",
+                   block_k=256).plan(AttentionSpec.decode(1, 512, 64, 1),
+                                     bucket=512)
+    assert plan.frozen and plan.pack_gqa and plan.bucket == 512
+    assert plan.impl == "pallas" and plan.block_k == 256
+    assert plan.workload == DecodeWorkload(1, 1, 512, 64, 1, 128)
+    ctx = plan.context_only()
+    assert not ctx.frozen and ctx.policy == "paper"
+    d = plan.describe()
+    assert d["num_splits"] == plan.num_splits and "shape" in d
+
+
+def test_mesh_plan_storage_vs_occupancy():
+    # H_KV=2 does not divide a 16-axis -> storage-forced full-axis shard
+    p = Planner(policy="paper").mesh_plan(
+        AttentionSpec.decode(1, 512, 16, 2, 128), axis_size=16)
+    # kernel split forced to the axis but clamped to the 4 KV blocks
+    assert p.mesh_splits == 16 and p.num_splits == 4
+    # H_KV=16 divides the axis and fills it -> head-sharded, no seq shard
+    p2 = Planner(policy="paper").mesh_plan(
+        AttentionSpec.decode(8, 512, 16, 16, 128), axis_size=16)
+    assert p2.mesh_splits == 1
+
+
+# ---------------------------------------------------------------------------
+# PlanCache: eviction + stats
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_eviction_respecializes_and_stats_consistent():
+    cache = PlanCache(capacity=1)
+    built = []
+
+    def builder(k):
+        return lambda: built.append(k) or f"plan-{k}"
+
+    assert cache.get_or_build(128, builder(128)) == "plan-128"   # miss
+    assert cache.get_or_build(128, builder(128)) == "plan-128"   # hit
+    assert cache.get_or_build(256, builder(256)) == "plan-256"   # miss+evict
+    assert 128 not in cache and len(cache) == 1
+    # re-visiting the evicted bucket re-builds (re-specializes) = miss
+    assert cache.get_or_build(128, builder(128)) == "plan-128"
+    assert built == [128, 256, 128]
+    st = cache.stats
+    assert (st.hits, st.misses) == (1, 3)
+    assert st.total_launches == len(st.trace) == sum(st.launches.values())
+    assert st.distinct_buckets == 2
+    assert cache.cache_info().currsize == 1
+    cache.clear()
+    assert len(cache) == 0 and st.total_launches == 0
+    assert st.distinct_buckets == 0
+
+
+def test_distinct_buckets_survives_trace_trim():
+    """Regression: distinct_buckets used to read set(trace), undercounting
+    once the trace was trimmed at TRACE_CAP in a long-lived engine."""
+    st = PlanCacheStats()
+    st.record_launch(256)
+    for _ in range(2 * PlanCacheStats.TRACE_CAP + 1):
+        st.record_launch(128)
+    assert len(st.trace) <= 2 * PlanCacheStats.TRACE_CAP
+    assert 256 not in st.trace                 # trimmed away...
+    assert st.distinct_buckets == 2            # ...but still counted
+    assert st.launches[256] == 1
+
+
+def test_engine_revisits_evicted_bucket_as_fresh_miss():
+    cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = DecodeEngine(model, ServeConfig(model=cfg, plan_cache_capacity=1),
+                       max_len=300, batch_slots=1)
+    eng.load(params)
+    # crosses the 128 -> 256 bucket boundary: 128 gets evicted
+    eng.generate([Request(0, [1, 2], max_new_tokens=150)])
+    assert list(eng.planned_splits()) == [256]
+    assert eng.stats.misses == 2
+    # a fresh short request re-visits the evicted 128 bucket -> miss #3
+    eng.generate([Request(1, [3, 4], max_new_tokens=4)])
+    assert eng.stats.misses == 3
+    assert eng.stats.distinct_buckets == 2
+
+
+def test_engine_num_splits_override():
+    """ServeConfig.num_splits_override reaches the engine's Planner (the
+    FA3 explicit-num_splits API end to end)."""
+    cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = DecodeEngine(model,
+                       ServeConfig(model=cfg, num_splits_override=2),
+                       max_len=512, batch_slots=1)
+    eng.load(params)
+    md = eng._metadata(400)                    # 512 bucket: 4 KV blocks
+    assert md.num_splits == 2
+    eng.generate([Request(0, [1, 2, 3], max_new_tokens=4)])
+    assert all(s == min(2, lk // 128) or s == 2
+               for lk, s in eng.planned_splits().items())
+
+
+# ---------------------------------------------------------------------------
+# plan_scope: single stack, kind filtering, precedence
+# ---------------------------------------------------------------------------
+
+
+def test_scope_policy_override_applies_without_num_cores():
+    """Regression for the old DecodeContext precedence bug: ``policy``
+    was only honored when ``num_cores`` was also set."""
+    q = jnp.ones((1, 8, 64))
+    k = jnp.ones((1, 512, 1, 64))
+    v = jnp.ones((1, 512, 1, 64))
+    kv_len = jnp.array([512], jnp.int32)
+    ops.reset_policy_eval_count()
+    with plan_scope(LaunchPlan(kind="decode", policy="tpu_adaptive")):
+        ops.decode_attention(q, k, v, kv_len)
+    assert ops.policy_eval_count() == 1
+    inline = ops.last_inline_plan()
+    assert inline is not None and inline.policy == "tpu_adaptive"
+    # explicit plan overrides the ambient scope
+    ops.reset_policy_eval_count()
+    with plan_scope(LaunchPlan(kind="decode", policy="tpu_adaptive")):
+        ops.decode_attention(
+            q, k, v, kv_len,
+            plan=LaunchPlan(kind="decode", policy="fa3_baseline"))
+    assert ops.last_inline_plan().policy == "fa3_baseline"
+
+
+def test_scope_kind_filtering_keeps_decode_and_prefill_apart():
+    dec = LaunchPlan(kind="decode", policy="paper")
+    pre = LaunchPlan(kind="prefill")
+    with plan_scope(dec):
+        assert current_plan("decode") is dec
+        assert current_plan("cross") is dec        # decode family
+        assert current_plan("prefill") is None
+        with plan_scope(pre):                      # inner scope shadows
+            assert current_plan("prefill") is pre
+            assert current_plan("decode") is None
+    assert current_plan() is None
+
+
+def test_frozen_scope_plan_consumed_zero_inline_evals():
+    spec = AttentionSpec.decode(1, 512, 8, 1, 64)
+    plan = Planner(policy="paper").plan(spec)
+    q = jnp.ones((1, 8, 64))
+    k = jnp.ones((1, 512, 1, 64))
+    v = jnp.ones((1, 512, 1, 64))
+    kv_len = jnp.array([512], jnp.int32)
+    ops.reset_policy_eval_count()
+    with plan_scope(plan):
+        ops.decode_attention(q, k, v, kv_len)
+    assert ops.policy_eval_count() == 0
+    # use_ctx_metadata=False opts out of the ambient frozen plan
+    with plan_scope(plan):
+        ops.decode_attention(q, k, v, kv_len, use_ctx_metadata=False)
+    assert ops.policy_eval_count() == 1
+
+
+def test_deprecated_context_shims_warn_and_map_to_plans():
+    with pytest.warns(DeprecationWarning):
+        ctx = ops.DecodeContext(policy="tpu_adaptive", min_splits=2)
+    assert isinstance(ctx, LaunchPlan)
+    assert ctx.kind == "decode" and ctx.min_splits == 2
+    with pytest.warns(DeprecationWarning):
+        actx = ops.AttnContext()
+    assert actx.kind == "prefill"
+    with ops.decode_context(ctx):
+        assert ops.current_decode_context() is ctx
+        assert current_plan("decode") is ctx
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_seqlen_moved_but_stable():
+    assert bucket_seqlen(1) == 128
+    assert bucket_seqlen(400) == 512
+    assert bucket_seqlen(512) == 512
+    spec = AttentionSpec.decode(1, 400, 8, 1)
+    assert spec.bucketed().seqlen_k == 512
+
+
+def test_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        AttentionSpec("flurb", 1, 1, 512, 8, 1)
