@@ -1,15 +1,21 @@
 # Test tiers (markers registered in pytest.ini):
-#   make verify      fast tier, < 120 s — plan-golden first, then everything
-#                    not marked slow/multidevice
+#   make verify      fast tier, < 5 min — plan-golden gate + serving A/B
+#                    smoke first, then everything not marked
+#                    slow/multidevice
 #   make verify-all  the full tier-1 suite (what the roadmap's verify line runs)
 #   make bench       every benchmark (one per paper table/figure + serving A/B)
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify verify-all bench golden plan-golden
+.PHONY: verify verify-all bench golden plan-golden serving-smoke
 
-verify: plan-golden
+verify: plan-golden serving-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
+
+# seconds-scale serving A/B: fused-prefill admission must stay O(1)
+# planned launches per request (structural counters, not timing)
+serving-smoke:
+	$(PY) -m benchmarks.serving_ab --smoke
 
 verify-all:
 	$(PY) -m pytest -q

@@ -13,6 +13,7 @@ def main() -> None:
         metadata_ab,
         regression_sweep,
         roofline_report,
+        serving_ab,
         table1_ab,
         u_curve_sweep,
     )
@@ -24,6 +25,8 @@ def main() -> None:
          regression_sweep.main),
         ("roofline_report (§Roofline)", roofline_report.main),
         ("metadata_ab (paper §5 serving path)", metadata_ab.main),
+        ("serving_ab (fused vs loop prefill admission, TTFT/TPOT)",
+         serving_ab.main),
     ]
     failures = 0
     for name, fn in jobs:

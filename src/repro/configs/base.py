@@ -230,9 +230,25 @@ class ServeConfig:
     # (128) is decision-lossless; wider buckets = fewer specializations.
     seqlen_bucket: int = 128
     # max resident (plan, jitted step) specializations; oldest evicted
-    # first.  0/None = unbounded (decode lengths are already bucketed,
-    # so the population is max_len / seqlen_bucket at worst).
+    # first.  0/None = unbounded.  Decode and fused-prefill plans share
+    # this cache (int vs ("prefill", bucket) keys), so the worst-case
+    # population is max_len / seqlen_bucket decode entries PLUS
+    # max_len / prefill_bucket prefill entries — undersizing it makes
+    # admissions and decode steps evict each other's specializations.
     plan_cache_capacity: Optional[int] = None
+    # serving admission: "fused" = whole-prompt prefill in one planned
+    # launch per admission (prompt padded to a prefill_bucket-wide
+    # bucket, one jitted specialization per bucket); "loop" =
+    # decode-by-teacher-forcing (one step per prompt token — the
+    # pre-redesign baseline, and the only option for recurrent
+    # families); "auto" = fused where the model supports it AND the
+    # metadata path is on (use_scheduler_metadata=False A/Bs the
+    # pre-metadata engine, so auto keeps its loop admission too).
+    prefill_mode: str = "auto"
+    # prompt-length bucket width for fused-prefill plan lookup; None =
+    # seqlen_bucket.  Wider buckets = fewer prefill specializations,
+    # more pad FLOPs per admission.
+    prefill_bucket: Optional[int] = None
     # mesh-level split realization: "fused" = shard_map cache-write +
     # partial softmax + psum LSE combine (production default);
     # "auto" = GSPMD-auto partitioning of the functional update+attention

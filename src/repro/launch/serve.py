@@ -1,9 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
 
-Loads (or random-inits) a reduced model and runs the continuous-batching
-engine over a synthetic request stream, printing per-request completions
-and aggregate TPOT.  ``--policy`` A/Bs the paper's heuristic against the
-flawed baseline on the same requests.
+Loads (or random-inits) a reduced model and drives the request-lifecycle
+:class:`~repro.serving.ServingEngine` (submit/step/stream/drain) over a
+synthetic request stream, printing per-request completions and aggregate
+TPOT.  ``--policy`` A/Bs the paper's heuristic against the flawed
+baseline on the same requests; ``--temperature/--top-k/--top-p`` select
+seeded sampling (default greedy); ``--stream`` prints TOKEN/FINISHED
+events as the engine emits them; ``--prefill`` switches between fused
+bucketed admission and the legacy teacher-forcing loop.
 """
 from __future__ import annotations
 
@@ -18,14 +22,25 @@ from repro.configs import get_arch
 from repro.configs.base import ServeConfig
 from repro.configs.reduced import reduced_config
 from repro.models.registry import build_model
-from repro.serving.engine import DecodeEngine, Request
+from repro.serving import (
+    FINISHED,
+    TOKEN,
+    Request,
+    SamplingParams,
+    ServingEngine,
+    get_sampler,
+)
 
 
 def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 policy: str = "paper", batch_slots: int = 4,
                 max_len: int = 256, d_model: int = 128,
                 num_layers: int = 2, seed: int = 0,
-                num_splits_override=None, log_fn=print):
+                num_splits_override=None, temperature: float = 0.0,
+                top_k: int = 0, top_p: float = 1.0,
+                sampler: str = "categorical",
+                prefill_mode: str = "auto", stream: bool = False,
+                log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -34,20 +49,35 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
             "exercised by the tests")
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
-    engine = DecodeEngine(
+    engine = ServingEngine(
         model,
         ServeConfig(model=cfg, split_policy=policy,
-                    num_splits_override=num_splits_override),
-        max_len=max_len, batch_slots=batch_slots)
+                    num_splits_override=num_splits_override,
+                    prefill_mode=prefill_mode),
+        max_len=max_len, batch_slots=batch_slots,
+        sampler=get_sampler(sampler))
     engine.load(params)
 
     rng = np.random.default_rng(seed)
     reqs: List[Request] = [
         Request(i, rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-                .tolist(), max_new_tokens=max_new)
+                .tolist(), max_new_tokens=max_new,
+                sampling=SamplingParams(temperature=temperature,
+                                        top_k=top_k, top_p=top_p,
+                                        seed=seed + i))
         for i in range(num_requests)]
     t0 = time.monotonic()
-    outs = engine.generate(reqs)
+    handles = [engine.submit(r) for r in reqs]
+    if stream:
+        while engine.has_work():
+            for ev in engine.step():
+                if ev.kind == TOKEN:
+                    log_fn(f"req {ev.request_id} token[{ev.index}] = "
+                           f"{ev.token}")
+                elif ev.kind == FINISHED:
+                    log_fn(f"req {ev.request_id} finished "
+                           f"({ev.finish_reason})")
+    outs = engine.drain()
     dt = time.monotonic() - t0
     total_new = sum(len(c.tokens) for c in outs)
     for c in outs:
@@ -57,6 +87,10 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
            f"in {dt:.2f}s ({1e3 * dt / max(1, total_new):.1f} ms/token)")
     log_fn("frozen plans (bucket -> num_splits): "
            f"{engine.planned_splits()}")
+    if engine.prefill_mode == "fused":
+        log_fn("fused prefill buckets: "
+               f"{engine.planned_prefill_buckets()}")
+    assert len(handles) == len(outs)
     return outs
 
 
@@ -72,11 +106,29 @@ def main() -> None:
                     help="explicit num_splits override: the engine's "
                          "Planner bypasses the policy (FA3's explicit "
                          "num_splits argument)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation (1.0 = off)")
+    ap.add_argument("--sampler", default="categorical",
+                    help="sampler registry name (greedy | categorical; "
+                         "extensible via repro.serving.register_sampler)")
+    ap.add_argument("--prefill", default="auto",
+                    choices=("auto", "fused", "loop"),
+                    help="admission path: fused bucketed prefill vs the "
+                         "legacy teacher-forcing loop")
+    ap.add_argument("--stream", action="store_true",
+                    help="print TOKEN/FINISHED events as they happen")
     args = ap.parse_args()
     run_serving(args.arch, num_requests=args.requests,
                 max_new=args.max_new, policy=args.policy,
                 batch_slots=args.slots,
-                num_splits_override=args.splits)
+                num_splits_override=args.splits,
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, sampler=args.sampler,
+                prefill_mode=args.prefill, stream=args.stream)
 
 
 if __name__ == "__main__":

@@ -87,14 +87,20 @@ def attention_prefill(
     window: Optional[int] = None,
     impl: Optional[str] = None,
     kv_dtype: str = "bfloat16",
+    plan: Optional[LaunchPlan] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Full-sequence attention that also emits the decode cache.
 
     The cache is laid out exactly as the decode step expects: linear
     [0..L) for full attention, ring order (position % window) holding the
-    last ``window`` positions for local attention.
+    last ``window`` positions for local attention.  A prefill-kind
+    ``plan`` (the serving engine's fused-admission path) selects the
+    attention impl; prefill never splits KV, so there is no frozen
+    split to consume.
     """
     B, L, _ = x.shape
+    if impl is None and plan is not None:
+        impl = plan.impl
     q, k, v = _project_qkv(params, cfg, x, positions)
     out = ops.attention(q, k, v, causal=True, window=window,
                         impl=impl or cfg.attention_impl)

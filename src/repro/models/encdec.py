@@ -188,6 +188,78 @@ def encdec_prefill(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
     return logits, caches
 
 
+# --- fused single-slot prefill (serving admission) ---------------------------
+
+
+def encdec_prefill_slot(
+    params: Pytree,
+    cfg: ModelConfig,
+    caches: Pytree,                     # stacked {"self": .., "cross": ..}
+    tokens: jax.Array,                  # (Lb,) int32 — bucket-padded prompt
+    slot: jax.Array,                    # scalar int32
+    length: jax.Array,                  # scalar int32 — true prompt length
+    max_len: int,
+    *,
+    plan=None,
+) -> Tuple[jax.Array, Pytree]:
+    """Decoder prefill of one prompt into slot ``slot``'s self cache.
+
+    Cross-attention reads the slot's *resident* precomputed cross K/V
+    (zeros on a fresh engine, real encoder output after
+    :func:`build_cross_caches`) — the same memory the decode step
+    consumes, so prefill-then-decode matches decode-all-the-way.
+    Returns (last-prompt-position logits (vocab,), caches).
+    """
+    from repro.kernels import ops
+    from repro.models.lm import write_cache_slot
+
+    L = tokens.shape[0]
+    slot = jnp.asarray(slot, jnp.int32)
+    x = embed_tokens(params["embed"], tokens[None])      # (1, Lb, d)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], 0, L, axis=0).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (1, L))
+    cross_sl = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+        caches["cross"])
+    impl = (plan.impl if plan is not None and plan.impl is not None
+            else cfg.attention_impl)
+
+    def body(xc, scanned):
+        lp, cc = scanned                # cc: this layer's (1, enc, H, D) kv
+        h = apply_norm(lp["ln1"], xc, cfg.norm_eps)
+        mix, self_cache = attn_mod.attention_prefill(
+            lp["self"], cfg, h, positions, max_len, plan=plan)
+        xc = xc + mix
+        hx = apply_norm(lp["lnx"], xc, cfg.norm_eps)
+        q = jnp.einsum("bld,dhk->blhk", hx, lp["cross"]["wq"])
+        if cfg.qkv_bias:
+            q = q + lp["cross"]["bq"].astype(q.dtype)
+        o = ops.attention(q, cc["k"], cc["v"], causal=False, impl=impl)
+        xc = xc + jnp.einsum("blhk,hkd->bld", o, lp["cross"]["wo"])
+        h2 = apply_norm(lp["ln2"], xc, cfg.norm_eps)
+        xc = xc + apply_mlp(lp["ffn"], h2, cfg.mlp_kind)
+        return xc, self_cache
+
+    if cfg.scan_layers:
+        x, self_caches = jax.lax.scan(body, x,
+                                      (params["dec_layers"], cross_sl))
+    else:
+        outs = []
+        for r in range(cfg.num_layers):
+            x, c = body(x, jax.tree.map(lambda a: a[r],
+                                        (params["dec_layers"], cross_sl)))
+            outs.append(c)
+        self_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    xl = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    xl = apply_norm(params["final_norm"], xl, cfg.norm_eps)
+    logits = unembed(params["embed"], xl)[0, 0]
+    return logits, {"self": write_cache_slot(caches["self"], self_caches,
+                                             slot),
+                    "cross": caches["cross"]}
+
+
 # --- decode ------------------------------------------------------------------
 
 

@@ -158,25 +158,27 @@ def block_train(params, cfg: ModelConfig, kind: str, x: jax.Array,
 
 def block_prefill(params, cfg: ModelConfig, kind: str, x: jax.Array,
                   positions: jax.Array, max_len: int,
-                  kv_dtype: str = "bfloat16"
+                  kv_dtype: str = "bfloat16", plan=None
                   ) -> Tuple[jax.Array, jax.Array, Pytree]:
     """One block, full sequence, also emitting its decode cache.
 
-    Returns (x, aux_loss, cache).
+    Returns (x, aux_loss, cache).  ``plan`` is a prefill-kind
+    :class:`~repro.plan.LaunchPlan` (fused-admission path).
     """
     h = apply_norm(params["ln1"], x, cfg.norm_eps)
     if kind == "attn":
         mix, cache = attn_mod.attention_prefill(params["mix"], cfg, h,
                                                 positions, max_len,
-                                                kv_dtype=kv_dtype)
+                                                kv_dtype=kv_dtype,
+                                                plan=plan)
     elif kind == "attn_window":
         mix, cache = attn_mod.attention_prefill(
             params["mix"], cfg, h, positions,
             min(cfg.hybrid.window, max_len), window=cfg.hybrid.window,
-            kv_dtype=kv_dtype)
+            kv_dtype=kv_dtype, plan=plan)
     elif kind == "mla":
         mix, cache = mla_mod.mla_prefill(params["mix"], cfg, h, positions,
-                                         max_len)
+                                         max_len, plan=plan)
     elif kind == "rglru":
         mix, cache = rglru_mod.apply_rglru_train(params["mix"], cfg, h,
                                                  return_cache=True)
@@ -388,6 +390,88 @@ def lm_prefill(
     x = apply_norm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x[:, -1:])[:, 0]
     return logits, tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-slot prefill (serving admission)
+# ---------------------------------------------------------------------------
+
+
+def write_cache_slot(caches: Pytree, new: Pytree, slot: jax.Array) -> Pytree:
+    """Write a batch-1 cache pytree into slot ``slot`` of a multi-slot one.
+
+    Every layer-stacked cache leaf carries batch at axis 1 —
+    ``(layers, B, ...)`` — for all families (``stack_specs`` prepends
+    the layers dim to per-block ``(B, ...)`` leaves), so one
+    ``dynamic_update_slice`` per leaf covers the whole pytree.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def w(c, n):
+        start = (0, slot) + (0,) * (c.ndim - 2)
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), start)
+
+    return jax.tree.map(w, caches, new)
+
+
+def lm_prefill_slot(
+    params: Pytree,
+    cfg: ModelConfig,
+    caches: Tuple[Pytree, ...],
+    tokens: jax.Array,                  # (Lb,) int32 — bucket-padded prompt
+    slot: jax.Array,                    # scalar int32 — target decode slot
+    length: jax.Array,                  # scalar int32 — true prompt length
+    max_len: int,
+    *,
+    plan=None,
+    kv_dtype: str = "bfloat16",
+) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
+    """Prefill one prompt into slot ``slot`` of an existing cache pytree.
+
+    One launch writes the whole prompt's KV rows (O(1) launches per
+    admission vs O(prompt_len) teacher-forced decode steps) and returns
+    the logits at the last real prompt position, ready to sample the
+    first generated token.  Returns (logits (vocab,) f32, caches).
+
+    Padding correctness: positions >= ``length`` hold garbage K/V, but
+    causal attention keeps them out of every real position's output, the
+    decode step masks them via ``kv_len = t + 1``, and decoding
+    overwrites row ``length`` onward before it ever becomes attendable.
+    Families with recurrent per-token state (ssd / rglru) would fold the
+    pad garbage into their carried state, so they are gated out at the
+    :class:`~repro.models.registry.Model` facade.
+    """
+    x = embed_tokens(params["embed"], tokens[None])      # (1, Lb, d)
+    _, L, _ = x.shape
+    positions = jnp.arange(L, dtype=jnp.int32)[None]
+
+    new_groups = []
+    for gi, (pattern, reps) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+
+        def body(xc, layer_params, pattern=pattern):
+            new_lc = []
+            for ki, kind in enumerate(pattern):
+                xc, _, c = block_prefill(layer_params[ki], cfg, kind, xc,
+                                         positions, max_len, kv_dtype,
+                                         plan=plan)
+                new_lc.append(c)
+            return xc, tuple(new_lc)
+
+        if cfg.scan_layers:
+            x, gc = jax.lax.scan(body, x, gp)
+        else:
+            outs = []
+            for r in range(reps):
+                x, c = body(x, jax.tree.map(lambda a: a[r], gp))
+                outs.append(c)
+            gc = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_groups.append(gc)
+
+    xl = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    xl = apply_norm(params["final_norm"], xl, cfg.norm_eps)
+    logits = unembed(params["embed"], xl)[0, 0]          # (vocab,)
+    return logits, write_cache_slot(caches, tuple(new_groups), slot)
 
 
 # ---------------------------------------------------------------------------

@@ -116,10 +116,16 @@ def mla_train(params: Params, cfg: ModelConfig, x: jax.Array,
 
 def mla_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
                 positions: jax.Array, cache_len: int,
-                *, impl: Optional[str] = None
+                *, impl: Optional[str] = None,
+                plan: Optional[LaunchPlan] = None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Full-sequence MLA that also emits the latent decode cache."""
+    """Full-sequence MLA that also emits the latent decode cache.
+
+    A prefill-kind ``plan`` selects the impl (fused-admission path);
+    the latent cache layout is identical either way."""
     m = cfg.mla
+    if impl is None and plan is not None:
+        impl = plan.impl
     y = mla_train(params, cfg, x, positions, impl=impl)
     c_kv, k_rope = _latents(params, cfg, x, positions)
     entries = jnp.concatenate([c_kv, k_rope], axis=-1)   # (B, L, w)

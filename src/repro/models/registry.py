@@ -97,6 +97,54 @@ class Model:
                                  patches=batch.get("patches"),
                                  kv_dtype=kv_dtype)
 
+    @property
+    def supports_fused_prefill(self) -> bool:
+        """Whether :meth:`prefill_slot` can consume a bucket-padded
+        prompt.  Recurrent families (ssm / hybrid) would fold the pad
+        garbage into their carried state, and a vision frontend prepends
+        non-token positions; both keep the teacher-forcing admission
+        path instead."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return True                # decoder-side prefill, stub frames
+        return (cfg.family in ("dense", "moe", "mla")
+                and cfg.frontend.kind == "none")
+
+    @property
+    def prefill_writes_full_slot(self) -> bool:
+        """Whether :meth:`prefill_slot` overwrites EVERY cache leaf row
+        of the target slot (lm families emit full ``max_len``-length
+        caches), letting the serving engine skip its slot-reset launch
+        at fused admission.  encdec leaves the cross-cache leaves
+        untouched, so its slots still need the reset."""
+        return self.cfg.family != "encdec"
+
+    def prefill_slot(self, params: Pytree, caches: Pytree,
+                     tokens: jax.Array, slot: jax.Array,
+                     length: jax.Array, max_len: int, *, plan=None,
+                     kv_dtype: str = "bfloat16"
+                     ) -> Tuple[jax.Array, Pytree]:
+        """Fused single-slot prompt prefill into an existing cache.
+
+        ``tokens``: (Lb,) bucket-padded prompt; ``slot`` / ``length``:
+        traced scalars.  One launch writes the whole prompt's cache rows
+        for slot ``slot`` and returns the logits at position
+        ``length - 1`` (ready to sample the first generated token) —
+        the serving engine's O(1)-launches admission path.
+        """
+        cfg = self.cfg
+        if not self.supports_fused_prefill:
+            raise NotImplementedError(
+                f"{cfg.family} models cannot fused-prefill a padded "
+                "prompt; use the loop (teacher-forcing) admission path")
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_prefill_slot(
+                params, cfg, caches, tokens, slot, length, max_len,
+                plan=plan)
+        return lm_mod.lm_prefill_slot(params, cfg, caches, tokens, slot,
+                                      length, max_len, plan=plan,
+                                      kv_dtype=kv_dtype)
+
     def decode_step(self, params: Pytree, caches: Pytree, token: jax.Array,
                     t: jax.Array, *, plan=None, metadata=None,
                     policy: str = "paper",

@@ -61,8 +61,12 @@ class Planner:
             s = max(1, min(int(self.num_splits_override), w.num_n_blocks))
         else:
             s = choose_num_splits(w, policy=self.policy, num_cores=cores)
-        pack = self.pack_gqa if self.pack_gqa is not None \
-            else spec.num_heads_q > spec.num_heads_kv
+        if self.pack_gqa is not None:
+            pack = self.pack_gqa
+        elif spec.kind == "prefill":
+            pack = False                  # full L_Q rows already fill tiles
+        else:
+            pack = spec.num_heads_q > spec.num_heads_kv
         return LaunchPlan(kind=spec.kind, spec=spec, num_splits=s,
                           pack_gqa=pack, policy=self.policy,
                           num_cores=cores, impl=self.impl,

@@ -79,6 +79,18 @@ class AttentionSpec:
                    head_dim, **kw)
 
     @classmethod
+    def prefill(cls, batch: int, seqlen: int, num_heads_q: int,
+                num_heads_kv: int, head_dim: int = 128,
+                **kw) -> "AttentionSpec":
+        """Fused prompt prefill: causal self-attention with
+        L_Q = L_K = the bucket-padded prompt length (the serving
+        engine's admission launch).  Prefill never splits KV, but the
+        spec still flows through the Planner so the launch is planned,
+        cached and counted like any other."""
+        return cls("prefill", batch, seqlen, seqlen, num_heads_q,
+                   num_heads_kv, head_dim, **kw)
+
+    @classmethod
     def from_workload(cls, w: DecodeWorkload, kind: str = "decode",
                       **kw) -> "AttentionSpec":
         return cls(kind, w.batch, w.seqlen_q, w.seqlen_k, w.num_heads_q,

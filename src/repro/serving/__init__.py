@@ -1,7 +1,9 @@
-"""Serving: policy-driven batched decode (mesh-level split) + engine."""
+"""Serving: request-lifecycle engine (submit/step/stream/drain),
+scheduler, pluggable sampling, and the mesh-level serve-step builder."""
 from repro.serving.decode_step import (  # noqa: F401
     ServeStepBundle,
     attention_spec,
+    build_prefill_step,
     build_serve_step,
     decode_workload,
     mesh_launch_plan,
@@ -14,4 +16,29 @@ from repro.serving.engine import (  # noqa: F401
     DecodeEngine,
     PlanCacheStats,
     Request,
+    ServingEngine,
+)
+from repro.serving.events import (  # noqa: F401
+    FINISH_CACHE_CAPACITY,
+    FINISH_EOS,
+    FINISH_LENGTH,
+    FINISH_REASONS,
+    FINISH_STOP,
+    FINISHED,
+    TOKEN,
+    Event,
+)
+from repro.serving.sampling import (  # noqa: F401
+    GREEDY,
+    CategoricalSampler,
+    GreedySampler,
+    Sampler,
+    SamplingParams,
+    get_sampler,
+    register_sampler,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    PlanEntry,
+    Scheduler,
+    SlotState,
 )

@@ -1,52 +1,69 @@
-"""Batched generation engine with continuous-batching-lite.
+"""Request-lifecycle serving engine: submit / step / stream / drain.
 
-A fixed pool of ``B`` decode slots runs in lockstep through the jitted
-decode step; each slot carries its own position ``t`` (the step takes a
-(B,) position vector).  When a slot finishes (EOS or per-request token
-budget) it is refilled from the pending queue at position 0 — no global
-drain/refill barrier, which is the "lite" version of vLLM-style
-continuous batching.
+A fixed pool of ``B`` decode slots runs in lockstep through plan-
+specialized jitted decode steps; each slot carries its own position
+(the step takes a (B,) position vector).  The public surface is
+request-shaped, the way real metadata-enabled engines (FA3 / vLLM
+``get_scheduler_metadata``) are driven — per scheduling step, not per
+``generate()`` call:
 
-Prefill is decode-by-teacher-forcing (one step per prompt token).  For
-the short-prompt regime the paper targets (L_K <= 512) this is the
-latency-dominant path the split policy accelerates; a fused prefill is a
-recorded future optimization.
+- :meth:`ServingEngine.submit`  — enqueue a :class:`Request`, get a
+  handle back immediately.
+- :meth:`ServingEngine.step`    — run one scheduling step (admissions +
+  one lockstep decode launch) and return the :class:`Event` list it
+  produced (TOKEN per generated token, FINISHED with a
+  ``finish_reason``).
+- :meth:`ServingEngine.stream`  — iterate one handle's events, pumping
+  ``step()`` on demand.
+- :meth:`ServingEngine.drain`   — run to completion, return
+  :class:`Completion` objects.
+
+Fused bucketed prefill (admission)
+----------------------------------
+Admitting a request prefills its whole prompt in **O(1) planned
+launches** instead of O(prompt_len) teacher-forced decode steps: the
+prompt is padded to a ``prefill_bucket``-wide bucket and pushed through
+a jitted single-slot prefill (``Model.prefill_slot``) specialized per
+bucket.  The prefill launch is planned like any other — a
+``kind="prefill"`` :class:`~repro.plan.AttentionSpec` through the same
+:class:`~repro.plan.Planner`, resident in the same
+:class:`~repro.plan.PlanCache` under ``("prefill", bucket)`` keys — so
+``PlanCacheStats`` counts admissions and tests can assert the O(1)
+claim structurally.  Families with recurrent per-token state (ssm,
+hybrid) or a non-token frontend (vlm) cannot consume a padded prompt in
+one pass; they keep the teacher-forcing path
+(``prefill_mode="loop"``), which is also the pre-redesign baseline the
+serving A/B benchmark measures against.
+
+Sampling
+--------
+A pluggable :class:`~repro.serving.sampling.Sampler` runs *inside* the
+jitted step over per-slot state arrays (temperature / top-k / top-p /
+PRNG key), so per-request sampling never recompiles.  Keys derive from
+the request's seed and fold in the absolute token position — tokens are
+independent of slot packing (``batch_slots`` ∈ {1, 2, 4} agree).
 
 Metadata-enabled path (paper §5)
 --------------------------------
-The paper's 21-24% decoder-efficiency win applies to deployments that
-*precompute* scheduling metadata (FA3 / vLLM ``get_scheduler_metadata``)
-instead of re-running the split heuristic at every launch.  The engine
-realizes that as a three-stage flow:
+Unchanged from the pre-redesign engine, now owned by the
+:class:`~repro.serving.scheduler.Scheduler`: live cache length →
+bucket → frozen :class:`~repro.plan.LaunchPlan` → per-plan jitted step,
+with the policy evaluated **zero** times inside traced code
+(``kernels.ops.policy_eval_count`` stays flat — asserted in tests).
+``use_scheduler_metadata=False`` keeps the paper's weaker "internal
+heuristic" path for A/B.
 
-1. **bucket** — before each step, the live cache length ``t_max + 1`` is
-   quantized to a ``seqlen_bucket``-wide bucket (decision-lossless: the
-   policy only reads ``ceil(L_K / KV_BLOCK)``).
-2. **plan** — the first time a bucket is seen, ``get_scheduler_metadata``
-   freezes a :class:`SchedulerMetadata` launch plan for it (policy runs
-   exactly once per bucket, OUTSIDE any traced code).
-3. **specialized step** — each plan owns its own jitted decode step with
-   the plan closed over as a static value, so XLA specializes the whole
-   program (kernel grid included) on the frozen ``num_splits``.  Inside
-   the jitted body the policy is evaluated **zero** times
-   (``kernels.ops.policy_eval_count`` stays flat — asserted in tests).
-
-The planning itself lives in ``repro.plan``: the engine owns a
-:class:`~repro.plan.Planner` (policy backend + optional
-``num_splits_override`` from :class:`ServeConfig`) and a shared
-:class:`~repro.plan.PlanCache` of per-bucket (plan, jitted step)
-specializations.  Observability lives in the cache's built-in
-:class:`~repro.plan.PlanCacheStats` (``engine.stats``): hits/misses,
-per-bucket launch counters, the recent-launch trace, and the persistent
-seen-bucket set, so tests and benchmarks can assert the metadata path
-was actually exercised.  ``use_scheduler_metadata=False`` keeps the
-paper's weaker "internal heuristic" path for A/B comparison.
+:class:`DecodeEngine` is the legacy batch-synchronous facade
+(``generate(requests) -> completions``): a thin wrapper pinned to
+``prefill_mode="loop"``, bit-identical to the pre-redesign engine for
+greedy decoding.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+import warnings
+from collections import deque
+from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,198 +71,421 @@ import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.models.registry import Model
-from repro.plan import (
-    AttentionSpec,
-    LaunchPlan,
-    PlanCache,
-    PlanCacheStats,
-    Planner,
-    bucket_seqlen,
+from repro.plan import LaunchPlan, PlanCacheStats, Planner, plan_scope
+from repro.serving.events import (
+    FINISH_CACHE_CAPACITY,
+    FINISH_EOS,
+    FINISH_LENGTH,
+    FINISH_STOP,
+    FINISHED,
+    TOKEN,
+    Event,
+)
+from repro.serving.sampling import CategoricalSampler, GreedySampler, \
+    Sampler
+from repro.serving.scheduler import (
+    Completion,
+    Request,
+    Scheduler,
+    SlotState,
 )
 
 Pytree = Any
 
-
-@dataclass
-class Request:
-    request_id: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
+PREFILL_MODES = ("auto", "fused", "loop")
 
 
-@dataclass
-class Completion:
-    request_id: int
-    prompt: List[int]
-    tokens: List[int] = field(default_factory=list)
-    steps: int = 0
-
-
-@dataclass
-class _Plan:
-    """One plan-cache entry: a frozen launch plan + its specialized step."""
-    bucket: int                      # bucketed L_K this plan covers
-    plan: LaunchPlan
-    step: Any                        # jitted, specialized on ``plan``
-
-    @property
-    def metadata(self) -> LaunchPlan:   # legacy field name
-        return self.plan
-
-
-class DecodeEngine:
-    """Single-host engine over a (possibly 1-device) mesh."""
+class ServingEngine:
+    """Single-host request-lifecycle engine over a (1-device) mesh."""
 
     def __init__(self, model: Model, scfg: ServeConfig, *,
                  max_len: int = 256, batch_slots: int = 4,
-                 policy: Optional[str] = None):
+                 policy: Optional[str] = None,
+                 sampler: Optional[Sampler] = None,
+                 prefill_mode: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.policy = policy or scfg.split_policy
         self.max_len = max_len
         self.B = batch_slots
         self.use_metadata = scfg.use_scheduler_metadata
-        self.bucket_width = scfg.seqlen_bucket
-        self.plan_capacity = scfg.plan_cache_capacity
+        self.kv_dtype = scfg.kv_cache_dtype
+        # CategoricalSampler by default so per-request SamplingParams
+        # are always honored; it pays vocab sorts inside every step even
+        # for all-greedy traffic, so cost-sensitive greedy-only callers
+        # (e.g. the legacy DecodeEngine facade) pass GreedySampler,
+        # which instead REJECTS sampled requests at submit()
+        self.sampler = sampler if sampler is not None else \
+            CategoricalSampler()
+
+        mode = prefill_mode or scfg.prefill_mode
+        if mode not in PREFILL_MODES:
+            raise ValueError(f"unknown prefill_mode {mode!r}; "
+                             f"known: {PREFILL_MODES}")
+        if mode == "auto":
+            mode = "fused" if (self.use_metadata
+                               and model.supports_fused_prefill) else "loop"
+        elif mode == "fused":
+            if not model.supports_fused_prefill:
+                raise ValueError(
+                    f"{self.cfg.family} models cannot fused-prefill a "
+                    "padded prompt (recurrent state / non-token "
+                    "frontend); use prefill_mode='loop'")
+            if not self.use_metadata:
+                raise ValueError(
+                    "fused prefill admission rides the metadata-enabled "
+                    "plan path; set use_scheduler_metadata=True or "
+                    "prefill_mode='loop'")
+        self.prefill_mode = mode
+
+        self.sched = Scheduler(
+            self.cfg, batch_slots=batch_slots, max_len=max_len,
+            policy=self.policy,
+            num_splits_override=scfg.num_splits_override,
+            bucket_width=scfg.seqlen_bucket,
+            prefill_bucket=scfg.prefill_bucket,
+            plan_capacity=scfg.plan_cache_capacity)
+
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
-        self.planner = Planner(
-            policy=self.policy,
-            num_splits_override=scfg.num_splits_override)
-        self._plans: PlanCache = PlanCache(self.plan_capacity)
+        self._state: Dict[str, np.ndarray] = {}
+        # device copy of the sampler state, refreshed only when an
+        # admission dirties a row (not re-uploaded every decode step)
+        self._state_dev: Optional[Dict[str, jax.Array]] = None
+        # the ONLY copy of each slot's next write position / next fed
+        # token.  Dead-slot entries keep their last values on purpose:
+        # the lockstep launch always covers all B rows, and keeping the
+        # arrays stable keeps the legacy wrapper bit-identical to the
+        # pre-redesign engine (whose arrays behaved the same way)
+        self._pos = np.zeros(self.B, np.int32)
+        self._next_token = np.zeros(self.B, np.int32)
+
+        self._next_handle = 0
+        self._queues: Dict[int, Deque[Event]] = {}
+        self._completions: Dict[int, Completion] = {}
+        self._undrained: List[int] = []
+        self._warned_capacity = False
+
         # internal-heuristic fallback: ONE step for all lengths, policy
         # evaluated at trace time on the padded cache length (the A/B
         # baseline the paper measures its metadata path against)
-        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._fallback_step = jax.jit(self._decode_impl,
+                                      donate_argnums=(1,))
+        # slot reset: jitted + donated, one compile for every slot (the
+        # pre-redesign engine rebuilt the whole cache pytree with
+        # un-jitted .at[i].set per admission — a host round trip per
+        # refill)
+        self._zero_step = jax.jit(self._zero_impl, donate_argnums=(0,))
+
+    # --- observability ------------------------------------------------------
 
     @property
     def stats(self) -> PlanCacheStats:
-        return self._plans.stats
+        return self.sched.plans.stats
 
-    # --- state ----------------------------------------------------------------
+    @property
+    def planner(self) -> Planner:
+        return self.sched.planner
+
+    def planned_splits(self) -> Dict[int, int]:
+        """bucket -> frozen num_splits, for every resident decode plan."""
+        return self.sched.planned_splits()
+
+    def planned_prefill_buckets(self) -> List[int]:
+        return self.sched.planned_prefill_buckets()
+
+    def _metadata(self, t_max: int) -> LaunchPlan:
+        """Compute (not cache) the decode launch plan for ``t_max``."""
+        return self.sched.decode_plan(t_max)
+
+    # --- state --------------------------------------------------------------
 
     def load(self, params: Pytree) -> None:
         self._params = params
-        self._caches = self.model.init_cache(self.B, self.max_len)
+        self._caches = self.model.init_cache(self.B, self.max_len,
+                                             self.kv_dtype)
+        self._state = self.sampler.init_state(self.B)
+        self._state_dev = None
 
-    # --- plan cache (metadata-enabled path) -----------------------------------
+    # --- jitted impls -------------------------------------------------------
 
-    def _bucket(self, t_max: int) -> int:
-        """Cache-length bucket for the longest live position."""
-        return bucket_seqlen(min(int(t_max) + 1, self.max_len),
-                             self.bucket_width)
-
-    def _spec(self, t_max: int) -> AttentionSpec:
-        """Declarative launch spec for the current bucket."""
-        return AttentionSpec.decode(
-            self.B, self._bucket(t_max), self.cfg.num_heads,
-            1 if self.cfg.mla else self.cfg.num_kv_heads,
-            self.cfg.resolved_head_dim)
-
-    def _metadata(self, t_max: int) -> LaunchPlan:
-        """Compute (not cache) the launch plan for the current bucket."""
-        lk = self._bucket(t_max)
-        return self.planner.plan(self._spec(t_max), bucket=lk)
-
-    def _plan(self, t_max: int) -> _Plan:
-        """Plan-cache lookup: one specialized jitted step per bucket."""
-        lk = self._bucket(t_max)
-
-        def build() -> _Plan:
-            plan = self._metadata(t_max)
-            step = jax.jit(
-                functools.partial(self._step_impl, plan=plan),
-                donate_argnums=(1,))
-            return _Plan(lk, plan, step)
-
-        return self._plans.get_or_build(lk, build)
-
-    def planned_splits(self) -> Dict[int, int]:
-        """bucket -> frozen num_splits, for every resident plan."""
-        return {lk: p.plan.num_splits for lk, p in self._plans.items()}
-
-    def _step_impl(self, params, caches, token, t,
-                   plan: Optional[LaunchPlan] = None):
+    def _decode_impl(self, params, caches, token, t, state,
+                     plan: Optional[LaunchPlan] = None):
         logits, caches = self.model.decode_step(
             params, caches, token, t, plan=plan, policy=self.policy)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+        tok = self.sampler.sample(logits, state, t)
+        return tok, caches
 
-    # --- scheduling -------------------------------------------------------------
+    def _prefill_impl(self, params, caches, tokens, slot, length, state,
+                      plan: Optional[LaunchPlan] = None):
+        """Fused single-slot prompt prefill + first-token sampling."""
+        with plan_scope(plan):
+            logits, caches = self.model.prefill_slot(
+                params, caches, tokens, slot, length, self.max_len,
+                plan=plan, kv_dtype=self.kv_dtype)
+        tok = self.sampler.sample(logits[None], state, (length - 1)[None])
+        return tok[0], caches
 
-    def _zero_slot(self, i: int) -> None:
-        """Clear slot i's cache (recurrent states must not leak across
-        requests; zeroing KV is harmless since kv_len masks it anyway)."""
-        self._caches = jax.tree.map(
-            lambda a: a.at[i].set(jnp.zeros_like(a[i])), self._caches)
+    def _zero_impl(self, caches, slot):
+        """Zero slot ``slot`` across every cache leaf (batch axis 1 of
+        the layer-stacked pytree).  Recurrent states must not leak
+        across requests; zeroing KV is harmless since kv_len masks it."""
+        def z(a):
+            row = jnp.zeros(a.shape[:1] + (1,) + a.shape[2:], a.dtype)
+            start = (0, slot) + (0,) * (a.ndim - 2)
+            return jax.lax.dynamic_update_slice(a, row, start)
+        return jax.tree.map(z, caches)
 
-    def generate(self, requests: Sequence[Request]) -> List[Completion]:
+    def _build_decode(self, plan: LaunchPlan):
+        return jax.jit(functools.partial(self._decode_impl, plan=plan),
+                       donate_argnums=(1,))
+
+    def _build_prefill(self, plan: LaunchPlan):
+        return jax.jit(functools.partial(self._prefill_impl, plan=plan),
+                       donate_argnums=(1,))
+
+    # --- request lifecycle --------------------------------------------------
+
+    def validate(self, req: Request) -> None:
+        """Raise on requests that could never run (no state mutated)."""
+        self.sched.validate(req)
+        self.sampler.check(req.sampling)
+
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; returns its handle (admission happens on a
+        later :meth:`step`)."""
+        handle = self._next_handle
+        self.validate(req)                      # incl. sampler.check
+        st = self.sched.submit(handle, req)
+        self._next_handle += 1
+        self._completions[handle] = st.completion
+        self._queues[handle] = deque()
+        self._undrained.append(handle)
+        return handle
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    def step(self) -> List[Event]:
+        """One scheduling step: admit pending requests into free slots
+        (fused prefill = one planned launch each), then one lockstep
+        decode launch over the live slots.  Returns the events."""
         assert self._params is not None, "call load(params) first"
-        pending = list(requests)
-        slots: List[Optional[Completion]] = [None] * self.B
-        budget = [0] * self.B
-        eos: List[Optional[int]] = [None] * self.B
-        slot_pos = np.zeros(self.B, np.int32)          # next write position
-        slot_prompt_left: List[List[int]] = [[] for _ in range(self.B)]
-        next_token = np.zeros(self.B, np.int32)
-        done: List[Completion] = []
+        events: List[Event] = []
+        while True:
+            adm = self.sched.admit_next()
+            if adm is None:
+                break
+            self._admit(*adm, events)
+        live = self.sched.live()
+        if live:
+            self._decode_launch(live, events)
+        return events
 
-        # validate up front: a bad request must fail fast, not abort the
-        # batch mid-flight after other requests already completed
-        for req in pending:
-            if not req.prompt:
-                raise ValueError(f"request {req.request_id}: empty prompt")
-            if len(req.prompt) >= self.max_len:
-                # prefill would write past the cache and silently corrupt
-                # the last row (dynamic_update_slice clamps) — refuse
-                raise ValueError(
-                    f"request {req.request_id}: prompt length "
-                    f"{len(req.prompt)} >= max_len ({self.max_len})")
-
-        def refill(i: int) -> None:
-            if not pending:
+    def stream(self, handle: int) -> Iterator[Event]:
+        """Iterate one handle's events in order, running :meth:`step`
+        whenever the queue is empty.  Single consumer per handle; once
+        FINISHED is yielded the handle is fully released (the consumer
+        saw every token, so :meth:`drain` will not return it again) —
+        a streaming-only server holds no per-request state after the
+        stream ends."""
+        if handle not in self._queues:
+            raise ValueError(
+                f"handle {handle} is unknown, already streamed to "
+                "FINISHED, or drained")
+        while True:
+            # re-fetch per event: if a concurrent drain() released the
+            # handle between yields, stop instead of replaying tokens
+            # the drain already delivered from an orphaned queue
+            q = self._queues.get(handle)
+            if q is None:
                 return
-            req = pending.pop(0)
-            slots[i] = Completion(req.request_id, list(req.prompt))
-            budget[i] = req.max_new_tokens
-            eos[i] = req.eos_id
-            slot_prompt_left[i] = list(req.prompt)
-            slot_pos[i] = 0
-            next_token[i] = slot_prompt_left[i].pop(0)
-            self._zero_slot(i)
-
-        for i in range(self.B):
-            refill(i)
-
-        while any(s is not None for s in slots):
-            tok = jnp.asarray(next_token)
-            t = jnp.asarray(slot_pos)
-            if self.use_metadata:
-                t_max = max(int(slot_pos[i]) for i, s in enumerate(slots)
-                            if s is not None)
-                step = self._plan(t_max).step
+            if q:
+                ev = q.popleft()
+                yield ev
+                if ev.kind == FINISHED:
+                    self._queues.pop(handle, None)
+                    self._completions.pop(handle, None)
+                    if handle in self._undrained:
+                        self._undrained.remove(handle)
+                    return
+            elif not self.sched.has_work():
+                return
             else:
-                step = self._step
-            out, self._caches = step(self._params, self._caches, tok, t)
-            out = np.asarray(out)
-            for i, comp in enumerate(slots):
-                if comp is None:
-                    continue
-                slot_pos[i] += 1
-                comp.steps += 1
-                if slot_prompt_left[i]:                 # still prefilling
-                    next_token[i] = slot_prompt_left[i].pop(0)
-                    continue
-                tok_out = int(out[i])
-                comp.tokens.append(tok_out)
-                finished = (len(comp.tokens) >= budget[i]
-                            or (eos[i] is not None and tok_out == eos[i])
-                            or slot_pos[i] >= self.max_len - 1)
-                if finished:
-                    done.append(comp)
-                    slots[i] = None
-                    refill(i)
-                else:
-                    next_token[i] = tok_out
+                self.step()
+
+    def drain(self) -> List[Completion]:
+        """Run to completion; returns every not-yet-drained submitted
+        request's :class:`Completion`, sorted by request_id.  Drained
+        handles are released — a long-lived engine holds state only for
+        in-flight and not-yet-drained requests."""
+        while self.sched.has_work():
+            self.step()
+        done = []
+        for h in self._undrained:
+            done.append(self._completions.pop(h))
+            self._queues.pop(h, None)
+        self._undrained = []
         done.sort(key=lambda c: c.request_id)
         return done
+
+    # --- internals ----------------------------------------------------------
+
+    def _admit(self, i: int, st: SlotState, events: List[Event]) -> None:
+        # the reset launch is only needed when the admission path leaves
+        # any of the slot's cache rows unwritten: always for loop
+        # teacher-forcing, and for fused prefill only when the model
+        # says so (encdec's cross-cache leaves stay untouched)
+        if (self.prefill_mode != "fused"
+                or not self.model.prefill_writes_full_slot):
+            self._caches = self._zero_step(
+                self._caches, jnp.asarray(i, jnp.int32))
+        for name, value in self.sampler.slot_state(
+                st.request.sampling).items():
+            self._state[name][i] = value
+        self._state_dev = None                  # row dirtied: re-upload
+        if self.prefill_mode == "fused":
+            self._admit_fused(i, st, events)
+        else:
+            st.prompt_left = list(st.request.prompt)
+            self._pos[i] = 0
+            self._next_token[i] = st.prompt_left.pop(0)
+
+    def _admit_fused(self, i: int, st: SlotState,
+                     events: List[Event]) -> None:
+        """Prefill the whole prompt in one planned launch; the slot
+        joins the decode lockstep already holding its first token."""
+        prompt = st.request.prompt
+        n = len(prompt)
+        entry = self.sched.prefill_entry(n, self._build_prefill)
+        bucket = entry.key[1]
+        toks = np.zeros(bucket, np.int32)
+        toks[:n] = prompt
+        state_row = {k: jnp.asarray(v[i:i + 1])
+                     for k, v in self._state.items()}
+        tok, self._caches = entry.step(
+            self._params, self._caches, jnp.asarray(toks),
+            jnp.asarray(i, jnp.int32), jnp.asarray(n, jnp.int32),
+            state_row)
+        self._pos[i] = n
+        st.completion.steps += 1
+        self._emit_token(i, st, int(tok), events)
+
+    def _decode_launch(self, live, events: List[Event]) -> None:
+        tok = jnp.asarray(self._next_token)
+        t = jnp.asarray(self._pos)
+        if self.use_metadata:
+            t_max = max(int(self._pos[i]) for i, _ in live)
+            step = self.sched.decode_entry(t_max, self._build_decode).step
+        else:
+            step = self._fallback_step
+        if self._state_dev is None:
+            self._state_dev = {k: jnp.asarray(v)
+                               for k, v in self._state.items()}
+        out, self._caches = step(self._params, self._caches, tok, t,
+                                 self._state_dev)
+        out = np.asarray(out)
+        for i, st in live:
+            self._advance(i, st, int(out[i]), events)
+
+    def _advance(self, i: int, st: SlotState, tok_out: int,
+                 events: List[Event]) -> None:
+        self._pos[i] += 1
+        st.completion.steps += 1
+        if st.prompt_left:                      # loop-mode prefilling
+            self._next_token[i] = st.prompt_left.pop(0)
+            return
+        self._emit_token(i, st, tok_out, events)
+
+    def _finish_reason(self, i: int, st: SlotState,
+                       token: int) -> Optional[str]:
+        req = st.request
+        if req.eos_id is not None and token == req.eos_id:
+            return FINISH_EOS
+        if token in req.sampling.stop:
+            return FINISH_STOP
+        if len(st.completion.tokens) >= req.max_new_tokens:
+            return FINISH_LENGTH
+        if self._pos[i] >= self.max_len - 1:
+            if not self._warned_capacity:
+                self._warned_capacity = True
+                warnings.warn(
+                    f"request {req.request_id} hit the KV cache capacity "
+                    f"(max_len={self.max_len}) mid-generation; finishing "
+                    "with finish_reason='cache_capacity' (further "
+                    "occurrences on this engine are silent)",
+                    RuntimeWarning, stacklevel=3)
+            return FINISH_CACHE_CAPACITY
+        return None
+
+    def _emit_token(self, i: int, st: SlotState, token: int,
+                    events: List[Event]) -> None:
+        comp = st.completion
+        comp.tokens.append(token)
+        q = self._queues[st.handle]
+        ev = Event(TOKEN, st.handle, comp.request_id, token=token,
+                   index=len(comp.tokens) - 1)
+        events.append(ev)
+        q.append(ev)
+        reason = self._finish_reason(i, st, token)
+        if reason is not None:
+            comp.finish_reason = reason
+            fin = Event(FINISHED, st.handle, comp.request_id,
+                        finish_reason=reason)
+            events.append(fin)
+            q.append(fin)
+            self.sched.finish(i)
+        else:
+            self._next_token[i] = token
+
+
+class DecodeEngine:
+    """Legacy batch-synchronous facade: ``generate(requests)``.
+
+    A thin wrapper over :class:`ServingEngine` pinned to
+    ``prefill_mode="loop"`` (decode-by-teacher-forcing admission) and
+    the pure-argmax :class:`~repro.serving.sampling.GreedySampler` (the
+    wrapper's documented contract is greedy-only, and argmax keeps the
+    jitted step as cheap as the pre-redesign one — no per-token vocab
+    sorts).  That makes its completions bit-identical to the
+    pre-redesign engine: same plan buckets, same specialized steps,
+    same launch order, same ``jnp.argmax``.  New code should drive
+    :class:`ServingEngine` directly (see the README migration map).
+    """
+
+    def __init__(self, model: Model, scfg: ServeConfig, *,
+                 max_len: int = 256, batch_slots: int = 4,
+                 policy: Optional[str] = None):
+        self.engine = ServingEngine(model, scfg, max_len=max_len,
+                                    batch_slots=batch_slots, policy=policy,
+                                    prefill_mode="loop",
+                                    sampler=GreedySampler())
+        self.model = model
+        self.cfg = model.cfg
+        self.policy = self.engine.policy
+        self.max_len = max_len
+        self.B = batch_slots
+        self.use_metadata = self.engine.use_metadata
+        self.planner = self.engine.planner
+
+    @property
+    def stats(self) -> PlanCacheStats:
+        return self.engine.stats
+
+    def load(self, params: Pytree) -> None:
+        self.engine.load(params)
+
+    def planned_splits(self) -> Dict[int, int]:
+        return self.engine.planned_splits()
+
+    def _metadata(self, t_max: int) -> LaunchPlan:
+        return self.engine._metadata(t_max)
+
+    def generate(self, requests: Sequence[Request]) -> List[Completion]:
+        # validate up front: a bad request must fail fast, not abort the
+        # batch mid-flight after other requests already completed
+        for req in requests:
+            self.engine.validate(req)
+        for req in requests:
+            self.engine.submit(req)
+        return self.engine.drain()

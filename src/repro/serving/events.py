@@ -1,0 +1,51 @@
+"""Serving events: what :meth:`ServingEngine.step` emits per launch.
+
+Every generated token surfaces as one :data:`TOKEN` event; a request's
+last event is always a :data:`FINISHED` event carrying the
+``finish_reason`` that ended it:
+
+- ``"eos"``            — the request's ``eos_id`` was sampled.
+- ``"stop"``           — a ``SamplingParams.stop`` token was sampled.
+- ``"length"``         — the ``max_new_tokens`` budget is exhausted.
+- ``"cache_capacity"`` — the slot hit the KV cache's last writable row
+  (``max_len - 1``).  The pre-redesign engine ended these requests
+  indistinguishably from EOS; surfacing the reason (plus a once-per-
+  engine warning) is how operators notice undersized caches.
+
+Events are plain frozen dataclasses so they hash, compare and log
+cleanly; streaming consumers (:meth:`ServingEngine.stream`) receive the
+same objects ``step()`` returned.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+# event kinds
+TOKEN = "token"
+FINISHED = "finished"
+
+# finish reasons
+FINISH_EOS = "eos"
+FINISH_STOP = "stop"
+FINISH_LENGTH = "length"
+FINISH_CACHE_CAPACITY = "cache_capacity"
+
+FINISH_REASONS = (FINISH_EOS, FINISH_STOP, FINISH_LENGTH,
+                  FINISH_CACHE_CAPACITY)
+
+
+@dataclass(frozen=True)
+class Event:
+    """One serving event.
+
+    ``index`` is the 0-based position of ``token`` within the request's
+    generated tokens (TOKEN events only); ``finish_reason`` is set on
+    FINISHED events only.
+    """
+    kind: str                           # TOKEN | FINISHED
+    handle: int                         # ServingEngine.submit() handle
+    request_id: int
+    token: Optional[int] = None
+    index: Optional[int] = None
+    finish_reason: Optional[str] = None

@@ -1,0 +1,191 @@
+"""Pluggable token sampling for the serving engine.
+
+:class:`SamplingParams` is the per-request knob set (temperature /
+top-k / top-p / seed / stop tokens); a :class:`Sampler` turns a batch of
+logits into a batch of tokens *inside the jitted step*.  The engine
+keeps one row of sampler state per decode slot (the params as arrays
+plus a per-request PRNG key) and passes the whole state dict through
+the jit boundary, so changing a request's sampling params never
+recompiles the step.
+
+Determinism contract: the PRNG key is derived from the request's
+``seed`` alone and folded with the *absolute position* of the sampled
+token, so a request's tokens are a pure function of (params, prompt,
+sampling params) — independent of which slot it lands in or how many
+slots the engine runs (asserted in tests across ``batch_slots`` 1/2/4).
+
+``temperature == 0`` is exact greedy argmax — bit-identical to the
+pre-redesign engine's ``jnp.argmax`` path, which the legacy
+``DecodeEngine`` wrapper relies on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+# sampler state: one row per decode slot, threaded through the jit
+SamplerState = Dict[str, Array]
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (vLLM-style).
+
+    ``temperature == 0`` selects greedy argmax; ``top_k == 0`` and
+    ``top_p == 1.0`` disable the respective truncations.  ``stop`` is a
+    tuple of token ids that end the request with
+    ``finish_reason="stop"`` (the stop token itself is still emitted).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+def _mask_top_k(scaled: Array, top_k: Array) -> Array:
+    """Keep each row's k largest logits (k == 0 disables). Ties at the
+    threshold are kept, per the usual top-k convention."""
+    V = scaled.shape[-1]
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k = jnp.clip(jnp.where(top_k <= 0, V, top_k), 1, V)
+    thresh = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)
+    return jnp.where(scaled < thresh, -jnp.inf, scaled)
+
+
+def _mask_top_p(scaled: Array, top_p: Array) -> Array:
+    """Nucleus truncation: keep the smallest prefix of the
+    probability-sorted vocab whose mass reaches ``top_p`` (the argmax is
+    always kept)."""
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p[:, None]        # mass BEFORE this token
+    kept = jnp.where(keep, desc, jnp.inf)
+    thresh = jnp.min(kept, axis=-1, keepdims=True)
+    return jnp.where(scaled < thresh, -jnp.inf, scaled)
+
+
+class Sampler:
+    """Base sampler: per-slot state rows + an in-jit ``sample``.
+
+    ``slot_state(params)`` produces the host-side scalars the engine
+    writes into slot ``i`` of its state arrays at admission;
+    ``sample(logits, state, pos)`` runs inside the jitted step.
+    Subclass (and :func:`register_sampler`) to plug in new strategies.
+    """
+
+    #: state-array layout: name -> (trailing shape, dtype)
+    STATE_SPEC = {
+        "temperature": ((), np.float32),
+        "top_k": ((), np.int32),
+        "top_p": ((), np.float32),
+        "key": ((2,), np.uint32),
+    }
+
+    def init_state(self, batch_slots: int) -> Dict[str, np.ndarray]:
+        """Host-side per-slot state arrays (one row per decode slot)."""
+        state = {}
+        for name, (shape, dtype) in self.STATE_SPEC.items():
+            state[name] = np.zeros((batch_slots,) + shape, dtype)
+        state["top_p"][:] = 1.0
+        return state
+
+    def slot_state(self, sp: SamplingParams) -> Dict[str, np.ndarray]:
+        """One request's state row, written at slot admission."""
+        return {
+            "temperature": np.float32(sp.temperature),
+            "top_k": np.int32(sp.top_k),
+            "top_p": np.float32(sp.top_p),
+            "key": np.asarray(jax.random.PRNGKey(sp.seed), np.uint32),
+        }
+
+    def check(self, sp: SamplingParams) -> None:
+        """Reject params this sampler would silently ignore (called at
+        ``ServingEngine.submit`` so the mismatch fails fast)."""
+
+    def sample(self, logits: Array, state: SamplerState,
+               pos: Array) -> Array:
+        """logits (B, V), state rows (B, ...), pos (B,) -> tokens (B,).
+
+        Runs at trace time inside the jitted decode/prefill step."""
+        raise NotImplementedError
+
+
+class GreedySampler(Sampler):
+    """Pure argmax — the cheapest jitted step (no vocab sorts / PRNG).
+    Rejects requests that actually ask for sampling."""
+
+    def sample(self, logits: Array, state: SamplerState,
+               pos: Array) -> Array:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def check(self, sp: SamplingParams) -> None:
+        if sp.temperature > 0 or sp.top_k > 0 or sp.top_p < 1.0:
+            raise ValueError(
+                "GreedySampler ignores temperature/top_k/top_p; use "
+                "CategoricalSampler (the ServingEngine default) for "
+                f"sampled requests, got {sp}")
+
+
+class CategoricalSampler(Sampler):
+    """Temperature / top-k / top-p sampling, greedy where temp == 0.
+
+    All three truncations compose (k then p, both over the temperature-
+    scaled logits).  The greedy branch is exact ``jnp.argmax`` — rows
+    with ``temperature == 0`` are bit-identical to :class:`GreedySampler`.
+    """
+
+    def sample(self, logits: Array, state: SamplerState,
+               pos: Array) -> Array:
+        temp = state["temperature"]
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)[:, None]
+        scaled = _mask_top_k(scaled, state["top_k"])
+        scaled = _mask_top_p(scaled, state["top_p"])
+        keys = jax.vmap(jax.random.fold_in)(state["key"],
+                                            pos.astype(jnp.uint32))
+        sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+        return jnp.where(temp <= 0.0, greedy, sampled.astype(jnp.int32))
+
+
+_SAMPLERS: Dict[str, Type[Sampler]] = {}
+
+
+def register_sampler(name: str, cls: Type[Sampler]) -> None:
+    _SAMPLERS[name] = cls
+
+
+def get_sampler(name: str) -> Sampler:
+    """Sampler registry: ``greedy`` | ``categorical`` (aliases
+    ``temperature`` / ``top_k`` / ``top_p`` — the knobs live in
+    :class:`SamplingParams`, the math in one sampler)."""
+    try:
+        return _SAMPLERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown sampler {name!r}; "
+                         f"known: {sorted(_SAMPLERS)}") from None
+
+
+register_sampler("greedy", GreedySampler)
+register_sampler("categorical", CategoricalSampler)
+register_sampler("temperature", CategoricalSampler)
+register_sampler("top_k", CategoricalSampler)
+register_sampler("top_p", CategoricalSampler)

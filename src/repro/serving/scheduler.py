@@ -1,0 +1,219 @@
+"""Scheduler: slot admission, per-slot request state, bucketed plans.
+
+The scheduler is the pure-Python half of the serving engine: it owns
+the fixed pool of decode slots, the pending-request queue, and — via
+the PR-2 :class:`~repro.plan.Planner` / :class:`~repro.plan.PlanCache`
+— every launch-plan decision the engine consumes.  The engine owns the
+arrays and the jitted steps; it asks the scheduler *which* plan covers
+the current launch and hands back a builder for the specialized step.
+
+Two plan families share the one cache (and its
+:class:`~repro.plan.PlanCacheStats` counters):
+
+- **decode** plans, keyed by the int cache-length bucket (exactly the
+  pre-redesign engine's keys, so legacy stats assertions keep holding);
+- **prefill** plans, keyed by ``("prefill", bucket)`` where ``bucket``
+  is the prompt length rounded up to ``prefill_bucket`` — one planned,
+  jitted fused-prefill launch per admission, reused across every prompt
+  in the same bucket.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.plan import AttentionSpec, LaunchPlan, PlanCache, Planner, \
+    bucket_seqlen
+from repro.serving.sampling import GREEDY, SamplingParams
+
+
+@dataclass
+class Request:
+    """One generation request (the engine's public input)."""
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = GREEDY
+
+
+@dataclass
+class Completion:
+    """One finished (or in-flight) request's output."""
+    request_id: int
+    prompt: List[int]
+    tokens: List[int] = field(default_factory=list)
+    steps: int = 0
+    finish_reason: Optional[str] = None
+
+
+@dataclass
+class SlotState:
+    """Per-slot request lifecycle state (host side).
+
+    The launch-facing per-slot numerics (next write position, next fed
+    token) live ONLY in the engine's arrays — they must survive a
+    slot's death for legacy bit-equality, so duplicating them here
+    would invite desync."""
+    handle: int
+    request: Request
+    completion: Completion
+    prompt_left: List[int] = field(default_factory=list)  # loop prefill
+
+
+@dataclass(frozen=True)
+class PlanEntry:
+    """One plan-cache entry: a frozen plan + its specialized step."""
+    key: Any
+    plan: LaunchPlan
+    step: Any                          # jitted, specialized on ``plan``
+
+    @property
+    def metadata(self) -> LaunchPlan:  # legacy field name
+        return self.plan
+
+
+class Scheduler:
+    """Slot admission + per-slot state + bucketed plan selection."""
+
+    def __init__(self, cfg: ModelConfig, *, batch_slots: int, max_len: int,
+                 policy: str, num_splits_override: Optional[int] = None,
+                 bucket_width: int = 128,
+                 prefill_bucket: Optional[int] = None,
+                 plan_capacity: Optional[int] = None):
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.bucket_width = bucket_width
+        self.prefill_bucket_width = prefill_bucket or bucket_width
+        self.planner = Planner(policy=policy,
+                               num_splits_override=num_splits_override)
+        self.plans: PlanCache = PlanCache(plan_capacity)
+        self.slots: List[Optional[SlotState]] = [None] * batch_slots
+        self.pending: Deque[SlotState] = deque()
+
+    # --- admission ----------------------------------------------------------
+
+    def validate(self, req: Request) -> None:
+        """Fail fast on requests that could never run (an admitted bad
+        request must not abort a batch mid-flight)."""
+        if not req.prompt:
+            raise ValueError(f"request {req.request_id}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.request_id}: max_new_tokens must be >= 1, "
+                f"got {req.max_new_tokens}")
+        if len(req.prompt) >= self.max_len:
+            # prefill would write past the cache and silently corrupt
+            # the last row (dynamic_update_slice clamps) — refuse
+            raise ValueError(
+                f"request {req.request_id}: prompt length "
+                f"{len(req.prompt)} >= max_len ({self.max_len})")
+
+    def submit(self, handle: int, req: Request) -> SlotState:
+        """Enqueue a request the engine has already passed through
+        :meth:`validate` (the engine owns the single validation pass —
+        duplicating the checks here would invite drift)."""
+        st = SlotState(handle, req,
+                       Completion(req.request_id, list(req.prompt)))
+        self.pending.append(st)
+        return st
+
+    def admit_next(self) -> Optional[Tuple[int, SlotState]]:
+        """Pop one pending request into the lowest free slot (None when
+        no slot is free or nothing is pending)."""
+        if not self.pending:
+            return None
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                st = self.pending.popleft()
+                self.slots[i] = st
+                return i, st
+        return None
+
+    def finish(self, i: int) -> None:
+        self.slots[i] = None
+
+    # --- liveness -----------------------------------------------------------
+
+    def live(self) -> List[Tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    # --- decode planning ----------------------------------------------------
+
+    def _kv_heads(self) -> int:
+        """H_KV as the decode workload sees it (MLA: one shared latent)."""
+        return 1 if self.cfg.mla else self.cfg.num_kv_heads
+
+    def decode_bucket(self, t_max: int) -> int:
+        """Cache-length bucket for the longest live position."""
+        return bucket_seqlen(min(int(t_max) + 1, self.max_len),
+                             self.bucket_width)
+
+    def decode_spec(self, bucket: int) -> AttentionSpec:
+        cfg = self.cfg
+        return AttentionSpec.decode(self.B, bucket, cfg.num_heads,
+                                    self._kv_heads(),
+                                    cfg.resolved_head_dim)
+
+    def decode_plan(self, t_max: int) -> LaunchPlan:
+        """Compute (not cache) the frozen decode plan for ``t_max``."""
+        bucket = self.decode_bucket(t_max)
+        return self.planner.plan(self.decode_spec(bucket), bucket=bucket)
+
+    def decode_entry(self, t_max: int,
+                     build: Callable[[LaunchPlan], Any]) -> PlanEntry:
+        """Plan-cache lookup: one specialized jitted step per bucket."""
+        bucket = self.decode_bucket(t_max)
+
+        def miss() -> PlanEntry:
+            plan = self.planner.plan(self.decode_spec(bucket),
+                                     bucket=bucket)
+            return PlanEntry(bucket, plan, build(plan))
+
+        return self.plans.get_or_build(bucket, miss)
+
+    # --- prefill planning ---------------------------------------------------
+
+    def prefill_len(self, prompt_len: int) -> int:
+        """Prompt length rounded up to its prefill bucket (capped at the
+        cache length so the padded prompt always fits)."""
+        return min(bucket_seqlen(prompt_len, self.prefill_bucket_width),
+                   self.max_len)
+
+    def prefill_spec(self, bucket: int) -> AttentionSpec:
+        cfg = self.cfg
+        return AttentionSpec.prefill(1, bucket, cfg.num_heads,
+                                     self._kv_heads(),
+                                     cfg.resolved_head_dim)
+
+    def prefill_entry(self, prompt_len: int,
+                      build: Callable[[LaunchPlan], Any]) -> PlanEntry:
+        """One planned, jitted fused-prefill specialization per prompt-
+        length bucket, resident in the same PlanCache as decode plans."""
+        bucket = self.prefill_len(prompt_len)
+        key = ("prefill", bucket)
+
+        def miss() -> PlanEntry:
+            plan = self.planner.plan(self.prefill_spec(bucket),
+                                     bucket=bucket)
+            return PlanEntry(key, plan, build(plan))
+
+        return self.plans.get_or_build(key, miss)
+
+    # --- observability ------------------------------------------------------
+
+    def planned_splits(self) -> Dict[int, int]:
+        """bucket -> frozen num_splits, for every resident DECODE plan."""
+        return {k: e.plan.num_splits for k, e in self.plans.items()
+                if isinstance(k, int)}
+
+    def planned_prefill_buckets(self) -> List[int]:
+        """Resident prefill-plan buckets (sorted)."""
+        return sorted(k[1] for k in self.plans.keys()
+                      if isinstance(k, tuple) and k[0] == "prefill")

@@ -1,0 +1,420 @@
+"""Request-lifecycle serving API: scheduling invariants, sampling,
+streaming, fused-prefill plan accounting, legacy bit-equality."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.kernels import ops
+from repro.plan import AttentionSpec, PlanCache, Planner, bucket_seqlen
+from repro.models import build_model
+from repro.serving import (
+    FINISHED,
+    TOKEN,
+    DecodeEngine,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(cfg, model, params, slots, *, max_len=64, **kw):
+    eng = ServingEngine(model, ServeConfig(model=cfg), max_len=max_len,
+                        batch_slots=slots, **kw)
+    eng.load(params)
+    return eng
+
+
+def _reqs(sampling=None, lens=(3, 9, 2, 5), max_new=(6, 4, 8, 5)):
+    sampling = sampling or SamplingParams()
+    return [Request(i, [(7 * i + j) % 200 + 1 for j in range(n)],
+                    max_new_tokens=m, sampling=sampling)
+            for i, (n, m) in enumerate(zip(lens, max_new))]
+
+
+# ---------------------------------------------------------------------------
+# Scheduling invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_tokens_independent_of_slot_packing(tiny_model, temperature):
+    """Same request -> same tokens for batch_slots in {1, 2, 4}, greedy
+    AND seeded sampling, with staggered lengths forcing mid-flight
+    refills next to live slots (the slot-reset helper must only touch
+    the admitted slot)."""
+    cfg, model, params = tiny_model
+    sp = SamplingParams(temperature=temperature, top_k=16, top_p=0.95,
+                        seed=13)
+    results = []
+    for slots in (1, 2, 4):
+        eng = _engine(cfg, model, params, slots)
+        for r in _reqs(sp):
+            eng.submit(r)
+        results.append([c.tokens for c in eng.drain()])
+    assert results[0] == results[1] == results[2]
+
+
+def test_submit_mid_flight_and_drain(tiny_model):
+    """Requests submitted while others are decoding still complete, and
+    drain returns every undrained completion exactly once."""
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 2)
+    eng.submit(Request(0, [1, 2, 3], max_new_tokens=6))
+    eng.step()
+    eng.step()
+    eng.submit(Request(1, [4, 5], max_new_tokens=3))
+    done = eng.drain()
+    assert [c.request_id for c in done] == [0, 1]
+    assert [len(c.tokens) for c in done] == [6, 3]
+    assert eng.drain() == []                     # nothing left undrained
+
+
+def test_step_events_cover_every_token(tiny_model):
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 2)
+    for r in _reqs(lens=(3, 5), max_new=(4, 3)):
+        eng.submit(r)
+    events = []
+    while eng.has_work():
+        events += eng.step()
+    done = eng.drain()
+    toks = {c.request_id: [e.token for e in events
+                           if e.kind == TOKEN and e.request_id
+                           == c.request_id] for c in done}
+    assert all(toks[c.request_id] == c.tokens for c in done)
+    fins = [e for e in events if e.kind == FINISHED]
+    assert sorted(e.request_id for e in fins) == [0, 1]
+    assert all(e.finish_reason == "length" for e in fins)
+
+
+def test_invalid_requests_rejected_before_any_state(tiny_model):
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 1)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(0, []))
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(Request(1, list(range(64)), max_new_tokens=1))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(2, [1, 2], max_new_tokens=0))
+    assert not eng.has_work()
+
+
+def test_greedy_sampler_rejects_sampled_requests(tiny_model):
+    """A GreedySampler engine must fail fast on requests whose sampling
+    knobs it would silently ignore (e.g. CLI --sampler greedy
+    --temperature 0.8)."""
+    from repro.serving import GreedySampler
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 1, sampler=GreedySampler())
+    with pytest.raises(ValueError, match="GreedySampler ignores"):
+        eng.submit(Request(0, [1, 2],
+                           sampling=SamplingParams(temperature=0.5)))
+    eng.submit(Request(1, [1, 2], max_new_tokens=3))     # greedy is fine
+    assert len(eng.drain()[0].tokens) == 3
+
+
+# ---------------------------------------------------------------------------
+# Streaming
+# ---------------------------------------------------------------------------
+
+
+def test_stream_event_ordering_per_handle(tiny_model):
+    """stream(handle) yields that handle's TOKEN events with contiguous
+    indices, terminated by exactly one FINISHED — even while another
+    handle decodes in the same lockstep."""
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 2)
+    h0 = eng.submit(Request(0, [1, 2, 3], max_new_tokens=5))
+    h1 = eng.submit(Request(1, [9, 8], max_new_tokens=3))
+    evs0 = list(eng.stream(h0))
+    assert [e.kind for e in evs0] == [TOKEN] * 5 + [FINISHED]
+    assert [e.index for e in evs0[:-1]] == list(range(5))
+    assert all(e.request_id == 0 for e in evs0)
+    # h1 finished during h0's stream; its queued events replay in order
+    evs1 = list(eng.stream(h1))
+    assert [e.kind for e in evs1] == [TOKEN] * 3 + [FINISHED]
+    assert [e.index for e in evs1[:-1]] == [0, 1, 2]
+    # streamed-to-FINISHED handles are fully released: drain has nothing
+    # left and a second stream raises a clear error, so a streaming-only
+    # server holds no per-request state
+    assert eng.drain() == []
+    assert not eng._completions and not eng._queues
+    with pytest.raises(ValueError, match="unknown, already streamed"):
+        next(eng.stream(h0))
+
+
+def test_mid_stream_drain_does_not_double_deliver(tiny_model):
+    """drain() releasing a handle mid-stream must stop the generator —
+    not replay the drained tokens from an orphaned queue."""
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 1)
+    h = eng.submit(Request(0, [1, 2], max_new_tokens=4))
+    it = eng.stream(h)
+    next(it)                                     # consume one TOKEN
+    done = eng.drain()                           # delivers everything
+    assert len(done[0].tokens) == 4
+    assert list(it) == []
+
+
+# ---------------------------------------------------------------------------
+# Finish reasons (incl. the cache-capacity satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_capacity_finish_reason_and_single_warning(tiny_model):
+    """A slot hitting max_len - 1 mid-generation used to 'finish'
+    indistinguishably from EOS; it must now surface as
+    finish_reason='cache_capacity' and warn once per engine."""
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 1, max_len=32)
+    eng.submit(Request(0, [1] * 20, max_new_tokens=100))
+    eng.submit(Request(1, [2] * 20, max_new_tokens=100))
+    with pytest.warns(RuntimeWarning, match="cache_capacity") as rec:
+        done = eng.drain()
+    assert [c.finish_reason for c in done] == ["cache_capacity"] * 2
+    # prompt rows 0..19, generated rows 20..30; stops when the next
+    # write position reaches max_len - 1 = 31 (pre-redesign cutoff)
+    assert [len(c.tokens) for c in done] == [12, 12]
+    assert len([w for w in rec
+                if issubclass(w.category, RuntimeWarning)]) == 1
+
+
+def test_eos_stop_and_length_reasons(tiny_model):
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 1)
+    eng.submit(Request(0, [1, 2, 3], max_new_tokens=6))
+    ref = eng.drain()[0]
+    assert ref.finish_reason == "length"
+    # replay greedily: the 2nd token as eos, then as a stop token
+    eng2 = _engine(cfg, model, params, 1)
+    eng2.submit(Request(0, [1, 2, 3], max_new_tokens=6,
+                        eos_id=ref.tokens[1]))
+    out = eng2.drain()[0]
+    assert out.tokens == ref.tokens[:2] and out.finish_reason == "eos"
+    eng3 = _engine(cfg, model, params, 1)
+    eng3.submit(Request(0, [1, 2, 3], max_new_tokens=6,
+                        sampling=SamplingParams(stop=(ref.tokens[1],))))
+    out = eng3.drain()[0]
+    assert out.tokens == ref.tokens[:2] and out.finish_reason == "stop"
+
+
+# ---------------------------------------------------------------------------
+# Fused bucketed prefill: plan accounting (paper's O(1)-launch claim)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_prefill_o1_launches_and_bucket_reuse(tiny_model):
+    """Each admission is exactly ONE planned prefill launch; prefill
+    plans live in the same PlanCache as decode plans, keyed per
+    prompt-length bucket, and same-bucket prompts re-use the plan
+    (hits, not recompiles).  The policy never runs in-trace."""
+    cfg, model, params = tiny_model
+    eng = _engine(cfg, model, params, 2, max_len=300)
+    ops.reset_policy_eval_count()
+    # three prompts in the 128 bucket, one in the 256 bucket
+    for i, n in enumerate((5, 40, 100, 200)):
+        eng.submit(Request(i, [1 + i] * n, max_new_tokens=3))
+    eng.drain()
+    st = eng.stats
+    assert ops.policy_eval_count() == 0
+    assert eng.planned_prefill_buckets() == [128, 256]
+    assert st.launches[("prefill", 128)] == 3    # reused across prompts
+    assert st.launches[("prefill", 256)] == 1
+    pre_launches = sum(v for k, v in st.launches.items()
+                       if isinstance(k, tuple))
+    assert pre_launches == 4                     # == admissions: O(1) each
+    pre_misses = sum(1 for k in st.seen_buckets if isinstance(k, tuple))
+    assert pre_misses == 2                       # one compile per bucket
+    # decode plans ride the same cache, under their legacy int keys
+    assert set(eng.planned_splits()) <= {128, 256, 384}
+
+
+def test_fused_prefill_matches_loop_prefill_tokens(tiny_model):
+    cfg, model, params = tiny_model
+    out = {}
+    for mode in ("fused", "loop"):
+        eng = _engine(cfg, model, params, 2, prefill_mode=mode)
+        for r in _reqs():
+            eng.submit(r)
+        out[mode] = [c.tokens for c in eng.drain()]
+    assert out["fused"] == out["loop"]
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "whisper-large-v3"])
+def test_fused_prefill_other_families(arch):
+    """MLA (latent cache) and encdec (self+cross caches) support the
+    single-slot fused prefill and agree with teacher-forcing."""
+    cfg = reduced_config(arch, num_layers=2, d_model=32)
+    model = build_model(cfg)
+    assert model.supports_fused_prefill
+    params = model.init_params(jax.random.PRNGKey(0))
+    out = {}
+    for mode in ("fused", "loop"):
+        eng = ServingEngine(model, ServeConfig(model=cfg), max_len=64,
+                            batch_slots=2, prefill_mode=mode)
+        eng.load(params)
+        eng.submit(Request(0, [1, 2, 3], max_new_tokens=4))
+        eng.submit(Request(1, [4] * 9, max_new_tokens=4))
+        out[mode] = [c.tokens for c in eng.drain()]
+    assert out["fused"] == out["loop"]
+
+
+def test_recurrent_families_gate_fused_prefill():
+    cfg = reduced_config("mamba2-780m", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    assert not model.supports_fused_prefill
+    with pytest.raises(ValueError, match="loop"):
+        ServingEngine(model, ServeConfig(model=cfg), max_len=64,
+                      batch_slots=1, prefill_mode="fused")
+    # auto resolves to loop and works
+    eng = ServingEngine(model, ServeConfig(model=cfg), max_len=64,
+                        batch_slots=1)
+    assert eng.prefill_mode == "loop"
+
+
+# ---------------------------------------------------------------------------
+# Legacy wrapper: bit-equality against the pre-redesign engine
+# ---------------------------------------------------------------------------
+
+
+def _reference_generate(model, scfg, params, requests, *, max_len,
+                        batch_slots):
+    """Faithful port of the pre-redesign ``DecodeEngine.generate``
+    (greedy argmax, metadata path, per-bucket specialized steps, eager
+    un-jitted slot zeroing) — the bit-equality oracle for the wrapper.
+
+    One deliberate divergence: the old ``_zero_slot`` indexed the LAYER
+    axis (``a.at[i]``), zeroing layer ``i`` of every slot — with
+    staggered request lengths that corrupts live neighbours' KV, the
+    exact bug this PR fixes.  The oracle zeroes the batch column
+    (``a.at[:, i]``) so it oracles everything *except* the fixed bug:
+    bucket selection, plan specialization, launch order, argmax."""
+    cfg = model.cfg
+    B = batch_slots
+    planner = Planner(policy=scfg.split_policy,
+                      num_splits_override=scfg.num_splits_override)
+    plans = PlanCache(scfg.plan_cache_capacity)
+    caches = model.init_cache(B, max_len)
+
+    def step_impl(params, caches, token, t, plan=None):
+        logits, caches = model.decode_step(params, caches, token, t,
+                                           plan=plan,
+                                           policy=scfg.split_policy)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    def plan_step(t_max):
+        lk = bucket_seqlen(min(int(t_max) + 1, max_len),
+                           scfg.seqlen_bucket)
+
+        def build():
+            spec = AttentionSpec.decode(
+                B, lk, cfg.num_heads,
+                1 if cfg.mla else cfg.num_kv_heads, cfg.resolved_head_dim)
+            plan = planner.plan(spec, bucket=lk)
+            return jax.jit(functools.partial(step_impl, plan=plan),
+                           donate_argnums=(1,))
+
+        return plans.get_or_build(lk, build)
+
+    pending = list(requests)
+    slots = [None] * B
+    budget, eos = [0] * B, [None] * B
+    slot_pos = np.zeros(B, np.int32)
+    slot_prompt_left = [[] for _ in range(B)]
+    next_token = np.zeros(B, np.int32)
+    done = []
+
+    def refill(i):
+        nonlocal caches
+        if not pending:
+            return
+        req = pending.pop(0)
+        slots[i] = {"id": req.request_id, "tokens": []}
+        budget[i], eos[i] = req.max_new_tokens, req.eos_id
+        slot_prompt_left[i] = list(req.prompt)
+        slot_pos[i] = 0
+        next_token[i] = slot_prompt_left[i].pop(0)
+        caches = jax.tree.map(
+            lambda a: a.at[:, i].set(jnp.zeros_like(a[:, i])), caches)
+
+    for i in range(B):
+        refill(i)
+    while any(s is not None for s in slots):
+        t_max = max(int(slot_pos[i]) for i, s in enumerate(slots)
+                    if s is not None)
+        out, caches = plan_step(t_max)(params, caches,
+                                       jnp.asarray(next_token),
+                                       jnp.asarray(slot_pos))
+        out = np.asarray(out)
+        for i, comp in enumerate(slots):
+            if comp is None:
+                continue
+            slot_pos[i] += 1
+            if slot_prompt_left[i]:
+                next_token[i] = slot_prompt_left[i].pop(0)
+                continue
+            tok = int(out[i])
+            comp["tokens"].append(tok)
+            if (len(comp["tokens"]) >= budget[i]
+                    or (eos[i] is not None and tok == eos[i])
+                    or slot_pos[i] >= max_len - 1):
+                done.append(comp)
+                slots[i] = None
+                refill(i)
+            else:
+                next_token[i] = tok
+    done.sort(key=lambda c: c["id"])
+    return [c["tokens"] for c in done]
+
+
+def test_legacy_wrapper_bit_identical_greedy(tiny_model):
+    """DecodeEngine.generate must reproduce the pre-redesign engine's
+    greedy completions bit-exactly: serial refills, bucket crossings,
+    and an EOS mid-batch."""
+    cfg, model, params = tiny_model
+    scfg = ServeConfig(model=cfg)
+
+    def mk():
+        return [Request(0, [9, 8, 7], max_new_tokens=4),
+                Request(1, [5, 5], max_new_tokens=6),
+                Request(2, [1, 2, 3, 4, 5], max_new_tokens=8),
+                Request(3, [2] * 140, max_new_tokens=10),  # 256 bucket
+                Request(4, [6], max_new_tokens=12)]
+
+    for slots in (1, 3):
+        eng = DecodeEngine(model, scfg, max_len=300, batch_slots=slots)
+        eng.load(params)
+        got = [c.tokens for c in eng.generate(mk())]
+        want = _reference_generate(model, scfg, params, mk(),
+                                   max_len=300, batch_slots=slots)
+        assert got == want, f"greedy drift at batch_slots={slots}"
+
+
+def test_legacy_wrapper_bit_identical_with_eos(tiny_model):
+    cfg, model, params = tiny_model
+    scfg = ServeConfig(model=cfg)
+    probe = DecodeEngine(model, scfg, max_len=64, batch_slots=1)
+    probe.load(params)
+    toks = probe.generate([Request(0, [3, 1], max_new_tokens=6)])[0].tokens
+    reqs = lambda: [Request(0, [3, 1], max_new_tokens=6, eos_id=toks[2]),
+                    Request(1, [2, 2], max_new_tokens=5)]
+    eng = DecodeEngine(model, scfg, max_len=64, batch_slots=2)
+    eng.load(params)
+    got = [c.tokens for c in eng.generate(reqs())]
+    want = _reference_generate(model, scfg, params, reqs(),
+                               max_len=64, batch_slots=2)
+    assert got == want
+    assert got[0][-1] == toks[2]                 # actually cut by eos
