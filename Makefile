@@ -7,15 +7,20 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify verify-all bench golden plan-golden serving-smoke
+.PHONY: verify verify-all bench golden plan-golden serving-smoke cache-smoke
 
-verify: plan-golden serving-smoke
+verify: plan-golden serving-smoke cache-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 # seconds-scale serving A/B: fused-prefill admission must stay O(1)
 # planned launches per request (structural counters, not timing)
 serving-smoke:
 	$(PY) -m benchmarks.serving_ab --smoke
+
+# seconds-scale cache-layout A/B: paged must match dense greedy tokens
+# bit-exact while allocating/streaming fewer cache bytes (structural)
+cache-smoke:
+	$(PY) -m benchmarks.cache_ab --smoke
 
 verify-all:
 	$(PY) -m pytest -q

@@ -7,12 +7,17 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Sequence
 
 OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+# --smoke variants run from `make verify` / CI on every push; their CSVs
+# land in a gitignored subdir so a verify run never dirties the tree
+# (full-run CSVs stay committed next to the tables they reproduce)
+SMOKE_DIR = OUT_DIR / "smoke"
 
 
 def write_csv(name: str, header: Sequence[str],
-              rows: Iterable[Sequence]) -> Path:
-    OUT_DIR.mkdir(parents=True, exist_ok=True)
-    p = OUT_DIR / f"{name}.csv"
+              rows: Iterable[Sequence], smoke: bool = False) -> Path:
+    out = SMOKE_DIR if smoke else OUT_DIR
+    out.mkdir(parents=True, exist_ok=True)
+    p = out / f"{name}.csv"
     with open(p, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(header)

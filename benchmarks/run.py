@@ -10,6 +10,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        cache_ab,
         metadata_ab,
         regression_sweep,
         roofline_report,
@@ -27,6 +28,8 @@ def main() -> None:
         ("metadata_ab (paper §5 serving path)", metadata_ab.main),
         ("serving_ab (fused vs loop prefill admission, TTFT/TPOT)",
          serving_ab.main),
+        ("cache_ab (DenseLayout vs PagedKVCache, mixed prompt lengths)",
+         cache_ab.main),
     ]
     failures = 0
     for name, fn in jobs:

@@ -25,7 +25,8 @@ reproducible claim, asserted below:
   admission path change the schedule, never the math).
 
 ``--smoke`` runs a seconds-scale variant wired into ``make verify`` and
-CI.  CSV lands in ``experiments/bench/``.
+CI.  CSV lands in ``experiments/bench/`` (smoke runs: the gitignored
+``experiments/bench/smoke/`` — CI must not dirty the tree).
 """
 from __future__ import annotations
 
@@ -134,7 +135,7 @@ def main(smoke: bool = False) -> None:
     title = ("serving A/B: fused vs loop prefill admission "
              f"({'smoke' if smoke else 'full'}, Poisson-ish arrivals)")
     print_table(header, rows, title)
-    write_csv("serving_ab_smoke" if smoke else "serving_ab", header, rows)
+    write_csv("serving_ab", header, rows, smoke=smoke)
 
     # structural claims (the reproducible part of the A/B)
     n_req = len(lens)

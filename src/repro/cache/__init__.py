@@ -1,0 +1,29 @@
+"""repro.cache: the KV-cache subsystem (CacheSpec -> CacheLayout ->
+PagedKVCache), mirroring the repro.plan design.
+
+- :class:`CacheSpec`   — WHAT cache: family, capacity, dtype, layout.
+- :class:`CacheLayout` — HOW it's arranged on device:
+  :class:`DenseLayout` (the pre-redesign arrays, bit-identical) or
+  :class:`PagedKVCache` (fixed-size pages + per-slot page tables).
+- :class:`CacheManager` — residency bookkeeping: per-slot ``kv_len``
+  (the planner's resident-length summary), free-list page allocation,
+  page-table device mirroring.
+
+Entry points the stack threads instead of owning raw arrays:
+``gather_view`` / ``scatter_view`` (decode), ``slot_view`` /
+``write_slot`` (fused-prefill admission), ``zero_slot`` (admission
+reset), plus the :class:`~repro.kernels.ops.PagedKV` per-tensor view
+``kernels.ops.decode_attention`` accepts directly.
+"""
+from repro.cache.layout import (  # noqa: F401
+    CacheLayout,
+    DenseLayout,
+    PagedKV,
+    PagedKVCache,
+)
+from repro.cache.manager import CacheManager  # noqa: F401
+from repro.cache.spec import (  # noqa: F401
+    LAYOUTS,
+    TRASH_PAGE,
+    CacheSpec,
+)

@@ -1,0 +1,275 @@
+"""CacheLayout: pluggable device-side cache arrangements.
+
+A layout owns the mapping between the model-facing cache VIEW (the
+pytree every ``decode_step`` / ``prefill_slot`` consumes — dense
+``(layers, B, L, ...)`` leaves) and the device STORAGE (whatever the
+layout actually allocates).  Four entry points, all pure and traceable:
+
+- ``init_storage()``                      — allocate the storage pytree;
+- ``gather_view(storage, table, n)``      — full-batch dense view of the
+  first ``n`` pages per slot (paged) / the storage itself (dense);
+- ``scatter_view(storage, view, ...)``    — write an updated view back;
+- ``slot_view`` / ``write_slot``          — the batch-1 variants the
+  fused-prefill admission path uses.
+
+:class:`DenseLayout` is bit-identical to the pre-redesign arrays (its
+``init_storage`` is exactly what ``Model.init_cache`` always returned);
+:class:`PagedKVCache` stores pageable leaves as fixed-size pages in a
+shared pool, gathered per launch through
+:func:`repro.kernels.ops.gather_pages` — the layout-aware gather path.
+
+Leaf pageability: a cache leaf pages iff its spec says so
+(``ParamSpec.paged``), or — when unmarked — iff it carries a "seq" axis
+spanning the full slot capacity.  Position-complete leaves (encdec
+cross K/V: read to their full length every step) and recurrent states
+(no seq axis) stay dense inside the paged storage and pass through the
+gather untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.spec import CacheSpec
+from repro.kernels import ops
+from repro.models.common import ParamSpec, is_spec
+
+Pytree = Any
+
+# Re-export: the per-tensor paged view consumed by ops.decode_attention.
+PagedKV = ops.PagedKV
+
+
+def _map_specs(fn, specs: Pytree, *trees: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(fn, specs, *trees, is_leaf=is_spec)
+
+
+class CacheLayout:
+    """Base: resolved from a :class:`CacheSpec` by the CacheManager."""
+
+    kind: str = "abstract"
+
+    def __init__(self, model, spec: CacheSpec):
+        self.model = model
+        self.spec = spec
+        self.specs = model.cache_specs(spec.batch, spec.max_len,
+                                       spec.kv_dtype)
+
+    # --- sizing (observability / benchmarks) --------------------------------
+
+    def _leaf_bytes(self, s: ParamSpec) -> int:
+        n = 1
+        for d in s.shape:
+            n *= d
+        return n * jnp.dtype(s.jdtype).itemsize
+
+    def dense_bytes(self) -> int:
+        """Bytes of the dense-equivalent storage (the baseline)."""
+        leaves = jax.tree_util.tree_leaves(self.specs, is_leaf=is_spec)
+        return sum(self._leaf_bytes(s) for s in leaves)
+
+    def storage_bytes(self) -> int:
+        raise NotImplementedError
+
+    def row_bytes(self) -> int:
+        """Pageable-cache bytes per resident row per slot (all layers)."""
+        total = 0
+        for s in jax.tree_util.tree_leaves(self.specs, is_leaf=is_spec):
+            if _pageable(s, self.spec.max_len):
+                total += self._leaf_bytes(s) // (s.shape[1] * s.shape[2])
+        return total
+
+    def attended_bytes(self, view_len: int) -> int:
+        """K/V bytes one decode launch reads for a ``view_len``-row view
+        (the cache term of the decode roofline)."""
+        raise NotImplementedError
+
+
+class DenseLayout(CacheLayout):
+    """Today's arrays, kept bit-identical: storage IS the view."""
+
+    kind = "dense"
+
+    def init_storage(self) -> Pytree:
+        from repro.models.common import init_params
+        return init_params(self.specs, jax.random.PRNGKey(0))
+
+    def gather_view(self, storage: Pytree, table=None,
+                    num_pages: Optional[int] = None) -> Pytree:
+        return storage
+
+    def scatter_view(self, storage: Pytree, view: Pytree, table=None,
+                     num_pages: Optional[int] = None) -> Pytree:
+        return view
+
+    def storage_bytes(self) -> int:
+        return self.dense_bytes()
+
+    def attended_bytes(self, view_len: int) -> int:
+        # dense decode streams the PADDED slot capacity per launch
+        del view_len
+        return self.row_bytes() * self.spec.max_len * self.spec.batch
+
+
+def _pageable(s: ParamSpec, max_len: int) -> bool:
+    """Whether one cache leaf pages over its sequence axis.
+
+    Layer-stacked cache leaves are ``(layers, batch, seq, ...)``; a leaf
+    pages iff its (possibly inferred) ``paged`` flag allows it AND its
+    seq axis spans the full slot capacity — page arithmetic (position =
+    page * page_size + offset) is only meaningful there.  Ring caches
+    (seq == window < max_len) and fixed-length memories therefore stay
+    dense even if unmarked.
+    """
+    if s.paged is False:
+        return False
+    # paged=True and paged=None both defer to the shape check: page
+    # arithmetic is meaningless off the (batch, full-capacity seq) form
+    return (len(s.axes) >= 3 and s.axes[1] == "batch"
+            and s.axes[2] == "seq" and s.shape[2] == max_len)
+
+
+class PagedKVCache(CacheLayout):
+    """Fixed-size pages + per-slot page tables over a shared pool.
+
+    Pageable leaves ``(layers, B, max_len, *rest)`` are stored as
+    ``(layers, pool_pages, page_size, *rest)``; one page table ``(B,
+    slot_pages) int32`` is shared by every leaf (all layers of all
+    leaves write the same positions).  Page 0 is the trash page (see
+    :data:`repro.cache.spec.TRASH_PAGE`).  Non-pageable leaves keep
+    their dense shape inside the storage pytree and pass through
+    gather/scatter untouched.
+    """
+
+    kind = "paged"
+
+    def __init__(self, model, spec: CacheSpec):
+        super().__init__(model, spec)
+        self._paged_mask = _map_specs(
+            lambda s: _pageable(s, spec.max_len), self.specs)
+        if not any(jax.tree_util.tree_leaves(self._paged_mask)):
+            raise ValueError(
+                f"{spec.family!r} caches hold no pageable (full-capacity "
+                "seq-axis) leaves; use layout='dense'")
+
+    # --- storage ------------------------------------------------------------
+
+    def _paged_shape(self, s: ParamSpec):
+        return ((s.shape[0], self.spec.pool_pages, self.spec.page_size)
+                + s.shape[3:])
+
+    def init_storage(self) -> Pytree:
+        def one(s: ParamSpec, paged: bool):
+            shape = self._paged_shape(s) if paged else s.shape
+            return jnp.zeros(shape, s.jdtype)
+        return _map_specs(one, self.specs, self._paged_mask)
+
+    # --- full-batch decode view --------------------------------------------
+
+    def gather_view(self, storage: Pytree, table: jax.Array,
+                    num_pages: int) -> Pytree:
+        def one(s, paged, leaf):
+            if not paged:
+                return leaf
+            return ops.gather_pages(leaf, table, num_pages=num_pages,
+                                    axis=1)
+        return _map_specs(one, self.specs, self._paged_mask, storage)
+
+    def scatter_view(self, storage: Pytree, view: Pytree,
+                     table: jax.Array, num_pages: int) -> Pytree:
+        def one(s, paged, leaf, vleaf):
+            if not paged:
+                return vleaf
+            return ops.scatter_pages(leaf, vleaf, table,
+                                     num_pages=num_pages, axis=1)
+        return _map_specs(one, self.specs, self._paged_mask, storage,
+                          view)
+
+    def write_token(self, storage: Pytree, view: Pytree,
+                    table: jax.Array, positions: jax.Array,
+                    num_pages: int) -> Pytree:
+        """Write back ONLY the page holding each slot's row ``positions[b]``
+        (the decode step mutates exactly one row per slot, so scattering
+        the whole view would re-write ``view_len`` rows of HBM per step
+        for nothing).  Non-pageable leaves take the full view leaf, same
+        as :meth:`scatter_view`.  Dead slots' table rows point at the
+        trash page, so their (stale) writes land there.
+        """
+        ps = self.spec.page_size
+        pidx = positions.astype(jnp.int32) // ps              # (B,)
+        dst = jnp.take_along_axis(table, pidx[:, None], axis=1)  # (B, 1)
+
+        def one(s, paged, leaf, vleaf):
+            if not paged:
+                return vleaf
+            B = vleaf.shape[1]
+            vp = vleaf.reshape(vleaf.shape[:2] + (num_pages, ps)
+                               + vleaf.shape[3:])
+            idx = pidx.reshape((1, B, 1, 1) + (1,) * (vp.ndim - 4))
+            sel = jnp.take_along_axis(vp, idx, axis=2)  # (l, B, 1, ps, ..)
+            return leaf.at[:, dst].set(sel.astype(leaf.dtype))
+        return _map_specs(one, self.specs, self._paged_mask, storage,
+                          view)
+
+    # --- batch-1 slot view (fused-prefill admission) ------------------------
+
+    def slot_view(self, storage: Pytree, table: jax.Array,
+                  slot: jax.Array, num_pages: int) -> Pytree:
+        row = jax.lax.dynamic_slice(table, (slot, 0), (1, num_pages))
+
+        def one(s, paged, leaf):
+            if paged:
+                return ops.gather_pages(leaf, row, num_pages=num_pages,
+                                        axis=1)
+            return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+        return _map_specs(one, self.specs, self._paged_mask, storage)
+
+    def write_slot(self, storage: Pytree, view: Pytree, table: jax.Array,
+                   slot: jax.Array, num_pages: int) -> Pytree:
+        row = jax.lax.dynamic_slice(table, (slot, 0), (1, num_pages))
+
+        def one(s, paged, leaf, vleaf):
+            if paged:
+                return ops.scatter_pages(leaf, vleaf, row,
+                                         num_pages=num_pages, axis=1)
+            start = (0, slot) + (0,) * (leaf.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                leaf, vleaf.astype(leaf.dtype), start)
+        return _map_specs(one, self.specs, self._paged_mask, storage,
+                          view)
+
+    # --- admission reset ----------------------------------------------------
+
+    def zero_slot(self, storage: Pytree, slot: jax.Array) -> Pytree:
+        """Zero the NON-paged leaves' slot column (recurrent state /
+        position-complete memories must not leak across requests).
+        Paged leaves need no reset: freshly allocated pages hold stale
+        rows only at positions >= the new request's ``kv_len``, which
+        every consumer masks."""
+        def one(s, paged, leaf):
+            if paged:
+                return leaf
+            row = jnp.zeros(leaf.shape[:1] + (1,) + leaf.shape[2:],
+                            leaf.dtype)
+            start = (0, slot) + (0,) * (leaf.ndim - 2)
+            return jax.lax.dynamic_update_slice(leaf, row, start)
+        return _map_specs(one, self.specs, self._paged_mask, storage)
+
+    # --- sizing -------------------------------------------------------------
+
+    def storage_bytes(self) -> int:
+        def one(s, paged):
+            if not paged:
+                return self._leaf_bytes(s)
+            n = 1
+            for d in self._paged_shape(s):
+                n *= d
+            return n * jnp.dtype(s.jdtype).itemsize
+        sizes = _map_specs(one, self.specs, self._paged_mask)
+        return sum(jax.tree_util.tree_leaves(sizes))
+
+    def attended_bytes(self, view_len: int) -> int:
+        # paged decode streams only the RESIDENT-bucket view per launch
+        return self.row_bytes() * int(view_len) * self.spec.batch

@@ -1,0 +1,149 @@
+"""CacheManager: resolves a CacheSpec into a layout + owns residency.
+
+The manager is the pure-Python half of the cache subsystem (the analogue
+of the PR-3 ``Scheduler``): it tracks per-slot resident lengths
+(``kv_len`` — the source of truth the Planner's resident-length buckets
+come from), and, for the paged layout, the free-list and per-slot page
+tables.  The serving engine owns the device arrays (donation flow) and
+asks the manager *where* things live; the layout supplies the traceable
+gather/scatter.
+
+Page-table discipline:
+
+- page 0 is the trash page; a freshly-initialized or released slot's
+  whole table row points there;
+- allocation is per-slot prefix-contiguous: slot ``i`` holding ``n``
+  resident rows owns table entries ``[0, pages_for(n))``;
+- allocation is all-or-nothing (a partial grab is rolled back), so a
+  ``False`` from :meth:`reserve` / :meth:`ensure` leaves no state to
+  clean up — the engine turns it into the per-request
+  ``cache_capacity`` finish.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.layout import CacheLayout, DenseLayout, PagedKVCache
+from repro.cache.spec import TRASH_PAGE, CacheSpec
+
+_LAYOUTS = {"dense": DenseLayout, "paged": PagedKVCache}
+
+
+class CacheManager:
+    """Residency bookkeeping + layout resolution for one engine."""
+
+    def __init__(self, model, spec: CacheSpec):
+        self.spec = spec
+        self.layout: CacheLayout = _LAYOUTS[spec.layout](model, spec)
+        self.B = spec.batch
+        self.kv_len = np.zeros(self.B, np.int32)
+        self._table = np.full((self.B, max(1, spec.slot_pages)),
+                              TRASH_PAGE, np.int32)
+        self._allocated = np.zeros(self.B, np.int32)   # prefix page count
+        self._free: List[int] = list(range(spec.total_pages, 0, -1)) \
+            if spec.layout == "paged" else []
+        self._table_dev = None                         # dirty => None
+
+    # --- storage ------------------------------------------------------------
+
+    @property
+    def is_paged(self) -> bool:
+        return self.spec.layout == "paged"
+
+    def init_storage(self):
+        return self.layout.init_storage()
+
+    def table_device(self):
+        """Device mirror of the page table, re-uploaded only when an
+        allocation / release dirtied it (not per decode step)."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self._table)
+        return self._table_dev
+
+    # --- residency ----------------------------------------------------------
+
+    def note_write(self, slot: int, pos: int) -> None:
+        """Record that row ``pos`` of ``slot`` is now resident."""
+        self.kv_len[slot] = max(self.kv_len[slot], pos + 1)
+
+    def resident_max(self) -> int:
+        """Largest per-slot resident length (the planner's summary)."""
+        return int(self.kv_len.max()) if self.B else 0
+
+    def release(self, slot: int) -> None:
+        """Free a finished slot: resident length to zero, pages back to
+        the free list, table row to the trash page (a dead slot still
+        rides the lockstep launch — its writes must land in trash)."""
+        self.kv_len[slot] = 0
+        n = int(self._allocated[slot])
+        if n:
+            self._free.extend(int(p) for p in self._table[slot, :n][::-1])
+            self._table[slot, :n] = TRASH_PAGE
+            self._allocated[slot] = 0
+            self._table_dev = None
+
+    # --- page accounting ----------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, length: int) -> int:
+        return self.spec.pages_for(length)
+
+    def max_request_pages(self) -> int:
+        """Largest allocation a single request may ever need."""
+        return self.spec.slot_pages
+
+    def can_reserve(self, length: int) -> bool:
+        """Whether a fresh slot could hold ``length`` rows right now."""
+        if not self.is_paged:
+            return True
+        return self.pages_for(length) <= len(self._free)
+
+    def reserve(self, slot: int, length: int) -> bool:
+        """Grow ``slot``'s allocation to cover ``length`` rows
+        (all-or-nothing)."""
+        if not self.is_paged:
+            return True
+        return self._grow(slot, self.pages_for(length))
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Make row ``pos`` of ``slot`` writable (allocating its page if
+        needed).  ``False`` = pool exhausted: the engine finishes the
+        request with ``finish_reason='cache_capacity'``."""
+        if not self.is_paged:
+            return pos < self.spec.max_len
+        return self._grow(slot, pos // self.spec.page_size + 1)
+
+    def _grow(self, slot: int, need: int) -> bool:
+        have = int(self._allocated[slot])
+        if need <= have:
+            return True
+        if need - have > len(self._free):
+            return False
+        for j in range(have, need):
+            self._table[slot, j] = self._free.pop()
+        self._allocated[slot] = need
+        self._table_dev = None
+        return True
+
+    # --- observability ------------------------------------------------------
+
+    def describe(self) -> Dict[str, object]:
+        d: Dict[str, object] = {
+            "layout": self.spec.layout,
+            "kv_dtype": self.spec.kv_dtype,
+            "storage_bytes": self.layout.storage_bytes(),
+            "dense_bytes": self.layout.dense_bytes(),
+            "resident_max": self.resident_max(),
+        }
+        if self.is_paged:
+            d.update(page_size=self.spec.page_size,
+                     total_pages=self.spec.total_pages,
+                     free_pages=len(self._free),
+                     allocated=[int(a) for a in self._allocated])
+        return d

@@ -259,6 +259,24 @@ class ServeConfig:
     # quantized K/V + f32 scales: ~2x less cache traffic, the dominant
     # decode roofline term (§Perf C.4)
     kv_cache_dtype: str = "bfloat16"
+    # repro.cache storage layout: "dense" = one (B, max_len, ...) block
+    # per cache tensor (pre-redesign arrays, bit-identical); "paged" =
+    # fixed-size pages + per-slot page tables — per-request capacity,
+    # ragged per-slot residency, decode views sized by the RESIDENT
+    # bucket (attention FLOPs/HBM stop paying for the padded tail), and
+    # admission gated on free pages.  Paged rides the metadata-enabled
+    # plan path and requires position-linear caches
+    # (Model.supports_paged_cache).
+    cache_layout: str = "dense"
+    # paged layout: rows per page.  Must divide seqlen_bucket and
+    # prefill_bucket (views are gathered per resident bucket).
+    cache_page_size: int = 64
+    # paged layout: total data pages in the pool.  None = dense-
+    # equivalent (batch_slots * ceil(max_len / page_size)): nothing a
+    # dense engine could serve is refused.  Smaller budgets
+    # oversubscribe slots; exhaustion mid-generation finishes that
+    # request with finish_reason="cache_capacity".
+    cache_page_budget: Optional[int] = None
     max_batch: int = 128
     seed: int = 0
 

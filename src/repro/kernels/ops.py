@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -153,6 +153,75 @@ def _resolve_policy(scope: Optional[LaunchPlan], plan: Optional[LaunchPlan],
 
 
 # ---------------------------------------------------------------------------
+# Paged-KV layout: the layout-aware gather path (repro.cache)
+# ---------------------------------------------------------------------------
+
+
+class PagedKV(NamedTuple):
+    """A paged view of one K or V cache tensor, in place of a dense
+    ``(B, L, H, D)`` array.
+
+    ``pages`` is the shared page pool ``(P, page, *rest)``; ``page_table``
+    maps each batch slot to its pages ``(B, >= num_pages) int32``; and
+    ``num_pages`` is the STATIC number of pages the launch attends over
+    (the resident-length bucket divided by the page size) — jitted
+    callers specialize on it, exactly like ``num_splits``.  Table entries
+    past a slot's allocation point at a trash page whose rows sit at
+    positions >= the slot's ``kv_len`` and are therefore masked.
+    """
+    pages: jax.Array
+    page_table: jax.Array
+    num_pages: int
+
+    @property
+    def view_len(self) -> int:
+        return self.num_pages * self.pages.shape[1]
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array, *,
+                 num_pages: int, axis: int = 0) -> jax.Array:
+    """Gather a dense per-slot view from a page pool.
+
+    ``pages``: ``(..., P, page, *rest)`` with the pool dim at ``axis``;
+    ``page_table``: ``(B, >= num_pages) int32``.  Returns
+    ``(..., B, num_pages * page, *rest)`` — the first ``num_pages`` pages
+    of every slot, concatenated in sequence order.
+    """
+    pt = jax.lax.slice_in_dim(page_table, 0, num_pages, axis=1)
+    g = jnp.take(pages, pt, axis=axis)       # (..., B, n, page, *rest)
+    shape = (g.shape[:axis + 1]
+             + (num_pages * pages.shape[axis + 1],)
+             + g.shape[axis + 3:])
+    return g.reshape(shape)
+
+
+def scatter_pages(pages: jax.Array, view: jax.Array,
+                  page_table: jax.Array, *, num_pages: int,
+                  axis: int = 0) -> jax.Array:
+    """Write a dense per-slot view back into the page pool (inverse of
+    :func:`gather_pages`).
+
+    Duplicate table entries (every slot's unallocated tail points at the
+    shared trash page) make that one page's content nondeterministic —
+    harmless, since trash rows are masked by ``kv_len`` everywhere.
+    """
+    pt = jax.lax.slice_in_dim(page_table, 0, num_pages, axis=1)
+    page = pages.shape[axis + 1]
+    vp = view.reshape(view.shape[:axis]
+                      + (pt.shape[0], num_pages, page)
+                      + view.shape[axis + 2:])
+    idx = (slice(None),) * axis + (pt,)
+    return pages.at[idx].set(vp.astype(pages.dtype))
+
+
+def _resolve_paged(x):
+    """Dense array -> itself; :class:`PagedKV` -> gathered dense view."""
+    if isinstance(x, PagedKV):
+        return gather_pages(x.pages, x.page_table, num_pages=x.num_pages)
+    return x
+
+
+# ---------------------------------------------------------------------------
 # Full-sequence (train / prefill) attention
 # ---------------------------------------------------------------------------
 
@@ -268,7 +337,15 @@ def decode_attention(
     sequence split of the KV cache).  ``use_ctx_metadata=False`` opts a
     differently-shaped launch (e.g. encdec cross-attention) out of the
     ambient frozen plan.
+
+    ``k`` / ``v`` may also be :class:`PagedKV` views (the
+    ``repro.cache`` paged layout): the launch then attends over the
+    gathered resident pages — ``L_K`` is the resident-length bucket, not
+    the padded slot capacity, so the split decision and the HBM traffic
+    both track what is actually resident.
     """
+    k = _resolve_paged(k)
+    v = _resolve_paged(v)
     scope = current_plan("decode")
     if plan is None:
         plan = metadata

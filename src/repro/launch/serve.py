@@ -40,7 +40,7 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 top_k: int = 0, top_p: float = 1.0,
                 sampler: str = "categorical",
                 prefill_mode: str = "auto", stream: bool = False,
-                log_fn=print):
+                cache_layout: str = "dense", log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -53,7 +53,8 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
         model,
         ServeConfig(model=cfg, split_policy=policy,
                     num_splits_override=num_splits_override,
-                    prefill_mode=prefill_mode),
+                    prefill_mode=prefill_mode,
+                    cache_layout=cache_layout),
         max_len=max_len, batch_slots=batch_slots,
         sampler=get_sampler(sampler))
     engine.load(params)
@@ -87,6 +88,11 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
            f"in {dt:.2f}s ({1e3 * dt / max(1, total_new):.1f} ms/token)")
     log_fn("frozen plans (bucket -> num_splits): "
            f"{engine.planned_splits()}")
+    if cache_layout == "paged":
+        cs = engine.cache_stats()
+        log_fn(f"paged cache: {cs['total_pages']} pages of "
+               f"{cs['page_size']} ({cs['storage_bytes']} B vs dense "
+               f"{cs['dense_bytes']} B), {cs['free_pages']} free")
     if engine.prefill_mode == "fused":
         log_fn("fused prefill buckets: "
                f"{engine.planned_prefill_buckets()}")
@@ -119,6 +125,10 @@ def main() -> None:
                     choices=("auto", "fused", "loop"),
                     help="admission path: fused bucketed prefill vs the "
                          "legacy teacher-forcing loop")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="repro.cache storage layout (paged: resident-"
+                         "bucket views + page-budget admission)")
     ap.add_argument("--stream", action="store_true",
                     help="print TOKEN/FINISHED events as they happen")
     args = ap.parse_args()
@@ -128,7 +138,8 @@ def main() -> None:
                 num_splits_override=args.splits,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, sampler=args.sampler,
-                prefill_mode=args.prefill, stream=args.stream)
+                prefill_mode=args.prefill, stream=args.stream,
+                cache_layout=args.cache_layout)
 
 
 if __name__ == "__main__":

@@ -197,6 +197,13 @@ def cross_attention_decode(
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Deprecated: materialize via ``repro.cache`` (``Model.init_cache``
+    for the dense arrays, or a ``CacheManager`` for layout choice)."""
+    import warnings
+    warnings.warn(
+        "attention.init_kv_cache is deprecated; go through repro.cache "
+        "(Model.init_cache / Model.cache_manager)",
+        DeprecationWarning, stacklevel=2)
     hd = cfg.resolved_head_dim
     shape = (batch, max_len, cfg.num_kv_heads, hd)
     if dtype in ("int8", jnp.int8):
@@ -210,18 +217,27 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                    dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
     """KV cache layout.  ``dtype="int8"`` adds per-(token, head) symmetric
-    scales — halves the decode step's dominant memory term (§Perf C.4)."""
+    scales — halves the decode step's dominant memory term (§Perf C.4).
+
+    Leaves are marked ``paged=True``: self-attention K/V (and its int8
+    scales) is position-linear, so the ``repro.cache`` paged layout may
+    store it as pages when the seq axis spans the full slot capacity.
+    """
     hd = cfg.resolved_head_dim
     shape = (batch, max_len, cfg.num_kv_heads, hd)
     axes = ("batch", "seq", "kv_heads", "head_dim")
     if dtype == "int8":
         sspec = ParamSpec(shape[:3], axes[:3], dtype="float32",
-                          init="zeros")
-        return {"k": ParamSpec(shape, axes, dtype="int8", init="zeros"),
-                "v": ParamSpec(shape, axes, dtype="int8", init="zeros"),
+                          init="zeros", paged=True)
+        return {"k": ParamSpec(shape, axes, dtype="int8", init="zeros",
+                               paged=True),
+                "v": ParamSpec(shape, axes, dtype="int8", init="zeros",
+                               paged=True),
                 "k_s": sspec, "v_s": sspec}
-    return {"k": ParamSpec(shape, axes, dtype=dtype, init="zeros"),
-            "v": ParamSpec(shape, axes, dtype=dtype, init="zeros")}
+    return {"k": ParamSpec(shape, axes, dtype=dtype, init="zeros",
+                           paged=True),
+            "v": ParamSpec(shape, axes, dtype=dtype, init="zeros",
+                           paged=True)}
 
 
 def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -52,6 +52,12 @@ class ParamSpec:
     dtype: str = "bfloat16"
     init: str = "normal"                     # normal | zeros | ones
     fan_in: Optional[int] = None             # stddev = 1/sqrt(fan_in)
+    # cache leaves only: whether repro.cache may page this tensor over
+    # its "seq" axis.  None = infer (a full-capacity "seq" axis pages);
+    # False pins position-complete tensors like encdec's cross K/V,
+    # which are read to their FULL length every step and must never be
+    # gathered through a per-slot page table.
+    paged: Optional[bool] = None
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)

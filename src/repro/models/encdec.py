@@ -191,27 +191,29 @@ def encdec_prefill(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
 # --- fused single-slot prefill (serving admission) ---------------------------
 
 
-def encdec_prefill_slot(
+def encdec_prefill_view(
     params: Pytree,
     cfg: ModelConfig,
     caches: Pytree,                     # stacked {"self": .., "cross": ..}
     tokens: jax.Array,                  # (Lb,) int32 — bucket-padded prompt
     slot: jax.Array,                    # scalar int32
     length: jax.Array,                  # scalar int32 — true prompt length
-    max_len: int,
+    view_len: int,                      # seq extent of the emitted self cache
     *,
     plan=None,
 ) -> Tuple[jax.Array, Pytree]:
-    """Decoder prefill of one prompt into slot ``slot``'s self cache.
+    """Decoder prefill of one prompt, emitting a batch-1 cache VIEW.
 
     Cross-attention reads the slot's *resident* precomputed cross K/V
     (zeros on a fresh engine, real encoder output after
     :func:`build_cross_caches`) — the same memory the decode step
     consumes, so prefill-then-decode matches decode-all-the-way.
-    Returns (last-prompt-position logits (vocab,), caches).
+    Returns (last-prompt-position logits (vocab,), batch-1
+    ``{"self", "cross"}`` view) — ``self`` is freshly computed at seq
+    extent ``view_len``; ``cross`` is the slot's resident column, passed
+    back so a layout write of the full view is a no-op on it.
     """
     from repro.kernels import ops
-    from repro.models.lm import write_cache_slot
 
     L = tokens.shape[0]
     slot = jnp.asarray(slot, jnp.int32)
@@ -229,7 +231,7 @@ def encdec_prefill_slot(
         lp, cc = scanned                # cc: this layer's (1, enc, H, D) kv
         h = apply_norm(lp["ln1"], xc, cfg.norm_eps)
         mix, self_cache = attn_mod.attention_prefill(
-            lp["self"], cfg, h, positions, max_len, plan=plan)
+            lp["self"], cfg, h, positions, view_len, plan=plan)
         xc = xc + mix
         hx = apply_norm(lp["lnx"], xc, cfg.norm_eps)
         q = jnp.einsum("bld,dhk->blhk", hx, lp["cross"]["wq"])
@@ -255,7 +257,29 @@ def encdec_prefill_slot(
     xl = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     xl = apply_norm(params["final_norm"], xl, cfg.norm_eps)
     logits = unembed(params["embed"], xl)[0, 0]
-    return logits, {"self": write_cache_slot(caches["self"], self_caches,
+    return logits, {"self": self_caches, "cross": cross_sl}
+
+
+def encdec_prefill_slot(
+    params: Pytree,
+    cfg: ModelConfig,
+    caches: Pytree,                     # stacked {"self": .., "cross": ..}
+    tokens: jax.Array,                  # (Lb,) int32 — bucket-padded prompt
+    slot: jax.Array,                    # scalar int32
+    length: jax.Array,                  # scalar int32 — true prompt length
+    max_len: int,
+    *,
+    plan=None,
+) -> Tuple[jax.Array, Pytree]:
+    """Decoder prefill of one prompt into slot ``slot``'s DENSE self
+    cache (see :func:`encdec_prefill_view` for the layout-agnostic
+    half).  Returns (last-prompt-position logits (vocab,), caches)."""
+    from repro.models.lm import write_cache_slot
+
+    slot = jnp.asarray(slot, jnp.int32)
+    logits, view = encdec_prefill_view(params, cfg, caches, tokens, slot,
+                                       length, max_len, plan=plan)
+    return logits, {"self": write_cache_slot(caches["self"], view["self"],
                                              slot),
                     "cross": caches["cross"]}
 
@@ -269,10 +293,15 @@ def encdec_cache_specs(cfg: ModelConfig, batch: int, max_len: int
     self_specs = attn_mod.kv_cache_specs(cfg, batch, max_len)
     cross_shape = (batch, cfg.encoder_positions, cfg.num_kv_heads, hd)
     cross_axes = ("batch", "seq", "kv_heads", "head_dim")
+    # cross K/V is position-COMPLETE (decode reads the full encoder
+    # length every step), so repro.cache must never page it — pin
+    # paged=False rather than rely on encoder_positions != max_len
     per_layer = {
         "self": self_specs,
-        "cross": {"k": ParamSpec(cross_shape, cross_axes, init="zeros"),
-                  "v": ParamSpec(cross_shape, cross_axes, init="zeros")},
+        "cross": {"k": ParamSpec(cross_shape, cross_axes, init="zeros",
+                                 paged=False),
+                  "v": ParamSpec(cross_shape, cross_axes, init="zeros",
+                                 paged=False)},
     }
     return stack_specs(per_layer, cfg.num_layers)
 

@@ -414,24 +414,25 @@ def write_cache_slot(caches: Pytree, new: Pytree, slot: jax.Array) -> Pytree:
     return jax.tree.map(w, caches, new)
 
 
-def lm_prefill_slot(
+def lm_prefill_view(
     params: Pytree,
     cfg: ModelConfig,
-    caches: Tuple[Pytree, ...],
     tokens: jax.Array,                  # (Lb,) int32 — bucket-padded prompt
-    slot: jax.Array,                    # scalar int32 — target decode slot
     length: jax.Array,                  # scalar int32 — true prompt length
-    max_len: int,
+    view_len: int,                      # seq extent of the emitted cache
     *,
     plan=None,
     kv_dtype: str = "bfloat16",
 ) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
-    """Prefill one prompt into slot ``slot`` of an existing cache pytree.
+    """Fused single-prompt prefill emitting a batch-1 cache VIEW.
 
-    One launch writes the whole prompt's KV rows (O(1) launches per
-    admission vs O(prompt_len) teacher-forced decode steps) and returns
-    the logits at the last real prompt position, ready to sample the
-    first generated token.  Returns (logits (vocab,) f32, caches).
+    The storage-agnostic half of the admission prefill: one launch
+    computes the whole prompt and returns (last-real-position logits
+    (vocab,) f32, batch-1 caches of seq extent ``view_len``).  Where the
+    view lands is the cache layout's business — :func:`lm_prefill_slot`
+    writes it dense via :func:`write_cache_slot`; the paged layout
+    scatters it through the slot's page table
+    (:meth:`repro.cache.PagedKVCache.write_slot`).
 
     Padding correctness: positions >= ``length`` hold garbage K/V, but
     causal attention keeps them out of every real position's output, the
@@ -453,7 +454,7 @@ def lm_prefill_slot(
             new_lc = []
             for ki, kind in enumerate(pattern):
                 xc, _, c = block_prefill(layer_params[ki], cfg, kind, xc,
-                                         positions, max_len, kv_dtype,
+                                         positions, view_len, kv_dtype,
                                          plan=plan)
                 new_lc.append(c)
             return xc, tuple(new_lc)
@@ -471,7 +472,31 @@ def lm_prefill_slot(
     xl = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     xl = apply_norm(params["final_norm"], xl, cfg.norm_eps)
     logits = unembed(params["embed"], xl)[0, 0]          # (vocab,)
-    return logits, write_cache_slot(caches, tuple(new_groups), slot)
+    return logits, tuple(new_groups)
+
+
+def lm_prefill_slot(
+    params: Pytree,
+    cfg: ModelConfig,
+    caches: Tuple[Pytree, ...],
+    tokens: jax.Array,                  # (Lb,) int32 — bucket-padded prompt
+    slot: jax.Array,                    # scalar int32 — target decode slot
+    length: jax.Array,                  # scalar int32 — true prompt length
+    max_len: int,
+    *,
+    plan=None,
+    kv_dtype: str = "bfloat16",
+) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
+    """Prefill one prompt into slot ``slot`` of an existing DENSE cache.
+
+    One launch writes the whole prompt's KV rows (O(1) launches per
+    admission vs O(prompt_len) teacher-forced decode steps) and returns
+    the logits at the last real prompt position, ready to sample the
+    first generated token.  Returns (logits (vocab,) f32, caches).
+    """
+    logits, new = lm_prefill_view(params, cfg, tokens, length, max_len,
+                                  plan=plan, kv_dtype=kv_dtype)
+    return logits, write_cache_slot(caches, new, slot)
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,13 @@ def mla_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Deprecated: materialize via ``repro.cache`` (``Model.init_cache``
+    for the dense arrays, or a ``CacheManager`` for layout choice)."""
+    import warnings
+    warnings.warn(
+        "mla.init_mla_cache is deprecated; go through repro.cache "
+        "(Model.init_cache / Model.cache_manager)",
+        DeprecationWarning, stacklevel=2)
     m = cfg.mla
     width = m.kv_lora_rank + m.qk_rope_head_dim
     return {"latent": jnp.zeros((batch, max_len, 1, width), dtype)}
@@ -148,11 +155,13 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                     dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
+    """Latent cache layout (position-linear -> pageable, like any
+    self-attention K/V — one shared H_KV=1 stream)."""
     m = cfg.mla
     width = m.kv_lora_rank + m.qk_rope_head_dim
     return {"latent": ParamSpec((batch, max_len, 1, width),
                                 ("batch", "seq", "kv_heads", "head_dim"),
-                                dtype=dtype, init="zeros")}
+                                dtype=dtype, init="zeros", paged=True)}
 
 
 def mla_decode(

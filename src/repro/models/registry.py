@@ -64,10 +64,46 @@ class Model:
                    kv_dtype: str = "bfloat16") -> Pytree:
         return logical_axes(self.cache_specs(batch, max_len, kv_dtype))
 
+    @property
+    def supports_paged_cache(self) -> bool:
+        """Whether the ``repro.cache`` paged layout may hold this
+        family's caches.  Requires position-linear cache semantics
+        (row ``t`` holds position ``t``): recurrent families (ssm /
+        hybrid) carry per-token state / ring-ordered window caches whose
+        meaning depends on the STORAGE length, so they stay dense."""
+        return self.cfg.family in ("dense", "moe", "mla", "vlm", "encdec")
+
+    def cache_spec(self, batch: int, max_len: int,
+                   kv_dtype: str = "bfloat16", *, layout: str = "dense",
+                   page_size: int = 64,
+                   page_budget: Optional[int] = None):
+        """The declarative :class:`~repro.cache.CacheSpec` for this
+        model's caches — the input the :class:`~repro.cache.CacheManager`
+        resolves into a layout."""
+        from repro.cache import CacheSpec
+        if layout == "paged" and not self.supports_paged_cache:
+            raise ValueError(
+                f"{self.cfg.family} caches are not position-linear "
+                "(recurrent state / ring buffers); use layout='dense'")
+        return CacheSpec(self.cfg.family, batch, max_len,
+                         kv_dtype=kv_dtype, layout=layout,
+                         page_size=page_size, page_budget=page_budget)
+
+    def cache_manager(self, batch: int, max_len: int,
+                      kv_dtype: str = "bfloat16", **layout_kw):
+        """Resolve a cache spec into a :class:`~repro.cache.CacheManager`
+        (the storage-owning entry point; models no longer hand out raw
+        arrays — see the README migration map)."""
+        from repro.cache import CacheManager
+        return CacheManager(self, self.cache_spec(batch, max_len,
+                                                  kv_dtype, **layout_kw))
+
     def init_cache(self, batch: int, max_len: int,
                    kv_dtype: str = "bfloat16") -> Pytree:
-        return init_params(self.cache_specs(batch, max_len, kv_dtype),
-                           jax.random.PRNGKey(0))
+        """Dense-layout cache arrays (legacy surface, kept bit-identical:
+        delegates to ``repro.cache.DenseLayout``; new code should hold a
+        :meth:`cache_manager` instead)."""
+        return self.cache_manager(batch, max_len, kv_dtype).init_storage()
 
     # --- compute --------------------------------------------------------------
 
@@ -143,6 +179,31 @@ class Model:
                 plan=plan)
         return lm_mod.lm_prefill_slot(params, cfg, caches, tokens, slot,
                                       length, max_len, plan=plan,
+                                      kv_dtype=kv_dtype)
+
+    def prefill_slot_view(self, params: Pytree, caches: Pytree,
+                          tokens: jax.Array, slot: jax.Array,
+                          length: jax.Array, view_len: int, *, plan=None,
+                          kv_dtype: str = "bfloat16"
+                          ) -> Tuple[jax.Array, Pytree]:
+        """Layout-agnostic half of :meth:`prefill_slot`: compute one
+        prompt's batch-1 cache VIEW (seq extent ``view_len``) without
+        writing it anywhere — the cache layout decides where it lands
+        (dense ``write_cache_slot`` vs the paged layout's page-table
+        scatter).  ``caches`` is only read where a family's prefill
+        consumes resident state (encdec: the slot's cross K/V column).
+        """
+        cfg = self.cfg
+        if not self.supports_fused_prefill:
+            raise NotImplementedError(
+                f"{cfg.family} models cannot fused-prefill a padded "
+                "prompt; use the loop (teacher-forcing) admission path")
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_prefill_view(
+                params, cfg, caches, tokens, slot, length, view_len,
+                plan=plan)
+        return lm_mod.lm_prefill_view(params, cfg, tokens, length,
+                                      view_len, plan=plan,
                                       kv_dtype=kv_dtype)
 
     def decode_step(self, params: Pytree, caches: Pytree, token: jax.Array,

@@ -36,6 +36,14 @@ class PlanCacheStats:
     the PERSISTENT set of every key ever launched, so
     ``distinct_buckets`` stays exact forever — it must never be derived
     from the trimmed trace.
+
+    ``fallback_*`` attributes the engine's internal-heuristic fallback
+    path (``use_scheduler_metadata=False``): that ONE-step-for-all-
+    lengths launch evaluates the split policy at trace time on the
+    PADDED cache length, so per launch we record the resident-length
+    summary it actually covered — ``(resident_max, traced_len)`` — and
+    A/B benchmarks can attribute fallback plans to the residency they
+    served instead of mistaking them for planned launches.
     """
     TRACE_CAP = 4096
 
@@ -44,6 +52,9 @@ class PlanCacheStats:
     launches: Dict[Hashable, int] = field(default_factory=dict)
     trace: List[Hashable] = field(default_factory=list)  # key per launch
     seen_buckets: Set[Hashable] = field(default_factory=set)
+    fallback_launches: int = 0
+    # (resident_max, traced_len) per fallback launch, trimmed like trace
+    fallback_trace: List[tuple] = field(default_factory=list)
 
     @property
     def total_launches(self) -> int:
@@ -60,12 +71,23 @@ class PlanCacheStats:
         if len(self.trace) > 2 * self.TRACE_CAP:
             del self.trace[:-self.TRACE_CAP]
 
+    def record_fallback(self, resident_max: int, traced_len: int) -> None:
+        """One internal-heuristic (no-plan) launch: the policy saw
+        ``traced_len`` at trace time while only ``resident_max`` rows
+        were actually resident."""
+        self.fallback_launches += 1
+        self.fallback_trace.append((int(resident_max), int(traced_len)))
+        if len(self.fallback_trace) > 2 * self.TRACE_CAP:
+            del self.fallback_trace[:-self.TRACE_CAP]
+
     def reset(self) -> None:
         self.hits = 0
         self.misses = 0
         self.launches.clear()
         self.trace.clear()
         self.seen_buckets.clear()
+        self.fallback_launches = 0
+        self.fallback_trace.clear()
 
 
 class PlanCache:

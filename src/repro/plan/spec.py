@@ -36,6 +36,13 @@ class AttentionSpec:
     the launch kind and the launch-affecting extras: sliding ``window``
     (ring cache => L_K = window), MLA ``v_width`` (v = k[..., :v_width]),
     int8-``quantized`` KV, and the mesh axis the launch may shard over.
+
+    ``layout`` is the cache-side summary the serving engine plans from:
+    under the ``repro.cache`` paged layout ``seqlen_k`` is the
+    RESIDENT-length bucket (what the launch actually attends over), not
+    the engine's padded slot capacity.  (The per-step true resident max
+    is a runtime quantity — observe it via ``CacheManager.describe()``
+    / ``PlanCacheStats.fallback_trace``, not the static spec.)
     """
     kind: str                           # one of KINDS
     batch: int
@@ -49,6 +56,7 @@ class AttentionSpec:
     quantized: bool = False             # int8 KV cache
     mesh_axis: Optional[str] = None     # sharding axis name (mesh plans)
     mesh_axis_size: int = 1
+    layout: str = "dense"               # repro.cache layout ("dense"|"paged")
 
     def __post_init__(self):
         if self.kind not in KINDS:

@@ -43,15 +43,35 @@ PRNG key), so per-request sampling never recompiles.  Keys derive from
 the request's seed and fold in the absolute token position — tokens are
 independent of slot packing (``batch_slots`` ∈ {1, 2, 4} agree).
 
+Cache layouts (repro.cache)
+---------------------------
+The engine no longer owns raw cache arrays: a
+:class:`~repro.cache.CacheManager` resolves a
+:class:`~repro.cache.CacheSpec` into a layout.  ``dense`` keeps the
+pre-redesign ``(layers, B, max_len, ...)`` arrays bit-identically;
+``paged`` stores position-linear cache leaves as fixed-size pages with
+per-slot page tables.  Under the paged layout every decode launch
+gathers a view sized by the RESIDENT-length bucket (``gather_view`` →
+model → ``write_token``, writing back only the one row each slot
+produced), so mixed-length batches stop paying attention FLOPs/HBM for
+the padded tail; admission is gated on free
+pages (:meth:`Scheduler.admit_next`'s ``admissible`` hook), and a
+mid-generation allocation failure finishes only THAT request with
+``finish_reason="cache_capacity"`` — a per-request page-exhaustion
+signal instead of the engine-wide ``max_len`` wall.
+
 Metadata-enabled path (paper §5)
 --------------------------------
 Unchanged from the pre-redesign engine, now owned by the
 :class:`~repro.serving.scheduler.Scheduler`: live cache length →
-bucket → frozen :class:`~repro.plan.LaunchPlan` → per-plan jitted step,
-with the policy evaluated **zero** times inside traced code
-(``kernels.ops.policy_eval_count`` stays flat — asserted in tests).
-``use_scheduler_metadata=False`` keeps the paper's weaker "internal
-heuristic" path for A/B.
+resident bucket → frozen :class:`~repro.plan.LaunchPlan` → per-plan
+jitted step, with the policy evaluated **zero** times inside traced
+code (``kernels.ops.policy_eval_count`` stays flat — asserted in
+tests).  ``use_scheduler_metadata=False`` keeps the paper's weaker
+"internal heuristic" path for A/B — one step for all lengths, policy
+evaluated at trace time on the PADDED cache length; each such launch
+records the resident summary it actually covered in
+``PlanCacheStats.fallback_trace`` so A/Bs can attribute it.
 
 :class:`DecodeEngine` is the legacy batch-synchronous facade
 (``generate(requests) -> completions``): a thin wrapper pinned to
@@ -102,7 +122,8 @@ class ServingEngine:
                  max_len: int = 256, batch_slots: int = 4,
                  policy: Optional[str] = None,
                  sampler: Optional[Sampler] = None,
-                 prefill_mode: Optional[str] = None):
+                 prefill_mode: Optional[str] = None,
+                 cache_layout: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.policy = policy or scfg.split_policy
@@ -138,13 +159,38 @@ class ServingEngine:
                     "prefill_mode='loop'")
         self.prefill_mode = mode
 
+        layout = cache_layout or scfg.cache_layout
+        if layout == "paged":
+            # (family support is checked by Model.cache_spec below)
+            if not self.use_metadata:
+                raise ValueError(
+                    "the paged cache layout rides the metadata-enabled "
+                    "plan path (views are gathered per resident-length "
+                    "bucket); set use_scheduler_metadata=True or "
+                    "cache_layout='dense'")
+            for width in (scfg.seqlen_bucket,
+                          scfg.prefill_bucket or scfg.seqlen_bucket):
+                if width % scfg.cache_page_size:
+                    raise ValueError(
+                        f"cache_page_size ({scfg.cache_page_size}) must "
+                        f"divide the plan bucket widths (got {width})")
+        self.cache_layout = layout
+        self._cache_kw = dict(kv_dtype=self.kv_dtype, layout=layout,
+                              page_size=scfg.cache_page_size,
+                              page_budget=scfg.cache_page_budget)
+        # residency bookkeeping + layout resolution (storage arrays stay
+        # on the engine for the donation flow; load() re-creates both)
+        self.cache = model.cache_manager(self.B, self.max_len,
+                                         **self._cache_kw)
+
         self.sched = Scheduler(
             self.cfg, batch_slots=batch_slots, max_len=max_len,
             policy=self.policy,
             num_splits_override=scfg.num_splits_override,
             bucket_width=scfg.seqlen_bucket,
             prefill_bucket=scfg.prefill_bucket,
-            plan_capacity=scfg.plan_cache_capacity)
+            plan_capacity=scfg.plan_cache_capacity,
+            cache_layout=layout)
 
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
@@ -164,18 +210,27 @@ class ServingEngine:
         self._queues: Dict[int, Deque[Event]] = {}
         self._completions: Dict[int, Completion] = {}
         self._undrained: List[int] = []
-        self._warned_capacity = False
+        # once-per-engine warnings, one flag PER capacity condition (the
+        # max_len wall and page-pool exhaustion are distinct signals; the
+        # first must not suppress the other)
+        self._warned_len_capacity = False
+        self._warned_page_capacity = False
 
         # internal-heuristic fallback: ONE step for all lengths, policy
         # evaluated at trace time on the padded cache length (the A/B
-        # baseline the paper measures its metadata path against)
+        # baseline the paper measures its metadata path against; dense
+        # only — paged requires the metadata path, enforced above)
         self._fallback_step = jax.jit(self._decode_impl,
                                       donate_argnums=(1,))
         # slot reset: jitted + donated, one compile for every slot (the
         # pre-redesign engine rebuilt the whole cache pytree with
         # un-jitted .at[i].set per admission — a host round trip per
-        # refill)
-        self._zero_step = jax.jit(self._zero_impl, donate_argnums=(0,))
+        # refill).  Paged storage resets only the NON-paged leaves:
+        # freshly allocated pages hold stale rows strictly above the new
+        # request's kv_len, which every consumer masks.
+        self._zero_step = jax.jit(
+            self._zero_paged_impl if layout == "paged" else self._zero_impl,
+            donate_argnums=(0,))
 
     # --- observability ------------------------------------------------------
 
@@ -194,6 +249,10 @@ class ServingEngine:
     def planned_prefill_buckets(self) -> List[int]:
         return self.sched.planned_prefill_buckets()
 
+    def cache_stats(self) -> Dict[str, Any]:
+        """The cache manager's layout / residency / page-pool summary."""
+        return self.cache.describe()
+
     def _metadata(self, t_max: int) -> LaunchPlan:
         """Compute (not cache) the decode launch plan for ``t_max``."""
         return self.sched.decode_plan(t_max)
@@ -202,8 +261,12 @@ class ServingEngine:
 
     def load(self, params: Pytree) -> None:
         self._params = params
-        self._caches = self.model.init_cache(self.B, self.max_len,
-                                             self.kv_dtype)
+        # a (re)load is a fresh serve session: new storage AND new
+        # residency / page-table state (a stale free list over fresh
+        # zeroed storage would leak phantom allocations)
+        self.cache = self.model.cache_manager(self.B, self.max_len,
+                                              **self._cache_kw)
+        self._caches = self.cache.init_storage()
         self._state = self.sampler.init_state(self.B)
         self._state_dev = None
 
@@ -236,11 +299,64 @@ class ServingEngine:
             return jax.lax.dynamic_update_slice(a, row, start)
         return jax.tree.map(z, caches)
 
+    def _zero_paged_impl(self, caches, slot):
+        return self.cache.layout.zero_slot(caches, slot)
+
+    # --- jitted impls: paged layout -----------------------------------------
+
+    def _decode_paged_impl(self, params, storage, token, t, state, table,
+                           plan: Optional[LaunchPlan] = None,
+                           num_pages: int = 1):
+        """Lockstep decode over the RESIDENT-bucket gathered view.
+
+        ``num_pages`` is static (one jitted specialization per resident
+        bucket, exactly mirroring the per-bucket plan specialization):
+        gather the first ``num_pages`` pages of every slot into a dense
+        view, run the planned decode step on it, then write back ONLY
+        the one row each slot produced (``write_token``).  The launch's
+        attention L_K is the view length — FLOPs and HBM both track
+        residency, not the padded slot capacity.
+        """
+        lay = self.cache.layout
+        view = lay.gather_view(storage, table, num_pages)
+        logits, view = self.model.decode_step(
+            params, view, token, t, plan=plan, policy=self.policy)
+        tok = self.sampler.sample(logits, state, t)
+        storage = lay.write_token(storage, view, table, t, num_pages)
+        return tok, storage
+
+    def _prefill_paged_impl(self, params, storage, tokens, slot, length,
+                            state, table,
+                            plan: Optional[LaunchPlan] = None,
+                            num_pages: int = 1):
+        """Fused single-slot prefill straight into the slot's pages."""
+        lay = self.cache.layout
+        with plan_scope(plan):
+            logits, view = self.model.prefill_slot_view(
+                params, storage, tokens, slot, length,
+                num_pages * self.cache.spec.page_size,
+                plan=plan, kv_dtype=self.kv_dtype)
+        tok = self.sampler.sample(logits[None], state, (length - 1)[None])
+        storage = lay.write_slot(storage, view, table, slot, num_pages)
+        return tok[0], storage
+
     def _build_decode(self, plan: LaunchPlan):
+        if self.cache.is_paged:
+            return jax.jit(
+                functools.partial(self._decode_paged_impl, plan=plan,
+                                  num_pages=self.cache.spec.view_pages(
+                                      plan.bucket)),
+                donate_argnums=(1,))
         return jax.jit(functools.partial(self._decode_impl, plan=plan),
                        donate_argnums=(1,))
 
     def _build_prefill(self, plan: LaunchPlan):
+        if self.cache.is_paged:
+            return jax.jit(
+                functools.partial(self._prefill_paged_impl, plan=plan,
+                                  num_pages=self.cache.spec.view_pages(
+                                      plan.bucket)),
+                donate_argnums=(1,))
         return jax.jit(functools.partial(self._prefill_impl, plan=plan),
                        donate_argnums=(1,))
 
@@ -250,6 +366,16 @@ class ServingEngine:
         """Raise on requests that could never run (no state mutated)."""
         self.sched.validate(req)
         self.sampler.check(req.sampling)
+        if self.cache.is_paged:
+            need = self.cache.pages_for(len(req.prompt))
+            total = self.cache.spec.total_pages
+            if need > total:
+                # could never be admitted even into an EMPTY pool —
+                # admitting would deadlock the FIFO queue head forever
+                raise ValueError(
+                    f"request {req.request_id}: prompt needs {need} "
+                    f"pages, page budget is {total} "
+                    f"(page_size={self.cache.spec.page_size})")
 
     def submit(self, req: Request) -> int:
         """Enqueue a request; returns its handle (admission happens on a
@@ -273,7 +399,7 @@ class ServingEngine:
         assert self._params is not None, "call load(params) first"
         events: List[Event] = []
         while True:
-            adm = self.sched.admit_next()
+            adm = self.sched.admit_next(self._admissible)
             if adm is None:
                 break
             self._admit(*adm, events)
@@ -281,6 +407,11 @@ class ServingEngine:
         if live:
             self._decode_launch(live, events)
         return events
+
+    def _admissible(self, st: SlotState) -> bool:
+        """Page-budget admission gate (paged layout; dense always
+        admits): the queue head needs its whole prompt's pages free."""
+        return self.cache.can_reserve(len(st.request.prompt))
 
     def stream(self, handle: int) -> Iterator[Event]:
         """Iterate one handle's events in order, running :meth:`step`
@@ -332,6 +463,10 @@ class ServingEngine:
     # --- internals ----------------------------------------------------------
 
     def _admit(self, i: int, st: SlotState, events: List[Event]) -> None:
+        # the whole prompt's pages are reserved up front (all-or-nothing;
+        # _admissible already checked the free list, so this cannot fail)
+        ok = self.cache.reserve(i, len(st.request.prompt))
+        assert ok, "admission raced the page free list"
         # the reset launch is only needed when the admission path leaves
         # any of the slot's cache rows unwritten: always for loop
         # teacher-forcing, and for fused prefill only when the model
@@ -363,27 +498,49 @@ class ServingEngine:
         toks[:n] = prompt
         state_row = {k: jnp.asarray(v[i:i + 1])
                      for k, v in self._state.items()}
-        tok, self._caches = entry.step(
-            self._params, self._caches, jnp.asarray(toks),
-            jnp.asarray(i, jnp.int32), jnp.asarray(n, jnp.int32),
-            state_row)
+        args = (self._params, self._caches, jnp.asarray(toks),
+                jnp.asarray(i, jnp.int32), jnp.asarray(n, jnp.int32),
+                state_row)
+        if self.cache.is_paged:
+            args += (self.cache.table_device(),)
+        tok, self._caches = entry.step(*args)
+        self.cache.note_write(i, n - 1)
         self._pos[i] = n
         st.completion.steps += 1
         self._emit_token(i, st, int(tok), events)
 
     def _decode_launch(self, live, events: List[Event]) -> None:
+        if self.cache.is_paged:
+            # every live slot is about to write row _pos[i]: allocate its
+            # page now, and finish (only) the requests whose allocation
+            # the pool cannot cover — the per-request page-exhaustion
+            # signal.  A finish releases pages, so later slots in the
+            # same pass may succeed because an earlier one was culled.
+            for i, st in live:
+                if not self.cache.ensure(i, int(self._pos[i])):
+                    self._finish_capacity(i, st, events)
+            live = self.sched.live()
+            if not live:
+                return
+        for i, _ in live:                       # residency bookkeeping
+            self.cache.note_write(i, int(self._pos[i]))
         tok = jnp.asarray(self._next_token)
         t = jnp.asarray(self._pos)
+        t_max = max(int(self._pos[i]) for i, _ in live)
         if self.use_metadata:
-            t_max = max(int(self._pos[i]) for i, _ in live)
             step = self.sched.decode_entry(t_max, self._build_decode).step
         else:
             step = self._fallback_step
+            # attribute this unplanned launch: the policy saw the PADDED
+            # cache length at trace time; record what was resident
+            self.stats.record_fallback(t_max + 1, self.max_len)
         if self._state_dev is None:
             self._state_dev = {k: jnp.asarray(v)
                                for k, v in self._state.items()}
-        out, self._caches = step(self._params, self._caches, tok, t,
-                                 self._state_dev)
+        args = (self._params, self._caches, tok, t, self._state_dev)
+        if self.cache.is_paged:
+            args += (self.cache.table_device(),)
+        out, self._caches = step(*args)
         out = np.asarray(out)
         for i, st in live:
             self._advance(i, st, int(out[i]), events)
@@ -397,6 +554,42 @@ class ServingEngine:
             return
         self._emit_token(i, st, tok_out, events)
 
+    def _release(self, i: int) -> None:
+        """Free a finished request's slot AND its cache residency (page
+        allocations return to the pool; the slot's table row goes back
+        to the trash page so its lockstep writes land harmlessly)."""
+        self.sched.finish(i)
+        self.cache.release(i)
+
+    def _finish(self, i: int, st: SlotState, reason: str,
+                events: List[Event]) -> None:
+        """The one finish protocol: stamp the reason, emit FINISHED to
+        both the step's event list and the handle's queue, release the
+        slot + its cache residency."""
+        comp = st.completion
+        comp.finish_reason = reason
+        fin = Event(FINISHED, st.handle, comp.request_id,
+                    finish_reason=reason)
+        events.append(fin)
+        self._queues[st.handle].append(fin)
+        self._release(i)
+
+    def _finish_capacity(self, i: int, st: SlotState,
+                         events: List[Event]) -> None:
+        """Finish ONE request on page-pool exhaustion (pre-launch: no
+        token is produced this step — there is nowhere to write its KV
+        row).  The rest of the batch keeps decoding."""
+        if not self._warned_page_capacity:
+            self._warned_page_capacity = True
+            warnings.warn(
+                f"request {st.request.request_id} exhausted the KV page "
+                f"pool ({self.cache.spec.total_pages} pages of "
+                f"{self.cache.spec.page_size}) mid-generation; finishing "
+                "with finish_reason='cache_capacity' (further page "
+                "exhaustions on this engine are silent)",
+                RuntimeWarning, stacklevel=3)
+        self._finish(i, st, FINISH_CACHE_CAPACITY, events)
+
     def _finish_reason(self, i: int, st: SlotState,
                        token: int) -> Optional[str]:
         req = st.request
@@ -407,13 +600,13 @@ class ServingEngine:
         if len(st.completion.tokens) >= req.max_new_tokens:
             return FINISH_LENGTH
         if self._pos[i] >= self.max_len - 1:
-            if not self._warned_capacity:
-                self._warned_capacity = True
+            if not self._warned_len_capacity:
+                self._warned_len_capacity = True
                 warnings.warn(
                     f"request {req.request_id} hit the KV cache capacity "
                     f"(max_len={self.max_len}) mid-generation; finishing "
                     "with finish_reason='cache_capacity' (further "
-                    "occurrences on this engine are silent)",
+                    "max_len hits on this engine are silent)",
                     RuntimeWarning, stacklevel=3)
             return FINISH_CACHE_CAPACITY
         return None
@@ -429,12 +622,7 @@ class ServingEngine:
         q.append(ev)
         reason = self._finish_reason(i, st, token)
         if reason is not None:
-            comp.finish_reason = reason
-            fin = Event(FINISHED, st.handle, comp.request_id,
-                        finish_reason=reason)
-            events.append(fin)
-            q.append(fin)
-            self.sched.finish(i)
+            self._finish(i, st, reason, events)
         else:
             self._next_token[i] = token
 

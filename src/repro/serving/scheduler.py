@@ -82,12 +82,14 @@ class Scheduler:
                  policy: str, num_splits_override: Optional[int] = None,
                  bucket_width: int = 128,
                  prefill_bucket: Optional[int] = None,
-                 plan_capacity: Optional[int] = None):
+                 plan_capacity: Optional[int] = None,
+                 cache_layout: str = "dense"):
         self.cfg = cfg
         self.B = batch_slots
         self.max_len = max_len
         self.bucket_width = bucket_width
         self.prefill_bucket_width = prefill_bucket or bucket_width
+        self.cache_layout = cache_layout
         self.planner = Planner(policy=policy,
                                num_splits_override=num_splits_override)
         self.plans: PlanCache = PlanCache(plan_capacity)
@@ -121,13 +123,26 @@ class Scheduler:
         self.pending.append(st)
         return st
 
-    def admit_next(self) -> Optional[Tuple[int, SlotState]]:
+    def admit_next(self, admissible: Optional[
+            Callable[[SlotState], bool]] = None
+            ) -> Optional[Tuple[int, SlotState]]:
         """Pop one pending request into the lowest free slot (None when
-        no slot is free or nothing is pending)."""
+        no slot is free or nothing is pending).
+
+        ``admissible`` gates the queue head on a resource the scheduler
+        does not own — the engine passes the cache manager's page-budget
+        check, so admission is against FREE PAGES rather than the mere
+        existence of a free slot.  Admission stays FIFO: a refused head
+        blocks the queue (no reordering) until a finishing request frees
+        its pages.
+        """
         if not self.pending:
             return None
         for i, slot in enumerate(self.slots):
             if slot is None:
+                if admissible is not None \
+                        and not admissible(self.pending[0]):
+                    return None
                 st = self.pending.popleft()
                 self.slots[i] = st
                 return i, st
@@ -151,7 +166,14 @@ class Scheduler:
         return 1 if self.cfg.mla else self.cfg.num_kv_heads
 
     def decode_bucket(self, t_max: int) -> int:
-        """Cache-length bucket for the longest live position."""
+        """RESIDENT-length bucket for the longest live position.
+
+        This is what keys decode plans (and their jitted
+        specializations): the per-step resident max, never the engine's
+        padded ``max_len`` — a short-context request in a long-capacity
+        engine plans (and, under the paged layout, attends) on what is
+        actually resident.
+        """
         return bucket_seqlen(min(int(t_max) + 1, self.max_len),
                              self.bucket_width)
 
@@ -159,7 +181,8 @@ class Scheduler:
         cfg = self.cfg
         return AttentionSpec.decode(self.B, bucket, cfg.num_heads,
                                     self._kv_heads(),
-                                    cfg.resolved_head_dim)
+                                    cfg.resolved_head_dim,
+                                    layout=self.cache_layout)
 
     def decode_plan(self, t_max: int) -> LaunchPlan:
         """Compute (not cache) the frozen decode plan for ``t_max``."""

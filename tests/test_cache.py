@@ -1,0 +1,410 @@
+"""repro.cache subsystem: spec/manager invariants, layout round trips,
+the dense-vs-paged serving oracle, resident-bucket plan keying, page
+budgets, ragged kv_len masking, and fallback plan attribution."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+from repro.cache import CacheSpec
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.kernels import ops
+from repro.models import build_model
+from repro.models.common import init_params
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(lens=(5, 33, 70, 9), max_new=4, start_id=0):
+    return [Request(start_id + i,
+                    [(7 * i + j) % 150 + 1 for j in range(n)],
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lens)]
+
+
+def _drain(model, cfg, layout, *, max_len=128, slots=2, reqs=None, **kw):
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, cache_layout=layout, **kw),
+        max_len=max_len, batch_slots=slots)
+    eng.load(model.init_params(jax.random.PRNGKey(0)))
+    for r in (reqs or _reqs()):
+        eng.submit(r)
+    outs = eng.drain()
+    return [c.tokens for c in outs], outs, eng
+
+
+# ---------------------------------------------------------------------------
+# CacheSpec / CacheManager invariants
+# ---------------------------------------------------------------------------
+
+
+def test_cache_spec_validation_and_extents():
+    with pytest.raises(ValueError, match="unknown cache layout"):
+        CacheSpec("dense", 2, 64, layout="ragged")
+    with pytest.raises(ValueError, match="page_size"):
+        CacheSpec("dense", 2, 64, layout="paged", page_size=0)
+    with pytest.raises(ValueError, match="page_budget"):
+        CacheSpec("dense", 2, 64, layout="paged", page_budget=0)
+    s = CacheSpec("dense", 3, 100, layout="paged", page_size=32)
+    assert s.slot_pages == 4                   # ceil(100 / 32)
+    assert s.total_pages == 12                 # dense-equivalent default
+    assert s.pool_pages == 13                  # + trash page
+    assert s.pages_for(0) == 0 and s.pages_for(1) == 1
+    assert s.pages_for(64) == 2 and s.pages_for(65) == 3
+    assert s.view_pages(128) == 4              # capped at slot_pages
+
+
+def test_manager_free_list_reserve_release(tiny_model):
+    cfg, model, _ = tiny_model
+    mgr = model.cache_manager(2, 128, layout="paged", page_size=32,
+                              page_budget=5)
+    assert mgr.free_pages == 5
+    assert mgr.can_reserve(128) and not mgr.can_reserve(129 + 32)
+    assert mgr.reserve(0, 70)                  # 3 pages
+    assert mgr.free_pages == 2
+    # all-or-nothing: a grab that cannot complete leaves NO state
+    assert not mgr.reserve(1, 100)             # needs 4, only 2 free
+    assert mgr.free_pages == 2
+    assert mgr.reserve(1, 33)                  # 2 pages
+    assert mgr.free_pages == 0
+    # ensure() grows one page at a time; exhausted pool refuses
+    assert mgr.ensure(0, 69)                   # already covered
+    assert not mgr.ensure(0, 96)               # page 4: pool empty
+    mgr.release(1)
+    assert mgr.free_pages == 2
+    assert mgr.ensure(0, 96)
+    # released slot's table row is all trash again
+    tab = np.asarray(mgr.table_device())
+    assert (tab[1] == 0).all()
+    # allocated entries are real (non-trash) pages, no duplicates
+    live = tab[0][tab[0] != 0]
+    assert len(live) == 4 and len(set(live.tolist())) == 4
+
+
+def test_manager_resident_lengths(tiny_model):
+    cfg, model, _ = tiny_model
+    mgr = model.cache_manager(2, 64, layout="paged", page_size=32)
+    mgr.note_write(0, 9)
+    mgr.note_write(1, 41)
+    assert mgr.resident_max() == 42
+    mgr.release(1)
+    assert mgr.resident_max() == 10
+    d = mgr.describe()
+    assert d["layout"] == "paged" and d["resident_max"] == 10
+
+
+# ---------------------------------------------------------------------------
+# Layout round trips
+# ---------------------------------------------------------------------------
+
+
+def test_paged_gather_scatter_write_token_round_trip(tiny_model):
+    cfg, model, _ = tiny_model
+    B, L, ps = 2, 128, 32
+    mgr = model.cache_manager(B, L, layout="paged", page_size=ps)
+    storage = mgr.init_storage()
+    assert mgr.reserve(0, 50) and mgr.reserve(1, L)
+    table = mgr.table_device()
+    n = mgr.spec.view_pages(L)                 # full-capacity view
+
+    key = iter(jax.random.split(jax.random.PRNGKey(1), 64))
+    ref_view = jax.tree.map(
+        lambda a: jax.random.normal(
+            next(key), a.shape[:1] + (B, L) + a.shape[3:]
+        ).astype(a.dtype) if a.dtype != jnp.int8 else a,
+        mgr.layout.gather_view(storage, table, n))
+    storage = mgr.layout.scatter_view(storage, ref_view, table, n)
+    got = mgr.layout.gather_view(storage, table, n)
+
+    # slot 1 owns every page -> all rows round-trip; slot 0 owns 2 pages
+    # -> its first 64 rows round-trip (the tail went to the trash page)
+    for g, r in zip(jax.tree.leaves(got),
+                    jax.tree.leaves(ref_view)):
+        np.testing.assert_array_equal(np.asarray(g)[:, 1],
+                                      np.asarray(r)[:, 1])
+        np.testing.assert_array_equal(np.asarray(g)[:, 0, :64],
+                                      np.asarray(r)[:, 0, :64])
+
+    # write_token: only the page holding each slot's row changes
+    t = jnp.array([49, 99], jnp.int32)
+    new_view = jax.tree.map(lambda a: a + 1 if a.dtype != jnp.int8 else a,
+                            got)
+    storage = mgr.layout.write_token(storage, new_view, table, t, n)
+    after = mgr.layout.gather_view(storage, table, n)
+    for a, nv, g in zip(jax.tree.leaves(after),
+                        jax.tree.leaves(new_view),
+                        jax.tree.leaves(got)):
+        a, nv, g = np.asarray(a), np.asarray(nv), np.asarray(g)
+        # slot 0 wrote row 49's page [32, 64); rows [0, 32) untouched
+        np.testing.assert_array_equal(a[:, 0, :32], g[:, 0, :32])
+        np.testing.assert_array_equal(a[:, 0, 32:64], nv[:, 0, 32:64])
+        # slot 1 wrote row 99's page [96, 128)
+        np.testing.assert_array_equal(a[:, 1, :96], g[:, 1, :96])
+        np.testing.assert_array_equal(a[:, 1, 96:], nv[:, 1, 96:])
+
+
+def test_dense_layout_is_bit_identical_legacy(tiny_model):
+    cfg, model, _ = tiny_model
+    legacy = init_params(model.cache_specs(2, 32, "bfloat16"),
+                         jax.random.PRNGKey(0))
+    via_manager = model.init_cache(2, 32)
+    for a, b in zip(jax.tree.leaves(legacy),
+                    jax.tree.leaves(via_manager)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unsupported_families_stay_dense():
+    cfg = reduced_config("mamba2-780m", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    assert not model.supports_paged_cache
+    with pytest.raises(ValueError, match="not position-linear"):
+        model.cache_spec(2, 64, layout="paged")
+    with pytest.raises(ValueError, match="not position-linear"):
+        ServingEngine(model, ServeConfig(model=cfg, cache_layout="paged"),
+                      max_len=64, batch_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# Dense-vs-paged serving oracle (the acceptance bit-equality claim)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "minicpm3-4b",
+                                  "whisper-large-v3"])
+def test_paged_matches_dense_greedy_oracle(arch):
+    cfg = reduced_config(arch, num_layers=2, d_model=32)
+    model = build_model(cfg)
+    dense, _, _ = _drain(model, cfg, "dense")
+    ops.reset_policy_eval_count()
+    paged, _, eng = _drain(model, cfg, "paged", cache_page_size=32)
+    assert dense == paged, f"{arch}: paged layout changed greedy tokens"
+    if cfg.family != "encdec":
+        # encdec cross-attention evaluates the policy once per TRACE
+        # (fixed encoder length, pre-existing); self-attention families
+        # must stay at zero even across compiles
+        assert ops.policy_eval_count() == 0
+    assert eng.cache_stats()["free_pages"] == \
+        eng.cache_stats()["total_pages"]       # drained engine: all freed
+
+
+def test_paged_matches_dense_int8_kv(tiny_model):
+    cfg, model, _ = tiny_model
+    dense, _, _ = _drain(model, cfg, "dense", kv_cache_dtype="int8")
+    paged, _, _ = _drain(model, cfg, "paged", kv_cache_dtype="int8",
+                         cache_page_size=32)
+    assert dense == paged, "int8 scales leaf broke under paging"
+
+
+def test_paged_loop_admission_matches_dense(tiny_model):
+    cfg, model, _ = tiny_model
+    dense, _, _ = _drain(model, cfg, "dense", prefill_mode="loop")
+    paged, _, _ = _drain(model, cfg, "paged", prefill_mode="loop",
+                         cache_page_size=32)
+    assert dense == paged
+
+
+def test_paged_requires_metadata_path(tiny_model):
+    cfg, model, _ = tiny_model
+    with pytest.raises(ValueError, match="metadata-enabled"):
+        ServingEngine(model, ServeConfig(model=cfg, cache_layout="paged",
+                                         use_scheduler_metadata=False),
+                      max_len=64, batch_slots=2)
+    with pytest.raises(ValueError, match="divide"):
+        ServingEngine(model, ServeConfig(model=cfg, cache_layout="paged",
+                                         cache_page_size=48),
+                      max_len=96, batch_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# Resident-length plan keying (the acceptance planning claim)
+# ---------------------------------------------------------------------------
+
+
+def test_plans_key_on_resident_buckets_not_padded_capacity(tiny_model):
+    """A short-context request in a LONG-capacity engine must plan (and
+    under the paged layout, attend) on the resident bucket — and that
+    plan must be smaller-split than the padded-``max_len`` plan the old
+    keying would have frozen."""
+    cfg, model, params = tiny_model
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, cache_layout="paged"),
+        max_len=2048, batch_slots=2)
+    eng.load(params)
+    eng.submit(Request(0, [3, 1, 4, 1, 5], max_new_tokens=4))
+    eng.drain()
+    splits = eng.planned_splits()
+    assert set(splits) == {128}, \
+        f"expected only the 128-resident bucket, got {sorted(splits)}"
+    assert eng.stats.seen_buckets == {("prefill", 128), 128}
+    padded = eng.sched.planner.plan(eng.sched.decode_spec(2048),
+                                    bucket=2048)
+    assert splits[128] < padded.num_splits, (
+        "resident-bucket plan must be smaller-split than the padded "
+        f"max_len plan ({splits[128]} vs {padded.num_splits})")
+
+
+# ---------------------------------------------------------------------------
+# Page-budget admission + per-request exhaustion
+# ---------------------------------------------------------------------------
+
+
+def test_page_budget_gates_admission_and_finishes_per_request(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, cache_layout="paged",
+                           cache_page_size=16, cache_page_budget=5),
+        max_len=128, batch_slots=2)
+    eng.load(params)
+    # prompt that could NEVER fit the pool is refused at submit
+    with pytest.raises(ValueError, match="page budget"):
+        eng.submit(Request(9, list(range(1, 100)), max_new_tokens=1))
+    eng.submit(Request(0, list(range(1, 40)), max_new_tokens=60))  # 3 pages
+    eng.submit(Request(1, list(range(1, 30)), max_new_tokens=60))  # 2 pages
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        outs = eng.drain()
+    # oversubscribed (5 pages, both want to grow): each request finishes
+    # with its OWN page-exhaustion signal, not an engine-wide wall
+    assert [c.finish_reason for c in outs] == ["cache_capacity"] * 2
+    assert all(c.tokens for c in outs)
+    assert any("page pool" in str(x.message) for x in w)
+    assert eng.cache_stats()["free_pages"] == 5
+
+
+def test_budget_blocks_fifo_head_until_pages_free(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, cache_layout="paged",
+                           cache_page_size=16, cache_page_budget=4),
+        max_len=128, batch_slots=2)
+    eng.load(params)
+    eng.submit(Request(0, list(range(1, 40)), max_new_tokens=3))  # 3 pages
+    eng.submit(Request(1, list(range(1, 40)), max_new_tokens=3))  # 3 pages
+    ev = eng.step()
+    # only ONE admission fit the pool: a free slot alone is not enough
+    assert len(eng.sched.live()) == 1
+    outs = eng.drain()                         # head unblocks on finish
+    assert sorted(c.request_id for c in outs) == [0, 1]
+    assert all(c.finish_reason == "length" for c in outs)
+
+
+# ---------------------------------------------------------------------------
+# Ragged kv_len masking (property, xla + pallas)
+# ---------------------------------------------------------------------------
+
+
+def _trimmed_reference(q, k, v, kv_len):
+    """Independent per-slot oracle: attention over the TRIMMED cache."""
+    outs = []
+    for b in range(q.shape[0]):
+        n = int(kv_len[b])
+        qb = q[b].astype(np.float32)                     # (Hq, D)
+        kb = k[b, :n].astype(np.float32)                 # (n, Hkv, D)
+        vb = v[b, :n].astype(np.float32)
+        g = qb.shape[0] // kb.shape[1]
+        kb = np.repeat(kb, g, axis=1)
+        vb = np.repeat(vb, g, axis=1)
+        s = np.einsum("hd,nhd->hn", qb, kb) / np.sqrt(q.shape[-1])
+        s = s - s.max(axis=1, keepdims=True)
+        p = np.exp(s)
+        p /= p.sum(axis=1, keepdims=True)
+        outs.append(np.einsum("hn,nhd->hd", p, vb))
+    return np.stack(outs)
+
+
+@settings(max_examples=12, deadline=None)
+@given(batch=st.integers(1, 4), seqlen=st.sampled_from([32, 64, 96]),
+       heads=st.sampled_from([(4, 1), (4, 2), (2, 2)]),
+       seed=st.integers(0, 2 ** 16))
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_ragged_kv_len_masking_matches_trimmed_reference(
+        impl, batch, seqlen, heads, seed):
+    """Per-slot ``kv_len``-masked decode over a PADDED cache (garbage in
+    the tail — exactly what paged gathers produce past a slot's
+    residency) is bit-equal in math to trimmed-cache attention."""
+    hq, hkv = heads
+    D = 8
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((batch, hq, D), np.float32)
+    k = rng.standard_normal((batch, seqlen, hkv, D), np.float32)
+    v = rng.standard_normal((batch, seqlen, hkv, D), np.float32)
+    kv_len = rng.integers(1, seqlen + 1, size=batch).astype(np.int32)
+    # poison the padded tail: masking, not luck, must keep it out
+    for b in range(batch):
+        k[b, kv_len[b]:] = 1e4
+        v[b, kv_len[b]:] = -1e4
+    got = ops.decode_attention(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), jnp.asarray(kv_len),
+                               impl=impl)
+    want = _trimmed_reference(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_decode_attention_accepts_paged_kv_views():
+    """kernels.ops.decode_attention's layout-aware gather path: a
+    per-tensor :class:`ops.PagedKV` view (pool + page table + static
+    num_pages) attends identically to its gathered dense equivalent."""
+    rng = np.random.default_rng(0)
+    B, hq, hkv, D, ps, n = 2, 4, 1, 8, 16, 3   # view_len = 48
+    pool = 2 * n + 1                           # page 0 = trash
+    kp = jnp.asarray(rng.standard_normal((pool, ps, hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pool, ps, hkv, D)), jnp.float32)
+    table = jnp.asarray([[1, 2, 3, 0], [4, 5, 6, 0]], jnp.int32)
+    kv_len = jnp.asarray([40, 17], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, hq, D)), jnp.float32)
+    pk = ops.PagedKV(kp, table, n)
+    pv = ops.PagedKV(vp, table, n)
+    assert pk.view_len == 48
+    kd = ops.gather_pages(kp, table, num_pages=n)
+    vd = ops.gather_pages(vp, table, num_pages=n)
+    got = ops.decode_attention(q, pk, pv, kv_len)
+    want = ops.decode_attention(q, kd, vd, kv_len)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Fallback-plan attribution (PlanCacheStats.fallback_trace)
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_launches_record_resident_summary(tiny_model):
+    """The internal-heuristic path traces ONE step on the padded cache
+    length; every launch must record (resident_max, traced_len) so A/Bs
+    can attribute fallback plans to the residency they served."""
+    cfg, model, params = tiny_model
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, use_scheduler_metadata=False),
+        max_len=256, batch_slots=2)
+    eng.load(params)
+    eng.submit(Request(0, [5, 6, 7], max_new_tokens=4))
+    eng.drain()
+    st = eng.stats
+    assert st.fallback_launches > 0
+    assert len(st.fallback_trace) == st.fallback_launches
+    residents = [r for r, _ in st.fallback_trace]
+    assert all(t == 256 for _, t in st.fallback_trace)
+    assert residents == sorted(residents)      # lockstep growth
+    assert max(residents) < 256                # plan covered padding only
+    # the metadata-enabled engine records NO fallback launches
+    eng2 = ServingEngine(model, ServeConfig(model=cfg), max_len=256,
+                         batch_slots=2)
+    eng2.load(params)
+    eng2.submit(Request(0, [5, 6, 7], max_new_tokens=4))
+    eng2.drain()
+    assert eng2.stats.fallback_launches == 0
+    assert eng2.stats.fallback_trace == []
+    st.reset()
+    assert st.fallback_launches == 0 and st.fallback_trace == []

@@ -176,7 +176,9 @@ def test_int8_kv_cache_decode_accuracy():
                            jnp.float32) * 0.3).astype(jnp.bfloat16)
 
     def run(kv_dtype):
-        c = am.init_kv_cache(cfg, B, 32, kv_dtype)
+        dt = "int8" if kv_dtype == "int8" else "bfloat16"
+        c = init_params(am.kv_cache_specs(cfg, B, 32, dt),
+                        jax.random.PRNGKey(0))
         outs = []
         for i in range(L):
             y, c = am.attention_decode(p, cfg, x[:, i:i + 1], c,

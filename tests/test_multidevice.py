@@ -57,11 +57,13 @@ def test_fused_seqsharded_decode_matches_oracle():
         cv_ref = jax.vmap(upd)(cv, vn, t)
         want = ref.naive_decode_attention(q, ck_ref, cv_ref, kv_len)
 
-        ctx = ops.DecodeContext(seq_shard_mesh=mesh, seq_shard_axis="model")
+        from repro.plan import LaunchPlan, plan_scope
+        plan = LaunchPlan(kind="decode", seq_shard_mesh=mesh,
+                          seq_shard_axis="model")
         cache_sh = NamedSharding(mesh, P("data", "model", None, None))
         ckd = jax.device_put(ck, cache_sh)
         cvd = jax.device_put(cv, cache_sh)
-        with ops.decode_context(ctx):
+        with plan_scope(plan):
             out, nk, nv = jax.jit(
                 lambda *a: ops.decode_attention_update(*a)
             )(q, ckd, cvd, kn, vn, t, kv_len)
@@ -97,10 +99,11 @@ def test_fused_decode_mla_latent_matches_oracle():
         want = ref.naive_decode_attention(q, lat_ref, lat_ref[..., :R],
                                           kv_len, scale=1.0)
 
-        ctx = ops.DecodeContext(seq_shard_mesh=mesh)
+        from repro.plan import LaunchPlan, plan_scope
+        plan = LaunchPlan(kind="decode", seq_shard_mesh=mesh)
         latd = jax.device_put(lat, NamedSharding(mesh, P(None, "model",
                                                          None, None)))
-        with ops.decode_context(ctx):
+        with plan_scope(plan):
             out, nl, _ = jax.jit(
                 lambda *a: ops.decode_attention_update(
                     *a, v_width=R, scale=1.0)
@@ -225,14 +228,15 @@ def test_seqpar_attention_matches_reference():
         k = jax.random.normal(ks[1], (B, L, 1, D), jnp.float32)
         v = jax.random.normal(ks[2], (B, L, 1, D), jnp.float32)
         want = ref.naive_attention(q, k, v, causal=True)
-        ctx = ops.AttnContext(seq_shard_mesh=mesh)
-        with ops.attention_context(ctx):
+        from repro.plan import LaunchPlan, plan_scope
+        plan = LaunchPlan(kind="prefill", seq_shard_mesh=mesh)
+        with plan_scope(plan):
             got = jax.jit(lambda *a: ops.attention(*a, causal=True))(q, k, v)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-5, atol=2e-5)
         # windowed variant (hybrid local attention)
         want_w = ref.naive_attention(q, k, v, causal=True, window=16)
-        with ops.attention_context(ctx):
+        with plan_scope(plan):
             got_w = jax.jit(lambda *a: ops.attention(
                 *a, causal=True, window=16))(q, k, v)
         np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
