@@ -7,9 +7,10 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify verify-all bench golden plan-golden serving-smoke cache-smoke
+.PHONY: verify verify-all bench golden plan-golden tune-golden \
+	serving-smoke cache-smoke tune-smoke
 
-verify: plan-golden serving-smoke cache-smoke
+verify: plan-golden tune-golden serving-smoke cache-smoke tune-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 # seconds-scale serving A/B: fused-prefill admission must stay O(1)
@@ -22,6 +23,12 @@ serving-smoke:
 cache-smoke:
 	$(PY) -m benchmarks.cache_ab --smoke
 
+# seconds-scale tuning A/B: measured policy never slower than the
+# analytic policies on covered shapes, counted paper fallback elsewhere,
+# serving engine end-to-end on split_policy=measured (structural)
+tune-smoke:
+	$(PY) -m benchmarks.tune_ab --smoke
+
 verify-all:
 	$(PY) -m pytest -q
 
@@ -33,6 +40,16 @@ bench:
 plan-golden:
 	$(PY) -m pytest -q tests/test_policy_golden.py \
 	    tests/test_plan.py::test_planner_reproduces_golden_table_bit_exact
+
+# fast gate (mirrors plan-golden for repro.tune): the committed
+# reference SplitTable must be schema-valid and replay bit-exact
+# through Planner(policy="measured"); regenerate intentionally with
+# `python -m repro.launch.tune --reference` and commit the diff
+tune-golden:
+	$(PY) -m pytest -q \
+	    tests/test_tune.py::test_reference_table_schema_valid \
+	    tests/test_tune.py::test_reference_table_replays_bit_exact \
+	    tests/test_tune.py::test_reference_table_is_regenerated_deterministically
 
 # regenerate the policy decision golden table (commit the diff!)
 golden:

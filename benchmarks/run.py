@@ -16,6 +16,7 @@ def main() -> None:
         roofline_report,
         serving_ab,
         table1_ab,
+        tune_ab,
         u_curve_sweep,
     )
 
@@ -30,6 +31,8 @@ def main() -> None:
          serving_ab.main),
         ("cache_ab (DenseLayout vs PagedKVCache, mixed prompt lengths)",
          cache_ab.main),
+        ("tune_ab (measured vs paper vs fa3_baseline split policies)",
+         tune_ab.main),
     ]
     failures = 0
     for name, fn in jobs:

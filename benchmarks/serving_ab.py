@@ -99,12 +99,15 @@ def run_cell(model, params, policy: str, prefill_mode: str,
     ttft = [first_t[r] - submit_t[r] for r in submit_t]
     tpot = [(finish_t[c.request_id] - first_t[c.request_id])
             / max(1, len(c.tokens) - 1) for c in outs]
-    st = eng.stats
-    n_dec = sum(v for k, v in st.launches.items() if isinstance(k, int))
-    n_pre = sum(v for k, v in st.launches.items()
-                if isinstance(k, tuple) and k[0] == "prefill")
-    pre_miss = sum(1 for k in st.seen_buckets
-                   if isinstance(k, tuple) and k[0] == "prefill")
+    # counters from the engine's JSON snapshot (the same surface
+    # ServeConfig.stats_path dumps at drain) — not re-derived by hand
+    st = eng.stats.to_json()
+    n_dec = sum(v for k, v in st["launches"].items()
+                if not k.startswith("prefill/"))
+    n_pre = sum(v for k, v in st["launches"].items()
+                if k.startswith("prefill/"))
+    pre_miss = sum(1 for k in st["seen_buckets"]
+                   if k.startswith("prefill/"))
     row = [policy, prefill_mode, len(outs),
            sum(len(c.tokens) for c in outs), n_dec, n_pre, pre_miss,
            round(1e3 * float(np.mean(ttft)), 1),

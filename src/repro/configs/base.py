@@ -215,11 +215,23 @@ class ServeConfig:
     model: ModelConfig
     mesh: MeshConfig = SINGLE_POD
     shape: ShapeConfig = DECODE_32K
-    split_policy: str = "paper"        # fa3_baseline | paper | tpu_adaptive
+    # fa3_baseline | paper | tpu_adaptive | measured (repro.tune table)
+    split_policy: str = "paper"
     # explicit split-count override (FA3's explicit ``num_splits``): the
     # engine's Planner bypasses the policy and freezes this count
     # (clamped per-shape to num_n_blocks).  None = the policy decides.
     num_splits_override: Optional[int] = None
+    # split_policy="measured": path to the calibrated repro.tune
+    # SplitTable the engine's Planner decides from (calibrate one with
+    # `python -m repro.launch.tune`; the committed reference table is
+    # experiments/tune/reference_reduced.json).  A table object can also
+    # be passed directly via ServingEngine(tune_table=...).
+    tune_table_path: Optional[str] = None
+    # when set, ServingEngine.drain() dumps PlanCacheStats.to_json()
+    # (hits/misses/launches/fallback traces + measured-policy fallback
+    # counts) to this path — serving A/Bs read it instead of re-deriving
+    # the counters by hand.
+    stats_path: Optional[str] = None
     # metadata-enabled path (paper §5): precompute one LaunchPlan per
     # (batch, cache-length bucket) and launch the decode step
     # specialized on it.  False = the paper's weaker "internal heuristic"

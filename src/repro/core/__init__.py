@@ -15,8 +15,9 @@ _SUBMODULE_EXPORTS = {
         "metadata_cache_info"),
     "repro.core.split_policy": (
         "DEFAULT_NUM_CORES", "KV_BLOCK", "DecodeWorkload", "POLICIES",
-        "choose_mesh_splits", "choose_num_splits", "fa3_baseline",
-        "get_policy", "paper_policy", "tpu_adaptive"),
+        "analytic_policies", "available_policies", "choose_mesh_splits",
+        "choose_num_splits", "fa3_baseline", "get_policy", "measured",
+        "paper_policy", "tpu_adaptive"),
 }
 
 __all__ = sorted(n for names in _SUBMODULE_EXPORTS.values() for n in names)

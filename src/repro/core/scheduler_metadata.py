@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from typing import Optional
 
-from repro.core.split_policy import DEFAULT_NUM_CORES
+from repro.core.split_policy import DEFAULT_NUM_CORES, get_policy
 from repro.plan import AttentionSpec, LaunchPlan, PlanCache, Planner
 from repro.plan import bucket_seqlen  # noqa: F401  (canonical home moved)
 
@@ -51,6 +51,15 @@ def get_scheduler_metadata(
     benchmarks use it to force a split count (e.g. the Fig. 3 U-curve sweep)
     while production callers leave it ``None`` and get the policy's choice.
     """
+    fn = get_policy(policy)
+    if getattr(fn, "needs_table", False):
+        # table-backed policies cannot serve the inline-evaluation path:
+        # the SplitTable rides Planner instances, and this entry point is
+        # reached only from trace-time dispatch (no planner in hand) —
+        # e.g. a cross-attention launch opting out of a measured engine's
+        # ambient plan.  Resolve to the backend's declared analytic
+        # fallback, exactly what the table does for uncovered shapes.
+        policy = getattr(fn, "fallback", "paper")
     key = (batch, seqlen_q, seqlen_k, num_heads_q, num_heads_kv, head_dim,
            policy, num_cores, num_splits_override, pack_gqa)
 

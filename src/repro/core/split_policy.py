@@ -25,6 +25,17 @@ Three selectable policies (A/B-able everywhere in the framework):
     shapes), made principled.  Property-tested to never regress the
     modeled latency vs. ``fa3_baseline``.
 
+``measured``
+    The ``repro.tune`` backend (paper SS4.1's "replace the model with
+    hardware measurement"): decide from a calibrated
+    :class:`~repro.tune.SplitTable` of per-shape measured (or, in CI,
+    modeled) candidate latencies.  Table-backed — the table is injected
+    at :class:`~repro.plan.Planner` construction; shapes the table's
+    grid does not cover fall back to ``paper`` explicitly (and are
+    counted).  Marked ``needs_table`` below so analytic consumers (the
+    golden decision table, property sweeps) can enumerate
+    :func:`analytic_policies` instead.
+
 All policies operate on a :class:`DecodeWorkload` so they are independent of
 where they run (Pallas kernel launch, XLA decode path, mesh-level sequence
 sharding, or the benchmark cost model).
@@ -181,22 +192,65 @@ def tpu_adaptive(w: DecodeWorkload, num_cores: int = DEFAULT_NUM_CORES) -> int:
     return best_s
 
 
+def measured(w: DecodeWorkload, num_cores: int = DEFAULT_NUM_CORES,
+             table=None, impl: Optional[str] = None) -> int:
+    """Table-backed policy: decide from a calibrated ``repro.tune``
+    :class:`~repro.tune.SplitTable` (nearest-L_K-bucket lookup, explicit
+    counted fallback to ``paper`` for uncovered shapes).
+
+    The table rides the :class:`~repro.plan.Planner` (``table=``) — a
+    bare ``choose_num_splits(..., policy="measured")`` call must pass it
+    explicitly.  ``impl`` selects the table's kernel-impl family
+    (``None`` = the xla default).
+    """
+    if table is None:
+        raise ValueError(
+            "split policy 'measured' decides from a repro.tune SplitTable; "
+            "pass Planner(policy='measured', table=SplitTable.load(path)) "
+            "(serving: ServeConfig.tune_table_path / serve --tune-table, "
+            "calibrate one with `python -m repro.launch.tune`)")
+    s, _tuned = table.choose(w, impl=impl, num_cores=num_cores)
+    return s
+
+
+measured.needs_table = True       # excluded from analytic_policies()
+measured.fallback = "paper"       # uncovered shapes / inline-eval path
+
+
 POLICIES: Dict[str, Callable[..., int]] = {
     "fa3_baseline": fa3_baseline,
     "paper": paper_policy,
     "tpu_adaptive": tpu_adaptive,
+    "measured": measured,
 }
 
 
 def get_policy(name: str) -> Callable[..., int]:
     if name not in POLICIES:
-        raise KeyError(f"unknown split policy {name!r}; known: {sorted(POLICIES)}")
+        raise KeyError(f"unknown split policy {name!r}; "
+                       f"known: {available_policies()}")
     return POLICIES[name]
 
 
+def available_policies() -> list:
+    """Registered backend names, for CLIs / error messages."""
+    return sorted(POLICIES)
+
+
+def analytic_policies() -> list:
+    """Backends decidable from the workload alone (no injected table) —
+    the set the golden decision table and property sweeps enumerate."""
+    return sorted(n for n, fn in POLICIES.items()
+                  if not getattr(fn, "needs_table", False))
+
+
 def choose_num_splits(w: DecodeWorkload, policy: str = "paper",
-                      num_cores: int = DEFAULT_NUM_CORES) -> int:
-    s = get_policy(policy)(w, num_cores=num_cores)
+                      num_cores: int = DEFAULT_NUM_CORES,
+                      table=None, impl: Optional[str] = None) -> int:
+    fn = get_policy(policy)
+    kw = {"table": table, "impl": impl} \
+        if getattr(fn, "needs_table", False) else {}
+    s = fn(w, num_cores=num_cores, **kw)
     return max(1, min(int(s), w.num_n_blocks))
 
 
@@ -206,7 +260,8 @@ def choose_num_splits(w: DecodeWorkload, policy: str = "paper",
 
 
 def choose_mesh_splits(w: DecodeWorkload, chips_on_axis: int,
-                       policy: str = "tpu_adaptive") -> int:
+                       policy: str = "tpu_adaptive", table=None,
+                       impl: Optional[str] = None) -> int:
     """How many ways to sequence-shard the KV cache across chips.
 
     The paper's grid starvation, at mesh scale: when ``B x H_KV`` tiles are
@@ -214,7 +269,8 @@ def choose_mesh_splits(w: DecodeWorkload, chips_on_axis: int,
     KV cache recovers the idle chips.  Constrained to divide the axis (so
     the sharding is expressible as a NamedSharding over a mesh axis).
     """
-    s = choose_num_splits(w, policy=policy, num_cores=chips_on_axis)
+    s = choose_num_splits(w, policy=policy, num_cores=chips_on_axis,
+                          table=table, impl=impl)
     # round DOWN to a divisor of chips_on_axis for even mesh sharding
     for d in range(min(s, chips_on_axis), 0, -1):
         if chips_on_axis % d == 0:

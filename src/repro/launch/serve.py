@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.configs.base import ServeConfig
 from repro.configs.reduced import reduced_config
+from repro.core.split_policy import available_policies
 from repro.models.registry import build_model
 from repro.serving import (
     FINISHED,
@@ -40,7 +41,8 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 top_k: int = 0, top_p: float = 1.0,
                 sampler: str = "categorical",
                 prefill_mode: str = "auto", stream: bool = False,
-                cache_layout: str = "dense", log_fn=print):
+                cache_layout: str = "dense", tune_table=None,
+                stats_path=None, log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -54,7 +56,10 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
         ServeConfig(model=cfg, split_policy=policy,
                     num_splits_override=num_splits_override,
                     prefill_mode=prefill_mode,
-                    cache_layout=cache_layout),
+                    cache_layout=cache_layout,
+                    tune_table_path=(str(tune_table) if tune_table
+                                     else None),
+                    stats_path=(str(stats_path) if stats_path else None)),
         max_len=max_len, batch_slots=batch_slots,
         sampler=get_sampler(sampler))
     engine.load(params)
@@ -88,6 +93,14 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
            f"in {dt:.2f}s ({1e3 * dt / max(1, total_new):.1f} ms/token)")
     log_fn("frozen plans (bucket -> num_splits): "
            f"{engine.planned_splits()}")
+    if engine.tune_table is not None:
+        st = engine.stats
+        log_fn(f"measured policy: table {engine.tune_table.version}, "
+               f"{st.measured_lookups} lookups, "
+               f"{st.measured_fallbacks} fallbacks to "
+               f"'{engine.tune_table.fallback_policy}'")
+    if stats_path:
+        log_fn(f"plan-cache stats snapshot: {stats_path}")
     if cache_layout == "paged":
         cs = engine.cache_stats()
         log_fn(f"paged cache: {cs['total_pages']} pages of "
@@ -106,7 +119,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--policy", default="paper",
-                    choices=("fa3_baseline", "paper", "tpu_adaptive"))
+                    choices=available_policies())
+    ap.add_argument("--tune-table", default=None,
+                    help="calibrated repro.tune SplitTable JSON for "
+                         "--policy measured (write one with `python -m "
+                         "repro.launch.tune`)")
+    ap.add_argument("--stats-path", default=None,
+                    help="dump PlanCacheStats.to_json() here at drain")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--splits", type=int, default=None,
                     help="explicit num_splits override: the engine's "
@@ -139,7 +158,8 @@ def main() -> None:
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, sampler=args.sampler,
                 prefill_mode=args.prefill, stream=args.stream,
-                cache_layout=args.cache_layout)
+                cache_layout=args.cache_layout,
+                tune_table=args.tune_table, stats_path=args.stats_path)
 
 
 if __name__ == "__main__":

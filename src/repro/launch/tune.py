@@ -1,0 +1,158 @@
+"""Autotuning launcher: ``python -m repro.launch.tune ...``
+
+Calibrates a :class:`~repro.tune.TuneSpec` grid through the
+:class:`~repro.tune.Calibrator` and writes the resulting
+:class:`~repro.tune.SplitTable` JSON under ``experiments/tune/`` — the
+closed measure -> decide -> serve loop: the written table feeds
+``Planner(policy="measured")`` / ``serve --tune-table``.
+
+    # regenerate the committed reference table (deterministic, modeled)
+    python -m repro.launch.tune --reference
+
+    # calibrate a custom grid by wall-clock on this backend
+    python -m repro.launch.tune --mode wallclock \
+        --lk 128 256 512 1024 --batches 1 4 --heads 64:1:128 \
+        --out experiments/tune/my_backend.json
+
+    # refresh a sub-grid of an existing table in place
+    python -m repro.launch.tune --lk 512 --heads 64:1:128 \
+        --merge experiments/tune/my_backend.json \
+        --out experiments/tune/my_backend.json
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+from typing import Tuple
+
+from repro.core.split_policy import available_policies
+from repro.tune import (
+    REFERENCE_SPEC,
+    REFERENCE_TABLE_PATH,
+    Calibrator,
+    SplitTable,
+    TABLE_DIR,
+    TuneSpec,
+)
+
+
+def _parse_heads(items) -> Tuple[Tuple[int, int, int], ...]:
+    out = []
+    for it in items:
+        try:
+            hq, hkv, hd = (int(x) for x in it.split(":"))
+        except ValueError:
+            raise SystemExit(f"--heads wants HQ:HKV:HEAD_DIM, got {it!r}")
+        out.append((hq, hkv, hd))
+    return tuple(out)
+
+
+def run_tune(spec: TuneSpec, *, mode: str = "auto", seed: int = 0,
+             out: Path, merge: Path | None = None,
+             log_fn=print) -> SplitTable:
+    log_fn(f"calibrating {spec.grid_size()} grid cells "
+           f"(mode={mode}, repeats={spec.repeats}, seed={seed}) ...")
+    table = Calibrator(spec, mode=mode, seed=seed).calibrate()
+    if merge is not None:
+        base = SplitTable.load(merge)
+        log_fn(f"merging into {merge} ({len(base)} cells, "
+               f"version {base.version})")
+        table = base.merge(table)
+        table.validate()
+    path = table.save(out)
+    d = table.describe()
+    log_fn(f"wrote {path}: {d['cells']} cells / {d['families']} shape "
+           f"families, version {d['version']}")
+    log_fn(f"fingerprint: {table.fingerprint}")
+    by_split: dict = {}
+    for e in table.entries:
+        by_split[e["best_split"]] = by_split.get(e["best_split"], 0) + 1
+    log_fn("decision histogram (num_splits -> cells): "
+           f"{dict(sorted(by_split.items()))}")
+    log_fn(f"serve from it: python -m repro.launch.serve --arch "
+           f"qwen2.5-3b --policy measured --tune-table {path}")
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=f"registered split policies: {available_policies()} "
+               "(this tool feeds the 'measured' backend)")
+    ap.add_argument("--reference", action="store_true",
+                    help="calibrate the REFERENCE grid in modeled mode "
+                         "and write the committed reference table "
+                         f"({REFERENCE_TABLE_PATH})")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="output table path (default: "
+                         "experiments/tune/split_table.json)")
+    ap.add_argument("--merge", type=Path, default=None,
+                    help="existing table to merge the new cells into "
+                         "(new cells win; schema must match)")
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "wallclock", "modeled"),
+                    help="timing mode: wallclock on real backends, "
+                         "modeled = deterministic analytic surrogate "
+                         "(auto: modeled on CPU hosts)")
+    ap.add_argument("--lk", type=int, nargs="+", default=None,
+                    help="L_K grid (multiples of 128)")
+    ap.add_argument("--batches", type=int, nargs="+", default=None)
+    ap.add_argument("--heads", nargs="+", default=None,
+                    metavar="HQ:HKV:HEAD_DIM",
+                    help="head shapes, e.g. 64:1:128 16:2:128")
+    ap.add_argument("--impl", nargs="+", default=None,
+                    choices=("xla", "pallas"),
+                    help="kernel impls to calibrate (default: xla)")
+    ap.add_argument("--candidates", type=int, nargs="+", default=None,
+                    help="explicit candidate split counts "
+                         "(default: every feasible split)")
+    ap.add_argument("--num-cores", type=int, default=None,
+                    help="parallel grid slots the modeled mode targets")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timing repeats per candidate (median taken)")
+    ap.add_argument("--warmup", type=int, default=None,
+                    help="warmup launches discarded before timing")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="global wall-clock cap; past it, remaining "
+                         "cells degrade to the analytic model")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.reference:
+        spec, mode, seed = REFERENCE_SPEC, "modeled", 0
+        out = args.out or REFERENCE_TABLE_PATH
+        overridden = [f for f, v in (
+            ("--lk", args.lk), ("--batches", args.batches),
+            ("--heads", args.heads), ("--impl", args.impl),
+            ("--candidates", args.candidates), ("--merge", args.merge),
+            ("--num-cores", args.num_cores), ("--repeats", args.repeats),
+            ("--warmup", args.warmup), ("--budget-s", args.budget_s),
+            ("--mode", None if args.mode == "auto" else args.mode),
+            ("--seed", args.seed or None),
+        ) if v is not None]
+        if overridden:
+            raise SystemExit(
+                "--reference fixes the grid, mode=modeled and seed=0 so "
+                "the committed table stays reproducible; drop "
+                f"{overridden} (or run without --reference)")
+    else:
+        over = {k: v for k, v in dict(
+            lk_buckets=tuple(args.lk) if args.lk else None,
+            batches=tuple(args.batches) if args.batches else None,
+            head_shapes=_parse_heads(args.heads) if args.heads else None,
+            impls=tuple(args.impl) if args.impl else None,
+            candidates=(tuple(args.candidates) if args.candidates
+                        else None),
+            num_cores=args.num_cores,
+            repeats=args.repeats,
+            warmup=args.warmup,
+            budget_s=args.budget_s,
+        ).items() if v is not None}
+        spec, mode, seed = TuneSpec(**over), args.mode, args.seed
+        out = args.out or TABLE_DIR / "split_table.json"
+    run_tune(spec, mode=mode, seed=seed, out=out, merge=args.merge)
+
+
+if __name__ == "__main__":
+    main()

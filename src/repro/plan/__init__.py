@@ -7,9 +7,9 @@ vLLM route scheduling through ``get_scheduler_metadata``:
   launch (kind, shapes, window, MLA v_width, quantization, mesh axis).
 - :class:`Planner`        — compiles a spec into a frozen
   :class:`LaunchPlan` through a pluggable policy backend
-  (``fa3_baseline`` / ``paper`` / ``tpu_adaptive`` / explicit
-  ``num_splits_override``), including the mesh-level decision
-  (:meth:`Planner.mesh_plan`).
+  (``fa3_baseline`` / ``paper`` / ``tpu_adaptive`` / table-backed
+  ``measured`` (``repro.tune``) / explicit ``num_splits_override``),
+  including the mesh-level decision (:meth:`Planner.mesh_plan`).
 - :class:`LaunchPlan`     — the frozen launch decision: split count,
   pack_gqa, impl, block_k, mesh min_splits / seq-shard, cache bucket.
 - :class:`PlanCache`      — reusable capacity-bounded plan cache with

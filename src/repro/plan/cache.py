@@ -44,6 +44,14 @@ class PlanCacheStats:
     summary it actually covered — ``(resident_max, traced_len)`` — and
     A/B benchmarks can attribute fallback plans to the residency they
     served instead of mistaking them for planned launches.
+
+    ``measured_*`` attributes the ``measured`` (repro.tune) policy
+    backend: every SplitTable lookup counts, and lookups whose shape
+    family the table's grid does not cover — decided by the analytic
+    fallback policy instead of a measurement — are counted and traced
+    separately, so a serving A/B can tell "served from the table" from
+    "served from the fallback" without re-deriving it.  The serving
+    engine wires these up via ``SplitTable.attach_stats``.
     """
     TRACE_CAP = 4096
 
@@ -55,6 +63,11 @@ class PlanCacheStats:
     fallback_launches: int = 0
     # (resident_max, traced_len) per fallback launch, trimmed like trace
     fallback_trace: List[tuple] = field(default_factory=list)
+    # measured-policy (SplitTable) lookups; fallbacks = uncovered shapes
+    measured_lookups: int = 0
+    measured_fallbacks: int = 0
+    # (batch, Hq, Hkv, head_dim, impl, dtype_bytes, L_K) per fallback
+    measured_fallback_trace: List[tuple] = field(default_factory=list)
 
     @property
     def total_launches(self) -> int:
@@ -80,6 +93,40 @@ class PlanCacheStats:
         if len(self.fallback_trace) > 2 * self.TRACE_CAP:
             del self.fallback_trace[:-self.TRACE_CAP]
 
+    def record_measured(self, key: tuple, fallback: bool) -> None:
+        """One measured-policy (SplitTable) lookup.  ``key`` is the
+        workload family + L_K; ``fallback=True`` means the table's grid
+        did not cover it and the analytic fallback policy decided."""
+        self.measured_lookups += 1
+        if fallback:
+            self.measured_fallbacks += 1
+            self.measured_fallback_trace.append(tuple(key))
+            if len(self.measured_fallback_trace) > 2 * self.TRACE_CAP:
+                del self.measured_fallback_trace[:-self.TRACE_CAP]
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-safe snapshot of every counter (tuple keys flattened to
+        ``"a/b"`` strings).  ``ServingEngine.drain`` dumps this when
+        ``ServeConfig.stats_path`` is set, so serving A/Bs read the
+        numbers instead of re-deriving them by hand."""
+        def k2s(k: Hashable) -> str:
+            return "/".join(map(str, k)) if isinstance(k, tuple) else str(k)
+
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "total_launches": self.total_launches,
+            "distinct_buckets": self.distinct_buckets,
+            "launches": {k2s(k): v for k, v in self.launches.items()},
+            "seen_buckets": sorted(k2s(k) for k in self.seen_buckets),
+            "fallback_launches": self.fallback_launches,
+            "fallback_trace": [list(t) for t in self.fallback_trace],
+            "measured_lookups": self.measured_lookups,
+            "measured_fallbacks": self.measured_fallbacks,
+            "measured_fallback_trace": [
+                list(t) for t in self.measured_fallback_trace],
+        }
+
     def reset(self) -> None:
         self.hits = 0
         self.misses = 0
@@ -88,6 +135,9 @@ class PlanCacheStats:
         self.seen_buckets.clear()
         self.fallback_launches = 0
         self.fallback_trace.clear()
+        self.measured_lookups = 0
+        self.measured_fallbacks = 0
+        self.measured_fallback_trace.clear()
 
 
 class PlanCache:

@@ -36,6 +36,13 @@ class LaunchPlan:
     impl: Optional[str] = None            # xla | pallas | naive; None = caller's
     block_k: Optional[int] = None         # Pallas KV block; None = kernel default
     bucket: Optional[int] = None          # cache-length bucket this plan covers
+    # --- measured-policy provenance (repro.tune) ---------------------------
+    # tuned=True: num_splits came from a calibrated SplitTable cell;
+    # tuned=False under policy="measured": the table's grid did not
+    # cover this shape and the analytic fallback decided (counted in
+    # PlanCacheStats.measured_fallbacks).
+    tuned: bool = False
+    table_version: Optional[str] = None   # SplitTable.version that decided
     # --- mesh-level realization (serve-step builder) -----------------------
     mesh_splits: int = 1                  # ways the model axis seq-shards KV
     min_splits: int = 1                   # kernel split rounded up to this
@@ -74,7 +81,8 @@ class LaunchPlan:
         the policy / num_cores / mesh context still apply.
         """
         return dataclasses.replace(self, spec=None, num_splits=None,
-                                   bucket=None)
+                                   bucket=None, tuned=False,
+                                   table_version=None)
 
     def describe(self) -> Dict[str, Any]:
         """JSON-safe summary (dry-run records, logs)."""
@@ -87,6 +95,9 @@ class LaunchPlan:
             d["num_cores"] = self.num_cores
         if self.bucket is not None:
             d["bucket"] = self.bucket
+        if self.table_version is not None:
+            d["tuned"] = self.tuned
+            d["table_version"] = self.table_version
         if self.impl is not None:
             d["impl"] = self.impl
         if self.block_k is not None:

@@ -1,9 +1,13 @@
 """Planner: compiles an AttentionSpec into a frozen LaunchPlan.
 
 The policy backend is pluggable by name (``fa3_baseline`` / ``paper`` /
-``tpu_adaptive`` — the registry in ``repro.core.split_policy``) or
-bypassed entirely with ``num_splits_override`` (FA3's explicit
-``num_splits`` argument; benchmarks use it for forced-split sweeps).
+``tpu_adaptive`` / ``measured`` — the registry in
+``repro.core.split_policy``) or bypassed entirely with
+``num_splits_override`` (FA3's explicit ``num_splits`` argument;
+benchmarks use it for forced-split sweeps).  The ``measured`` backend
+decides from an injected ``repro.tune`` :class:`SplitTable`
+(``Planner(policy="measured", table=...)``); plans record their
+``tuned`` / ``table_version`` provenance.
 
 Two planning levels share one entry point:
 
@@ -22,6 +26,7 @@ from typing import Optional
 
 from repro.core.split_policy import (
     DEFAULT_NUM_CORES,
+    available_policies,
     choose_mesh_splits,
     choose_num_splits,
     get_policy,
@@ -36,6 +41,9 @@ class Planner:
 
     ``num_cores = None`` means "the policy's default machine model"
     (:data:`DEFAULT_NUM_CORES`); mesh planning substitutes the axis size.
+    ``table`` is the calibrated ``repro.tune`` SplitTable the
+    ``measured`` backend decides from (required for it, ignored by the
+    analytic backends).
     """
     policy: str = "paper"
     num_cores: Optional[int] = None
@@ -43,9 +51,18 @@ class Planner:
     pack_gqa: Optional[bool] = None       # None = pack iff H_Q > H_KV
     impl: Optional[str] = None            # xla | pallas | naive
     block_k: Optional[int] = None         # Pallas KV block width
+    table: Optional[object] = None        # repro.tune.SplitTable
 
     def __post_init__(self):
-        get_policy(self.policy)           # fail fast on unknown backends
+        fn = get_policy(self.policy)      # fail fast on unknown backends
+        if getattr(fn, "needs_table", False) and self.table is None:
+            raise ValueError(
+                f"split policy {self.policy!r} decides from a calibrated "
+                "repro.tune SplitTable: pass Planner(table="
+                "SplitTable.load(path)) (serving: ServeConfig."
+                "tune_table_path / serve --tune-table); analytic "
+                f"backends needing no table: "
+                f"{[p for p in available_policies() if p != self.policy]}")
 
     # --- kernel-level planning ---------------------------------------------
 
@@ -55,12 +72,19 @@ class Planner:
         w = spec.workload()
         cores = self.num_cores if self.num_cores is not None \
             else DEFAULT_NUM_CORES
+        tuned, table_version = False, None
         if spec.kind == "prefill":
             s = 1                         # prefill never splits KV
         elif self.num_splits_override is not None:
             s = max(1, min(int(self.num_splits_override), w.num_n_blocks))
+        elif self.table is not None and \
+                getattr(get_policy(self.policy), "needs_table", False):
+            s, tuned = self.table.choose(w, impl=self.impl,
+                                         num_cores=cores)
+            table_version = self.table.version
         else:
-            s = choose_num_splits(w, policy=self.policy, num_cores=cores)
+            s = choose_num_splits(w, policy=self.policy, num_cores=cores,
+                                  table=self.table)
         if self.pack_gqa is not None:
             pack = self.pack_gqa
         elif spec.kind == "prefill":
@@ -70,7 +94,8 @@ class Planner:
         return LaunchPlan(kind=spec.kind, spec=spec, num_splits=s,
                           pack_gqa=pack, policy=self.policy,
                           num_cores=cores, impl=self.impl,
-                          block_k=self.block_k, bucket=bucket)
+                          block_k=self.block_k, bucket=bucket,
+                          tuned=tuned, table_version=table_version)
 
     def context(self, kind: str = "decode", **overrides) -> LaunchPlan:
         """A context-only plan: nothing frozen, policy runs at trace time
@@ -105,7 +130,8 @@ class Planner:
             return dataclasses.replace(p, mesh_splits=axis_size,
                                        seq_shard_axis=axis)
         p = planner.plan(mesh_spec)
-        s_mesh = choose_mesh_splits(w, axis_size, policy=self.policy)
+        s_mesh = choose_mesh_splits(w, axis_size, policy=self.policy,
+                                    table=self.table, impl=self.impl)
         return dataclasses.replace(
             p, mesh_splits=axis_size if s_mesh > 1 else 1,
             seq_shard_axis=axis)

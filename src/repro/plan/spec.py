@@ -64,12 +64,19 @@ class AttentionSpec:
                 f"unknown attention kind {self.kind!r}; known: {KINDS}")
 
     def workload(self) -> DecodeWorkload:
-        """The policy-facing shape tuple (what the split heuristic reads)."""
+        """The policy-facing shape tuple (what the split heuristic reads).
+
+        ``dtype_bytes`` follows the cache dtype (int8-quantized KV moves
+        half the bytes of bf16): the occupancy cost model and the
+        ``measured`` table's family key both read it, so a quantized
+        launch must not plan (or look up) as if it streamed bf16.
+        """
         lk = self.seqlen_k if self.window is None \
             else min(self.window, self.seqlen_k)
         return DecodeWorkload(self.batch, self.seqlen_q, lk,
                               self.num_heads_q, self.num_heads_kv,
-                              self.head_dim)
+                              self.head_dim,
+                              dtype_bytes=1 if self.quantized else 2)
 
     def bucketed(self, bucket: int = KV_BLOCK) -> "AttentionSpec":
         """Spec with L_K rounded up to its cache-length bucket."""

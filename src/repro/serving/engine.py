@@ -81,8 +81,10 @@ greedy decoding.
 from __future__ import annotations
 
 import functools
+import json
 import warnings
 from collections import deque
+from pathlib import Path
 from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence
 
 import jax
@@ -90,6 +92,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
+from repro.core.split_policy import get_policy
 from repro.models.registry import Model
 from repro.plan import LaunchPlan, PlanCacheStats, Planner, plan_scope
 from repro.serving.events import (
@@ -123,7 +126,8 @@ class ServingEngine:
                  policy: Optional[str] = None,
                  sampler: Optional[Sampler] = None,
                  prefill_mode: Optional[str] = None,
-                 cache_layout: Optional[str] = None):
+                 cache_layout: Optional[str] = None,
+                 tune_table: Optional[Any] = None):
         self.model = model
         self.cfg = model.cfg
         self.policy = policy or scfg.split_policy
@@ -131,6 +135,21 @@ class ServingEngine:
         self.B = batch_slots
         self.use_metadata = scfg.use_scheduler_metadata
         self.kv_dtype = scfg.kv_cache_dtype
+        self._stats_path = scfg.stats_path
+
+        # measured policy (repro.tune): resolve the SplitTable once —
+        # an explicit object wins over the config's path
+        self.tune_table = tune_table
+        if self.tune_table is None and scfg.tune_table_path:
+            from repro.tune import SplitTable
+            self.tune_table = SplitTable.load(scfg.tune_table_path)
+        if getattr(get_policy(self.policy), "needs_table", False) \
+                and not self.use_metadata:
+            raise ValueError(
+                f"split_policy={self.policy!r} rides the metadata-enabled "
+                "plan path (the SplitTable is consulted when plans "
+                "freeze, never at trace time); set "
+                "use_scheduler_metadata=True or an analytic policy")
         # CategoricalSampler by default so per-request SamplingParams
         # are always honored; it pays vocab sorts inside every step even
         # for all-greedy traffic, so cost-sensitive greedy-only callers
@@ -190,7 +209,9 @@ class ServingEngine:
             bucket_width=scfg.seqlen_bucket,
             prefill_bucket=scfg.prefill_bucket,
             plan_capacity=scfg.plan_cache_capacity,
-            cache_layout=layout)
+            cache_layout=layout,
+            kv_dtype=self.kv_dtype,
+            table=self.tune_table)
 
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
@@ -449,7 +470,9 @@ class ServingEngine:
         """Run to completion; returns every not-yet-drained submitted
         request's :class:`Completion`, sorted by request_id.  Drained
         handles are released — a long-lived engine holds state only for
-        in-flight and not-yet-drained requests."""
+        in-flight and not-yet-drained requests.  With
+        ``ServeConfig.stats_path`` set, the plan-cache counters are
+        snapshotted to that path as JSON (:meth:`PlanCacheStats.to_json`)."""
         while self.sched.has_work():
             self.step()
         done = []
@@ -458,7 +481,20 @@ class ServingEngine:
             self._queues.pop(h, None)
         self._undrained = []
         done.sort(key=lambda c: c.request_id)
+        if self._stats_path:
+            self.dump_stats(self._stats_path)
         return done
+
+    def dump_stats(self, path: str) -> None:
+        """Write the PlanCacheStats JSON snapshot (plus the measured
+        table's identity when one is loaded)."""
+        snap = self.stats.to_json()
+        snap["policy"] = self.policy
+        if self.tune_table is not None:
+            snap["table_version"] = self.tune_table.version
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
 
     # --- internals ----------------------------------------------------------
 
@@ -643,11 +679,13 @@ class DecodeEngine:
 
     def __init__(self, model: Model, scfg: ServeConfig, *,
                  max_len: int = 256, batch_slots: int = 4,
-                 policy: Optional[str] = None):
+                 policy: Optional[str] = None,
+                 tune_table: Optional[Any] = None):
         self.engine = ServingEngine(model, scfg, max_len=max_len,
                                     batch_slots=batch_slots, policy=policy,
                                     prefill_mode="loop",
-                                    sampler=GreedySampler())
+                                    sampler=GreedySampler(),
+                                    tune_table=tune_table)
         self.model = model
         self.cfg = model.cfg
         self.policy = self.engine.policy

@@ -83,16 +83,24 @@ class Scheduler:
                  bucket_width: int = 128,
                  prefill_bucket: Optional[int] = None,
                  plan_capacity: Optional[int] = None,
-                 cache_layout: str = "dense"):
+                 cache_layout: str = "dense",
+                 kv_dtype: str = "bfloat16",
+                 table: Optional[Any] = None):
         self.cfg = cfg
         self.B = batch_slots
         self.max_len = max_len
         self.bucket_width = bucket_width
         self.prefill_bucket_width = prefill_bucket or bucket_width
         self.cache_layout = cache_layout
+        self.kv_quantized = kv_dtype == "int8"
         self.planner = Planner(policy=policy,
-                               num_splits_override=num_splits_override)
+                               num_splits_override=num_splits_override,
+                               table=table)
         self.plans: PlanCache = PlanCache(plan_capacity)
+        if table is not None:
+            # measured-policy lookups/fallbacks land in the SAME stats
+            # object as plan-cache hits/misses (one observability surface)
+            table.attach_stats(self.plans.stats)
         self.slots: List[Optional[SlotState]] = [None] * batch_slots
         self.pending: Deque[SlotState] = deque()
 
@@ -182,6 +190,7 @@ class Scheduler:
         return AttentionSpec.decode(self.B, bucket, cfg.num_heads,
                                     self._kv_heads(),
                                     cfg.resolved_head_dim,
+                                    quantized=self.kv_quantized,
                                     layout=self.cache_layout)
 
     def decode_plan(self, t_max: int) -> LaunchPlan:

@@ -1,0 +1,38 @@
+"""``repro.tune`` — the measured-autotuning subsystem (Spec -> Calibrator
+-> Table).
+
+The fourth first-class subsystem, closing the paper §4.1 loop the
+analytic policies approximate: **measure** split candidates on the
+actual backend, **decide** once (argmin per grid cell), **serve** the
+frozen decisions through the Planner — the same spec -> resolver ->
+artifact design as ``repro.plan`` and ``repro.cache``:
+
+- :class:`TuneSpec`    — declarative workload grid (L_K buckets x head
+  shapes x batch x impl x dtype), candidate split set, timing budget.
+- :class:`Calibrator`  — resolves a spec by timing jitted
+  ``ops.decode_attention`` launches per candidate split (median of
+  repeats, warmup discard, seeded inputs), degrading gracefully to the
+  analytic cost model where wall-clock timing is meaningless (CI/CPU).
+- :class:`SplitTable`  — the versioned JSON artifact (schema + backend
+  fingerprint + per-cell argmin splits and latency curves), persisted
+  under ``experiments/tune/`` with load/save/merge/validate.
+
+The table plugs into planning as the ``measured`` policy backend
+(registered in ``repro.core.split_policy``): construct
+``Planner(policy="measured", table=SplitTable.load(path))``, or serve
+with ``ServeConfig(split_policy="measured", tune_table_path=...)`` /
+``serve --tune-table``.  Uncovered shapes fall back to ``paper``
+explicitly and are counted (``PlanCacheStats.measured_fallbacks``).
+Calibrate with ``python -m repro.launch.tune``; the committed
+``experiments/tune/reference_reduced.json`` covers the reduced-config
+serving shapes so CI is deterministic (``make tune-golden``).
+"""
+from repro.tune.calibrator import Calibrator  # noqa: F401
+from repro.tune.spec import DTYPE_BYTES, REFERENCE_SPEC, TuneSpec  # noqa: F401
+from repro.tune.table import (  # noqa: F401
+    REFERENCE_TABLE_PATH,
+    SCHEMA_VERSION,
+    SplitTable,
+    TABLE_DIR,
+    family_key,
+)

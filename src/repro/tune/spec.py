@@ -1,0 +1,132 @@
+"""TuneSpec: the declarative input to the calibrator.
+
+A tune spec answers "WHAT do we measure" — the workload grid (L_K
+buckets x head shapes x batch x impl x dtype), the candidate split set,
+and the timing budget — and nothing about HOW the timing runs (jit,
+warmup discard, wall-clock vs modeled): that is the
+:class:`~repro.tune.Calibrator`'s business, exactly mirroring the
+``AttentionSpec -> Planner`` and ``CacheSpec -> CacheManager`` splits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+from repro.core.split_policy import (
+    DEFAULT_NUM_CORES,
+    KV_BLOCK,
+    MAX_SPLITS,
+    DecodeWorkload,
+)
+
+# bytes per cache element, by calibration dtype name
+DTYPE_BYTES = {"bfloat16": 2, "float32": 4, "int8": 1}
+
+
+@dataclass(frozen=True)
+class TuneSpec:
+    """One calibration run, declaratively.
+
+    The default grid is the **reference grid**: the reduced-config
+    serving shapes every test/CI engine actually plans (H_Q=4 MQA at
+    head_dim 8/16, batch = the engine's ``batch_slots``) plus the
+    paper's full-size low-head-count rows (Table 1's H_KV ∈ {1, 2, 4}
+    at head_dim 128).  ``launch/tune.py --reference`` calibrates exactly
+    this spec into the committed reference table.
+    """
+    # L_K grid: multiples of KV_BLOCK (the decision is lossless within a
+    # block — same invariant the serving engine's buckets rely on)
+    lk_buckets: Tuple[int, ...] = (128, 256, 384, 512, 640, 1024, 4096)
+    batches: Tuple[int, ...] = (1, 2, 4, 8)
+    # (num_heads_q, num_heads_kv, head_dim)
+    head_shapes: Tuple[Tuple[int, int, int], ...] = (
+        (4, 1, 8), (4, 1, 16), (4, 1, 32),   # reduced-config engine shapes
+        (64, 1, 128), (16, 2, 128), (32, 4, 128),   # paper Table 1 rows
+    )
+    impls: Tuple[str, ...] = ("xla",)
+    dtypes: Tuple[str, ...] = ("bfloat16",)
+    # explicit candidate split counts; None = every feasible split for
+    # the workload (1..min(nblk, num_cores), skipping counts that do not
+    # refine the partitioning — the efficiency loop's own skip rule)
+    candidates: Optional[Tuple[int, ...]] = None
+    num_cores: int = DEFAULT_NUM_CORES
+    # timing budget: per-candidate repeats with warmup discard, plus an
+    # optional global wall-clock cap — once exceeded, remaining cells
+    # degrade to the analytic cost model (recorded per entry)
+    repeats: int = 5
+    warmup: int = 2
+    budget_s: Optional[float] = None
+
+    def __post_init__(self):
+        for lk in self.lk_buckets:
+            if lk % KV_BLOCK:
+                raise ValueError(
+                    f"lk_buckets must be multiples of KV_BLOCK "
+                    f"({KV_BLOCK}); got {lk}")
+        for d in self.dtypes:
+            if d not in DTYPE_BYTES:
+                raise ValueError(f"unknown dtype {d!r}; "
+                                 f"known: {sorted(DTYPE_BYTES)}")
+        if self.repeats < 1 or self.warmup < 0:
+            raise ValueError("repeats must be >= 1 and warmup >= 0")
+
+    # --- grid enumeration ---------------------------------------------------
+
+    def workloads(self) -> Iterator[Tuple[DecodeWorkload, str]]:
+        """Every (workload, impl) cell of the grid, in deterministic
+        order (the calibrator's per-cell seeds index into this order)."""
+        for impl in self.impls:
+            for dtype in self.dtypes:
+                for hq, hkv, hd in self.head_shapes:
+                    for b in self.batches:
+                        for lk in self.lk_buckets:
+                            yield DecodeWorkload(
+                                b, 1, lk, hq, hkv, hd,
+                                dtype_bytes=DTYPE_BYTES[dtype]), impl
+
+    def candidate_splits(self, w: DecodeWorkload) -> Tuple[int, ...]:
+        """The feasible candidate set for one workload (always
+        includes 1, deduped, clamped to the block count)."""
+        cap = min(w.num_n_blocks, self.num_cores, MAX_SPLITS)
+        if self.candidates is not None:
+            cands = sorted({max(1, min(s, w.num_n_blocks))
+                            for s in self.candidates})
+            return tuple(cands) if 1 in cands else (1, *cands)
+        out = [1]
+        for s in range(2, cap + 1):
+            # identical per-split block count to s-1 = same partitioning,
+            # pure combine overhead — never a distinct candidate
+            if math.ceil(w.num_n_blocks / s) == \
+                    math.ceil(w.num_n_blocks / (s - 1)):
+                continue
+            out.append(s)
+        return tuple(out)
+
+    def grid_size(self) -> int:
+        return sum(1 for _ in self.workloads())
+
+    def describe(self) -> dict:
+        """JSON-safe summary persisted into the table artifact."""
+        return {
+            "lk_buckets": list(self.lk_buckets),
+            "batches": list(self.batches),
+            "head_shapes": [list(h) for h in self.head_shapes],
+            "impls": list(self.impls),
+            "dtypes": list(self.dtypes),
+            "candidates": (None if self.candidates is None
+                           else list(self.candidates)),
+            "num_cores": self.num_cores,
+            "repeats": self.repeats,
+            "warmup": self.warmup,
+            "budget_s": self.budget_s,
+        }
+
+    def replace(self, **kw) -> "TuneSpec":
+        return dataclasses.replace(self, **kw)
+
+
+# The spec the committed reference table is calibrated from (modeled
+# mode — deterministic, CI-reproducible; see launch/tune.py --reference).
+REFERENCE_SPEC = TuneSpec()

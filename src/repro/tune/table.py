@@ -1,0 +1,268 @@
+"""SplitTable: the frozen, persisted output of a calibration run.
+
+A table is a versioned JSON artifact (schema + backend fingerprint +
+per-cell ``argmin`` split and the full candidate latency curve) that the
+:class:`~repro.plan.Planner` consumes as the ``measured`` policy
+backend.  Persisted under ``experiments/tune/`` — the committed
+``reference_reduced.json`` is regenerated deterministically by
+``python -m repro.launch.tune --reference`` so CI replays it bit-exact
+(``make tune-golden``).
+
+Lookup semantics
+----------------
+A decode workload resolves in two stages:
+
+1. **family** — exact match on (batch, H_Q, H_KV, head_dim, impl,
+   dtype_bytes).  The split decision's tile math depends on all of
+   these, so interpolating across them would be a guess, not a
+   measurement: an uncovered family **falls back to the analytic
+   ``paper`` policy explicitly**, and the fallback is counted
+   (:meth:`SplitTable.attach_stats` / the table's own counters).
+2. **nearest L_K bucket** within the covered family — L_K only shifts
+   the knee of the U-curve, so the nearest measured bucket's argmin
+   (clamped to the live workload's block count, so it is always
+   feasible) beats re-deriving from the analytic model.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.split_policy import (
+    DEFAULT_NUM_CORES,
+    KV_BLOCK,
+    DecodeWorkload,
+    choose_num_splits,
+)
+
+SCHEMA_VERSION = 1
+
+# repo-root experiments/tune/ — the artifact home (mirrors
+# benchmarks/common.OUT_DIR's repo-root anchoring)
+TABLE_DIR = Path(__file__).resolve().parents[3] / "experiments" / "tune"
+REFERENCE_TABLE_PATH = TABLE_DIR / "reference_reduced.json"
+
+# (batch, num_heads_q, num_heads_kv, head_dim, impl, dtype_bytes)
+FamilyKey = Tuple[int, int, int, int, str, int]
+
+_ENTRY_FIELDS = ("batch", "num_heads_q", "num_heads_kv", "head_dim",
+                 "impl", "dtype_bytes", "lk_bucket", "best_split",
+                 "source", "latencies_us")
+
+
+def _norm_impl(impl: Optional[str]) -> str:
+    """None means "the caller's default impl", which is xla everywhere
+    a measured plan is consumed (the engines' planners pin impl=None)."""
+    return impl or "xla"
+
+
+def family_key(w: DecodeWorkload, impl: Optional[str] = None) -> FamilyKey:
+    return (w.batch, w.num_heads_q, w.num_heads_kv, w.head_dim,
+            _norm_impl(impl), w.dtype_bytes)
+
+
+class SplitTable:
+    """Calibrated per-shape split decisions, with load/save/merge/validate.
+
+    ``entries`` is a list of per-cell dicts (see ``_ENTRY_FIELDS``);
+    ``fingerprint`` records where the numbers came from (backend, jax
+    version, timing mode, num_cores).  ``version`` is content-derived —
+    ``{schema}.{sha256(entries)[:12]}`` — so two tables agree on version
+    iff they agree on every decision and latency.
+    """
+
+    def __init__(self, entries: List[Dict[str, Any]],
+                 fingerprint: Dict[str, Any],
+                 spec: Optional[Dict[str, Any]] = None,
+                 schema: int = SCHEMA_VERSION):
+        if schema != SCHEMA_VERSION:
+            raise ValueError(
+                f"SplitTable schema mismatch: file has {schema}, this "
+                f"code reads {SCHEMA_VERSION} — regenerate the table "
+                "with `python -m repro.launch.tune`")
+        self.entries = entries
+        self.fingerprint = dict(fingerprint)
+        self.spec = dict(spec) if spec else None
+        self.schema = schema
+        # observability: standalone counters, plus an optional attached
+        # PlanCacheStats (the serving engine attaches its plan cache's)
+        self.lookups = 0
+        self.fallbacks = 0
+        self.fallback_trace: List[tuple] = []
+        self._stats = None
+        self._version: Optional[str] = None      # lazy content hash
+        self._families: Dict[FamilyKey, Dict[int, Dict[str, Any]]] = {}
+        for e in entries:
+            fam = (e["batch"], e["num_heads_q"], e["num_heads_kv"],
+                   e["head_dim"], e["impl"], e["dtype_bytes"])
+            self._families.setdefault(fam, {})[e["lk_bucket"]] = e
+
+    # --- identity -----------------------------------------------------------
+
+    @property
+    def version(self) -> str:
+        # computed once: entries are frozen after construction by
+        # convention (merge returns a NEW table, to_json deep-copies),
+        # and the Planner reads this on every measured plan freeze
+        if self._version is None:
+            canon = json.dumps(self.entries, sort_keys=True,
+                               separators=(",", ":"))
+            digest = hashlib.sha256(canon.encode()).hexdigest()[:12]
+            self._version = f"{self.schema}.{digest}"
+        return self._version
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # --- lookup (the measured policy's decision path) -----------------------
+
+    def covers(self, w: DecodeWorkload, impl: Optional[str] = None) -> bool:
+        return family_key(w, impl) in self._families
+
+    def choose(self, w: DecodeWorkload, impl: Optional[str] = None,
+               num_cores: Optional[int] = None) -> Tuple[int, bool]:
+        """(num_splits, tuned) for one workload.
+
+        ``tuned=True``: the decision came from a measured cell (nearest
+        L_K bucket in the exact family, clamped feasible).  ``tuned=
+        False``: family uncovered — the analytic fallback policy
+        decided, and the fallback was counted.
+        """
+        fam = family_key(w, impl)
+        buckets = self._families.get(fam)
+        self.lookups += 1
+        if self._stats is not None:
+            self._stats.record_measured(fam + (w.seqlen_k,),
+                                        fallback=buckets is None)
+        if buckets is None:
+            self.fallbacks += 1
+            self.fallback_trace.append(fam + (w.seqlen_k,))
+            if len(self.fallback_trace) > 8192:
+                del self.fallback_trace[:-4096]
+            cores = num_cores if num_cores is not None else \
+                self.fingerprint.get("num_cores", DEFAULT_NUM_CORES)
+            return choose_num_splits(w, policy=self.fallback_policy,
+                                     num_cores=cores), False
+        # nearest measured L_K bucket (ties toward the smaller bucket:
+        # under-splitting is the conservative error)
+        lk = max(1, w.seqlen_k)
+        nearest = min(buckets, key=lambda b: (abs(b - lk), b))
+        s = buckets[nearest]["best_split"]
+        return max(1, min(int(s), w.num_n_blocks)), True
+
+    @property
+    def fallback_policy(self) -> str:
+        return self.fingerprint.get("fallback", "paper")
+
+    def attach_stats(self, stats) -> None:
+        """Route lookup/fallback counts into a PlanCacheStats (the
+        serving engine attaches its plan cache's stats object)."""
+        self._stats = stats
+
+    # --- persistence --------------------------------------------------------
+
+    def to_json(self) -> Dict[str, Any]:
+        import copy
+        # deep-copied: callers may edit the snapshot (tests tamper with
+        # it deliberately) without corrupting the live table
+        d: Dict[str, Any] = {
+            "schema": self.schema,
+            "version": self.version,
+            "fingerprint": copy.deepcopy(self.fingerprint),
+            "entries": copy.deepcopy(self.entries),
+        }
+        if self.spec is not None:
+            d["spec"] = copy.deepcopy(self.spec)
+        return d
+
+    def save(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1,
+                                   sort_keys=True) + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "SplitTable":
+        path = Path(path)
+        d = json.loads(path.read_text())
+        table = cls(d["entries"], d.get("fingerprint", {}),
+                    spec=d.get("spec"),
+                    schema=d.get("schema", -1))
+        stored = d.get("version")
+        if stored is not None and stored != table.version:
+            raise ValueError(
+                f"SplitTable version mismatch in {path}: header says "
+                f"{stored}, entries hash to {table.version} — the file "
+                "was hand-edited or truncated; recalibrate it")
+        return table
+
+    def merge(self, other: "SplitTable") -> "SplitTable":
+        """New table = self's cells overridden/extended by ``other``'s
+        (recalibrating a sub-grid refreshes only those cells).  Both
+        sides must share the schema; fingerprints are recorded
+        side-by-side so a mixed-provenance table stays auditable."""
+        if other.schema != self.schema:
+            raise ValueError(
+                f"cannot merge SplitTables across schemas "
+                f"({self.schema} vs {other.schema})")
+        merged: Dict[tuple, Dict[str, Any]] = {}
+        for e in self.entries + other.entries:   # later wins
+            key = (e["batch"], e["num_heads_q"], e["num_heads_kv"],
+                   e["head_dim"], e["impl"], e["dtype_bytes"],
+                   e["lk_bucket"])
+            merged[key] = e
+        fp = dict(self.fingerprint)
+        if other.fingerprint != self.fingerprint:
+            fp["merged_from"] = [self.fingerprint, other.fingerprint]
+        return SplitTable([merged[k] for k in sorted(merged)], fp,
+                          spec=self.spec, schema=self.schema)
+
+    # --- validation (the tune-golden gate's first half) ---------------------
+
+    def validate(self) -> None:
+        """Raise ValueError on a structurally broken table: missing
+        fields, off-grid L_K, infeasible or un-measured best splits."""
+        if not self.entries:
+            raise ValueError("empty SplitTable")
+        seen = set()
+        for e in self.entries:
+            missing = [f for f in _ENTRY_FIELDS if f not in e]
+            if missing:
+                raise ValueError(f"entry missing fields {missing}: {e}")
+            if e["lk_bucket"] % KV_BLOCK:
+                raise ValueError(
+                    f"lk_bucket {e['lk_bucket']} is not a multiple of "
+                    f"KV_BLOCK ({KV_BLOCK})")
+            nblk = -(-e["lk_bucket"] // KV_BLOCK)
+            if not 1 <= e["best_split"] <= nblk:
+                raise ValueError(
+                    f"best_split {e['best_split']} infeasible for "
+                    f"lk_bucket {e['lk_bucket']} ({nblk} blocks)")
+            if str(e["best_split"]) not in e["latencies_us"]:
+                raise ValueError(
+                    f"best_split {e['best_split']} has no measured "
+                    f"latency in {sorted(e['latencies_us'])}")
+            best = e["latencies_us"][str(e["best_split"])]
+            if any(t < best for t in e["latencies_us"].values()):
+                raise ValueError(
+                    f"best_split {e['best_split']} is not the argmin of "
+                    f"its latency curve: {e['latencies_us']}")
+            key = (e["batch"], e["num_heads_q"], e["num_heads_kv"],
+                   e["head_dim"], e["impl"], e["dtype_bytes"],
+                   e["lk_bucket"])
+            if key in seen:
+                raise ValueError(f"duplicate cell {key}")
+            seen.add(key)
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "version": self.version,
+            "cells": len(self.entries),
+            "families": len(self._families),
+            "fingerprint": self.fingerprint,
+            "lookups": self.lookups,
+            "fallbacks": self.fallbacks,
+        }

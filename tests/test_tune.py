@@ -1,0 +1,445 @@
+"""repro.tune subsystem: Spec -> Calibrator -> Table, measured policy.
+
+The load-bearing guarantees:
+
+- the committed reference table is schema-valid and replays bit-exact
+  through ``Planner(policy="measured")`` (the ``make tune-golden`` gate,
+  mirroring ``plan-golden``),
+- SplitTable round-trips, merges, and rejects schema/version mismatches,
+- the Calibrator is deterministic under a fixed seed (same grid, same
+  decisions, same content-derived version),
+- nearest-bucket lookup always yields a feasible split and falls back
+  (counted) exactly when the grid does not cover the shape family,
+- measured plans are bit-stable across PlanCache eviction and
+  re-specialization,
+- the serving engine on ``split_policy="measured"`` keeps the policy out
+  of traced code (``policy_eval_count`` flat) and its greedy tokens
+  bit-identical to the analytic policies'.
+"""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from _hyp_compat import given, settings, strategies as st
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.core.split_policy import (
+    DecodeWorkload,
+    analytic_policies,
+    available_policies,
+    choose_num_splits,
+    get_policy,
+)
+from repro.kernels import ops
+from repro.models import build_model
+from repro.plan import AttentionSpec, PlanCache, Planner
+from repro.serving.engine import DecodeEngine, Request, ServingEngine
+from repro.tune import (
+    REFERENCE_SPEC,
+    REFERENCE_TABLE_PATH,
+    Calibrator,
+    SplitTable,
+    TuneSpec,
+)
+
+SMALL_SPEC = TuneSpec(lk_buckets=(128, 256, 512), batches=(1, 2),
+                      head_shapes=((4, 1, 8), (64, 1, 128)))
+
+
+@pytest.fixture(scope="module")
+def small_table() -> SplitTable:
+    return Calibrator(SMALL_SPEC, mode="modeled", seed=0).calibrate()
+
+
+@pytest.fixture(scope="module")
+def reference_table() -> SplitTable:
+    return SplitTable.load(REFERENCE_TABLE_PATH)
+
+
+# ---------------------------------------------------------------------------
+# tune-golden gate: the committed reference table
+# ---------------------------------------------------------------------------
+
+
+def test_reference_table_schema_valid(reference_table):
+    reference_table.validate()
+    fp = reference_table.fingerprint
+    assert fp["mode"] == "modeled" and fp["fallback"] == "paper", \
+        "reference table must be the deterministic modeled calibration"
+    assert len(reference_table) == REFERENCE_SPEC.grid_size(), \
+        "reference table drifted from REFERENCE_SPEC's grid"
+
+
+def test_reference_table_replays_bit_exact(reference_table):
+    """Every committed cell, through the public Planner — regenerate
+    intentionally with `python -m repro.launch.tune --reference`."""
+    planner = Planner(policy="measured", table=reference_table)
+    ops.reset_policy_eval_count()
+    for e in reference_table.entries:
+        spec = AttentionSpec.decode(
+            e["batch"], e["lk_bucket"], e["num_heads_q"],
+            e["num_heads_kv"], e["head_dim"])
+        plan = planner.plan(spec)
+        assert plan.num_splits == e["best_split"], e
+        assert plan.tuned and plan.table_version == reference_table.version
+    assert ops.policy_eval_count() == 0     # planning is not dispatch
+    assert reference_table.fallbacks == 0   # the grid covers itself
+
+
+def test_reference_table_is_regenerated_deterministically(reference_table):
+    """`--reference` recalibrates to the exact committed artifact."""
+    fresh = Calibrator(REFERENCE_SPEC, mode="modeled", seed=0).calibrate()
+    assert fresh.version == reference_table.version
+
+
+# ---------------------------------------------------------------------------
+# SplitTable: round-trip / merge / mismatch rejection
+# ---------------------------------------------------------------------------
+
+
+def test_table_round_trip(tmp_path, small_table):
+    p = small_table.save(tmp_path / "t.json")
+    loaded = SplitTable.load(p)
+    assert loaded.version == small_table.version
+    assert loaded.entries == small_table.entries
+    assert loaded.fingerprint == small_table.fingerprint
+
+
+def test_table_rejects_schema_mismatch(tmp_path, small_table):
+    d = small_table.to_json()
+    d["schema"] = 99
+    del d["version"]
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="schema mismatch"):
+        SplitTable.load(p)
+
+
+def test_table_rejects_tampered_entries(tmp_path, small_table):
+    d = small_table.to_json()
+    d["entries"][0]["best_split"] = 1 + d["entries"][0]["best_split"] % 2
+    p = tmp_path / "tampered.json"
+    p.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="version mismatch"):
+        SplitTable.load(p)
+
+
+def test_table_merge_overrides_and_extends(small_table):
+    sub = TuneSpec(lk_buckets=(512, 640), batches=(1,),
+                   head_shapes=((64, 1, 128),), candidates=(1,))
+    recal = Calibrator(sub, mode="modeled", seed=1).calibrate()
+    merged = small_table.merge(recal)
+    merged.validate()
+    # 512 cell overridden (candidates pinned to 1), 640 cell added
+    w512 = DecodeWorkload(1, 1, 512, 64, 1, 128)
+    assert merged.choose(w512) == (1, True)
+    assert len(merged) == len(small_table) + 1
+    assert small_table.choose(w512)[0] != 1    # original decision intact
+    other = SplitTable(recal.entries, recal.fingerprint)
+    other.schema = 2                            # simulate newer artifact
+    with pytest.raises(ValueError, match="merge"):
+        small_table.merge(other)
+
+
+def test_table_validate_catches_infeasible_and_non_argmin(small_table):
+    bad = [dict(e) for e in small_table.entries]
+    bad[0] = dict(bad[0], best_split=99)
+    with pytest.raises(ValueError, match="infeasible"):
+        SplitTable(bad, small_table.fingerprint).validate()
+    worst = [dict(e) for e in small_table.entries]
+    e = dict(worst[-1])
+    lats = dict(e["latencies_us"])
+    assert len(lats) > 1
+    e["best_split"] = int(max(lats, key=lambda k: lats[k]))
+    e["latencies_us"] = lats
+    worst[-1] = e
+    with pytest.raises(ValueError, match="argmin"):
+        SplitTable(worst, small_table.fingerprint).validate()
+
+
+# ---------------------------------------------------------------------------
+# Calibrator: determinism, wallclock path, budget degradation
+# ---------------------------------------------------------------------------
+
+
+def test_calibrator_deterministic_under_seed(small_table):
+    again = Calibrator(SMALL_SPEC, mode="modeled", seed=0).calibrate()
+    assert again.version == small_table.version
+    assert again.entries == small_table.entries
+
+
+def test_calibrator_wallclock_times_real_launches():
+    """The wallclock mode actually jits and times decode_attention
+    (tiny 1-cell grid); latencies are positive and the argmin is one of
+    the candidates."""
+    spec = TuneSpec(lk_buckets=(256,), batches=(1,),
+                    head_shapes=((4, 1, 8),), repeats=2, warmup=1)
+    table = Calibrator(spec, mode="wallclock", seed=0).calibrate()
+    (e,) = table.entries
+    assert e["source"] == "measured"
+    assert set(e["latencies_us"]) == {"1", "2"}
+    assert all(t > 0 for t in e["latencies_us"].values())
+    table.validate()
+
+
+def test_calibrator_budget_degrades_to_model():
+    spec = TuneSpec(lk_buckets=(128, 256), batches=(1,),
+                    head_shapes=((4, 1, 8),), budget_s=0.0)
+    table = Calibrator(spec, mode="wallclock", seed=0).calibrate()
+    assert all(e["source"] == "modeled" for e in table.entries)
+    assert table.fingerprint["sources"] == "mixed"
+
+
+# ---------------------------------------------------------------------------
+# Lookup property: feasible when covered, counted fallback when not
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(batch=st.integers(1, 16),
+       lk=st.integers(1, 65536),
+       heads=st.sampled_from([(4, 1, 8), (4, 1, 16), (64, 1, 128),
+                              (16, 2, 128), (32, 4, 128), (5, 1, 8),
+                              (4, 1, 64), (8, 8, 128)]))
+def test_lookup_feasible_or_counted_fallback(reference_table, batch, lk,
+                                             heads):
+    hq, hkv, hd = heads
+    w = DecodeWorkload(batch, 1, lk, hq, hkv, hd)
+    before = reference_table.fallbacks
+    s, tuned = reference_table.choose(w)
+    assert 1 <= s <= w.num_n_blocks          # ALWAYS feasible (clamped)
+    assert tuned == reference_table.covers(w), \
+        "tuned iff the grid covers the shape family"
+    if not tuned:                            # fallback: analytic paper
+        assert reference_table.fallbacks == before + 1
+        assert s == choose_num_splits(
+            w, policy="paper",
+            num_cores=reference_table.fingerprint["num_cores"])
+    else:
+        assert reference_table.fallbacks == before
+
+
+def test_nearest_bucket_picks_closest_lk(reference_table):
+    fam = {e["lk_bucket"]: e for e in reference_table.entries
+           if (e["batch"], e["num_heads_q"], e["num_heads_kv"],
+               e["head_dim"]) == (1, 64, 1, 128)}
+    assert {128, 256, 384, 512, 640, 1024, 4096} <= set(fam)
+    # 600 sits between the 512 and 640 buckets; 640 is nearer
+    w = DecodeWorkload(1, 1, 600, 64, 1, 128)
+    s, tuned = reference_table.choose(w)
+    assert tuned
+    assert s == min(fam[640]["best_split"], w.num_n_blocks)
+    # far past the grid: the largest measured bucket decides (clamped)
+    w_far = DecodeWorkload(1, 1, 60000, 64, 1, 128)
+    s_far, tuned = reference_table.choose(w_far)
+    assert tuned and s_far == min(fam[4096]["best_split"],
+                                  w_far.num_n_blocks)
+
+
+# ---------------------------------------------------------------------------
+# Planner integration: provenance, ergonomics, eviction bit-stability
+# ---------------------------------------------------------------------------
+
+
+def test_measured_policy_is_registered_but_not_analytic():
+    assert "measured" in available_policies()
+    assert "measured" not in analytic_policies()
+    assert getattr(get_policy("measured"), "needs_table", False)
+
+
+def test_planner_requires_table_for_measured_and_lists_backends():
+    with pytest.raises(ValueError) as ei:
+        Planner(policy="measured")
+    assert "SplitTable" in str(ei.value) and "paper" in str(ei.value)
+    with pytest.raises(KeyError) as ei:
+        Planner(policy="nope")
+    for name in available_policies():
+        assert name in str(ei.value)
+
+
+def test_measured_plan_provenance(reference_table):
+    planner = Planner(policy="measured", table=reference_table)
+    covered = planner.plan(AttentionSpec.decode(1, 512, 64, 1, 128),
+                           bucket=512)
+    assert covered.tuned and covered.policy == "measured"
+    assert covered.table_version == reference_table.version
+    assert covered.describe()["tuned"] is True
+    uncovered = planner.plan(AttentionSpec.decode(3, 512, 8, 8, 128))
+    assert not uncovered.tuned and uncovered.policy == "measured"
+    assert uncovered.table_version == reference_table.version
+    # override bypasses the table entirely
+    forced = dataclasses.replace(planner, num_splits_override=2).plan(
+        AttentionSpec.decode(1, 512, 64, 1, 128))
+    assert forced.num_splits == 2 and not forced.tuned
+
+
+def test_measured_plans_bit_stable_across_eviction(reference_table):
+    """A re-specialized (evicted, re-built) measured plan must be the
+    same plan — the table is the single decision surface, so eviction
+    can never change a decision."""
+    planner = Planner(policy="measured", table=reference_table)
+    cache = PlanCache(capacity=1)
+
+    def build(bucket):
+        spec = AttentionSpec.decode(1, bucket, 64, 1, 128)
+        return lambda: planner.plan(spec, bucket=bucket)
+
+    first = cache.get_or_build(512, build(512))
+    cache.get_or_build(1024, build(1024))        # evicts 512
+    assert 512 not in cache
+    rebuilt = cache.get_or_build(512, build(512))
+    assert rebuilt == first                      # bit-stable re-spec
+    assert cache.stats.misses == 3
+
+
+# ---------------------------------------------------------------------------
+# Serving engine end-to-end on split_policy="measured"
+# ---------------------------------------------------------------------------
+
+
+def _engine(model, policy, table=None, stats_path=None, **kw):
+    scfg = ServeConfig(model=model.cfg, split_policy=policy,
+                       stats_path=stats_path)
+    eng = ServingEngine(model, scfg, max_len=256, batch_slots=2,
+                        tune_table=table, **kw)
+    return eng
+
+
+def test_engine_measured_policy_end_to_end(reference_table, tmp_path):
+    cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    reqs = [Request(i, [1 + i, 2, 3], max_new_tokens=6) for i in range(3)]
+
+    toks = {}
+    for policy in ("paper", "measured"):
+        table = reference_table if policy == "measured" else None
+        stats_path = tmp_path / f"{policy}.json"
+        eng = _engine(model, policy, table, stats_path=str(stats_path))
+        eng.load(params)
+        ops.reset_policy_eval_count()
+        for r in reqs:
+            eng.submit(r)
+        outs = eng.drain()
+        # the policy changes the schedule, never the math — and never
+        # runs inside traced code on the metadata path
+        assert ops.policy_eval_count() == 0, policy
+        toks[policy] = [c.tokens for c in outs]
+        if policy == "measured":
+            st = eng.stats
+            assert st.measured_lookups >= 1
+            assert st.measured_fallbacks == 0, \
+                "reference grid must cover the reduced engine's shapes"
+            # every decode plan came from the table, with provenance
+            for bucket, entry in eng.sched.plans.items():
+                if isinstance(bucket, int):
+                    assert entry.plan.tuned
+                    assert entry.plan.table_version == \
+                        reference_table.version
+                    w = DecodeWorkload(2, 1, bucket, 4, 1, 8)
+                    assert entry.plan.num_splits == \
+                        reference_table.choose(w)[0]
+        snap = json.loads(stats_path.read_text())
+        assert snap["misses"] == eng.stats.misses
+        assert snap["policy"] == policy
+    assert toks["measured"] == toks["paper"]
+
+
+def test_engine_measured_rejects_heuristic_path(reference_table):
+    cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="metadata"):
+        ServingEngine(model,
+                      ServeConfig(model=cfg, split_policy="measured",
+                                  use_scheduler_metadata=False),
+                      tune_table=reference_table)
+
+
+def test_engine_loads_table_from_config_path(tmp_path, small_table):
+    p = small_table.save(tmp_path / "t.json")
+    cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
+    model = build_model(cfg)
+    eng = DecodeEngine(model, ServeConfig(model=cfg,
+                                          split_policy="measured",
+                                          tune_table_path=str(p)))
+    assert eng.engine.tune_table.version == small_table.version
+    # (4,1,8) families are NOT in SMALL_SPEC -> decode plans fall back,
+    # and the fallback lands in the ENGINE's PlanCacheStats
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng.load(params)
+    eng.generate([Request(0, [1, 2], max_new_tokens=2)])
+    assert eng.stats.measured_lookups >= 1
+    assert eng.stats.measured_fallbacks == eng.stats.measured_lookups
+    # family key: (batch=the engine's 4 slots, Hq, Hkv, head_dim, ...)
+    assert eng.stats.measured_fallback_trace[0][:4] == (4, 4, 1, 8)
+
+
+def test_quantized_specs_key_the_int8_family(reference_table):
+    """An int8-KV launch must not look up (or mislabel) bf16 cells: the
+    spec's ``quantized`` flag reaches the workload's dtype_bytes, and
+    the bf16-only reference table falls back — counted — instead of
+    serving bf16-measured decisions with tuned provenance."""
+    from repro.plan import AttentionSpec
+    spec = AttentionSpec.decode(1, 512, 64, 1, 128, quantized=True)
+    assert spec.workload().dtype_bytes == 1
+    plan = Planner(policy="measured", table=reference_table).plan(spec)
+    assert not plan.tuned                      # no int8 family committed
+    # an int8-calibrated table DOES cover it (modeled: int8 cells never
+    # ride the plain wallclock harness — see Calibrator)
+    int8_spec = TuneSpec(lk_buckets=(512,), batches=(1,),
+                         head_shapes=((64, 1, 128),), dtypes=("int8",))
+    t8 = Calibrator(int8_spec, mode="wallclock", seed=0).calibrate()
+    assert all(e["source"] == "modeled" for e in t8.entries)
+    assert t8.fingerprint["sources"] == "mixed"
+    assert Planner(policy="measured", table=t8).plan(spec).tuned
+    # and the engine keys its lookups on the serve-config kv dtype
+    cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
+    model = build_model(cfg)
+    eng = ServingEngine(model, ServeConfig(model=cfg,
+                                           split_policy="measured",
+                                           kv_cache_dtype="int8"),
+                        tune_table=reference_table)
+    assert eng.sched.decode_spec(128).workload().dtype_bytes == 1
+
+
+def test_measured_impl_reaches_table_from_every_path():
+    """The impl family must be selectable through choose_num_splits /
+    mesh planning, not only Planner.plan (regression: mesh plans of a
+    pallas-calibrated table silently looked up the xla family)."""
+    spec = TuneSpec(lk_buckets=(512,), batches=(1,),
+                    head_shapes=((16, 4, 128),), impls=("pallas",))
+    t = Calibrator(spec, mode="modeled", seed=0).calibrate()
+    w = DecodeWorkload(1, 1, 512, 16, 4, 128)
+    assert t.covers(w, impl="pallas") and not t.covers(w)
+    s = choose_num_splits(w, policy="measured", table=t, impl="pallas")
+    assert (s, True) == t.choose(w, impl="pallas")
+    assert t.fallbacks == 0
+    # H_KV=4 divides the 4-axis -> the occupancy (not storage-forced)
+    # mesh path runs, and both its kernel plan and its mesh-splits
+    # decision must hit the pallas family
+    mesh_plan = Planner(policy="measured", table=t,
+                        impl="pallas").mesh_plan(
+        AttentionSpec.decode(1, 512, 16, 4, 128), axis_size=4)
+    assert t.fallbacks == 0, "mesh planning must hit the pallas family"
+    assert mesh_plan.tuned
+
+
+def test_stats_to_json_round_trips_counters(small_table):
+    from repro.plan import PlanCacheStats
+    st_obj = PlanCacheStats()
+    st_obj.hits = 2
+    st_obj.record_launch(128)
+    st_obj.record_launch(("prefill", 256))
+    st_obj.record_fallback(100, 512)
+    st_obj.record_measured((1, 4, 1, 8, "xla", 2, 128), fallback=True)
+    d = json.loads(json.dumps(st_obj.to_json()))
+    assert d["launches"] == {"128": 1, "prefill/256": 1}
+    assert d["fallback_trace"] == [[100, 512]]
+    assert d["measured_lookups"] == 1 and d["measured_fallbacks"] == 1
+    assert d["measured_fallback_trace"] == [[1, 4, 1, 8, "xla", 2, 128]]
+    st_obj.reset()
+    assert st_obj.measured_lookups == 0
+    assert st_obj.to_json()["measured_fallback_trace"] == []
