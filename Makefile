@@ -8,9 +8,10 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify verify-all bench golden plan-golden tune-golden \
-	serving-smoke cache-smoke tune-smoke
+	serving-smoke cache-smoke prefix-smoke tune-smoke
 
-verify: plan-golden tune-golden serving-smoke cache-smoke tune-smoke
+verify: plan-golden tune-golden serving-smoke cache-smoke prefix-smoke \
+	tune-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 # seconds-scale serving A/B: fused-prefill admission must stay O(1)
@@ -22,6 +23,13 @@ serving-smoke:
 # bit-exact while allocating/streaming fewer cache bytes (structural)
 cache-smoke:
 	$(PY) -m benchmarks.cache_ab --smoke
+
+# seconds-scale prefix-sharing A/B: share_prefix must match the
+# unshared engine's greedy tokens bit-exact while full-prefilling only
+# the leader (followers admit as suffix launches on adopted pages) and
+# allocating strictly fewer pages (structural counters + conservation)
+prefix-smoke:
+	$(PY) -m benchmarks.prefix_ab --smoke
 
 # seconds-scale tuning A/B: measured policy never slower than the
 # analytic policies on covered shapes, counted paper fallback elsewhere,

@@ -1,0 +1,186 @@
+"""Prefix-sharing A/B: ``share_prefix`` on vs off on the paged cache.
+
+Drives two :class:`~repro.serving.ServingEngine`\\ s that differ ONLY in
+``ServeConfig.share_prefix`` over the same traffic shape the knob exists
+for — N requests opening with one common "system prompt" (spanning
+several full pages), each followed by a short unique tail — and reports:
+
+- **TTFT** — submit -> first TOKEN, mean over the FOLLOWER requests
+  (the ones whose prompt prefix is already resident when they admit);
+  a warmup phase with a *different* system prompt pre-compiles every
+  launch shape first, so the timed phase measures launches, not jit;
+- **pages allocated** — free-list pops during the timed phase: sharing
+  must pay for the common prefix once, not once per request;
+- **prefill launches** — ``("prefill", bucket)`` vs
+  ``("sprefill", view_bucket, suffix_bucket)`` keys in the plan-cache
+  launch counters: the follower admissions must be SUFFIX launches, so
+  the full-prefill count for the shared pages is structurally zero.
+
+The *structural* columns are the reproducible claim, asserted below:
+
+- greedy tokens are bit-identical with sharing on vs off (adoption and
+  copy-on-write move bytes, never math);
+- the shared arm issues exactly ONE full prefill (the leader) and one
+  suffix prefill per follower; the unshared arm full-prefills all N;
+- the shared arm allocates strictly fewer pages than the unshared arm;
+- the split policy never runs inside traced code
+  (``ops.policy_eval_count() == 0``);
+- :meth:`CacheManager.check_conservation` holds after the run (refcount
+  drift, double-free, and trash-page misuse all trip it).
+
+``--smoke`` runs a seconds-scale variant wired into ``make verify``
+(``prefix-smoke``) and CI; the follower-TTFT speedup is asserted only in
+the full run (CPU-container wall clocks are too noisy at smoke scale).
+CSV lands in ``experiments/bench/`` (smoke: the gitignored
+``experiments/bench/smoke/``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.kernels import ops
+from repro.models import build_model
+from repro.serving import TOKEN, Request, ServingEngine
+
+from benchmarks.common import print_table, write_csv
+
+
+def _workload(smoke: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n_req = 3 if smoke else 6
+    system = rng.integers(1, 150, size=100).tolist()
+    warm_system = rng.integers(1, 150, size=100).tolist()
+    tails = [rng.integers(1, 150, size=4 + (3 * i) % 8).tolist()
+             for i in range(n_req)]
+    prompts = [system + t for t in tails]
+    warm = [warm_system + t for t in tails[:2]]
+    return prompts, warm, dict(max_len=256, slots=4, page=32,
+                               max_new=4 if smoke else 8)
+
+
+def _drive(eng, prompts, max_new):
+    """Serve ``prompts``, returning (tokens per request, TTFT seconds
+    per request, wall seconds)."""
+    submit_t, first_t = {}, {}
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=max_new))
+        submit_t[i] = time.monotonic()
+    t0 = time.monotonic()
+    while eng.has_work():
+        events = eng.step()
+        now = time.monotonic()
+        for ev in events:
+            if ev.kind == TOKEN and ev.index == 0:
+                first_t[ev.request_id] = now
+    wall = time.monotonic() - t0
+    outs = eng.drain()
+    toks = {c.request_id: c.tokens for c in outs}
+    ttft = {r: first_t[r] - submit_t[r] for r in first_t}
+    return toks, ttft, wall
+
+
+def _launches(stats, kind):
+    return sum(v for k, v in stats.launches.items()
+               if isinstance(k, tuple) and k[0] == kind)
+
+
+def run_cell(model, params, share: bool, prompts, warm, knobs):
+    eng = ServingEngine(
+        model, ServeConfig(model=model.cfg, cache_layout="paged",
+                           cache_page_size=knobs["page"],
+                           prefill_bucket=knobs["page"],
+                           share_prefix=share),
+        max_len=knobs["max_len"], batch_slots=knobs["slots"])
+    eng.load(params)
+    # warmup: same launch shapes, different system prompt — compiles the
+    # (s)prefill and decode steps so the timed phase measures launches
+    _drive(eng, warm, knobs["max_new"])
+    ops.reset_policy_eval_count()
+    base_launches = dict(eng.stats.launches)
+    c = eng.cache
+    base = (c.pages_allocated_total, c.prefix_hits,
+            c.prefix_shared_rows, c.prefix_copies)
+
+    toks, ttft, wall = _drive(eng, prompts, knobs["max_new"])
+
+    delta = {k: v - base_launches.get(k, 0)
+             for k, v in eng.stats.launches.items()
+             if v > base_launches.get(k, 0)}
+
+    class _D:                                   # launch deltas, stats-like
+        launches = delta
+    n_tok = sum(len(t) for t in toks.values())
+    followers = [r for r in ttft if r != 0]
+    pages, hits, rows_shared, copies = (
+        v - b for v, b in zip((c.pages_allocated_total, c.prefix_hits,
+                               c.prefix_shared_rows, c.prefix_copies),
+                              base))
+    row = ["shared" if share else "unshared", len(toks), n_tok,
+           round(n_tok / max(wall, 1e-9), 1),
+           pages, hits, rows_shared, copies,
+           _launches(_D, "prefill"), _launches(_D, "sprefill"),
+           round(1e3 * float(np.mean([ttft[r] for r in followers])), 1),
+           ops.policy_eval_count()]
+    eng.cache.check_conservation()
+    return row, toks
+
+
+def main(smoke: bool = False) -> None:
+    cfg = reduced_config("qwen2.5-3b", num_layers=2,
+                         d_model=32 if smoke else 64)
+    assert cfg.num_kv_heads == 1, "A/B needs the MQA low-head-count shape"
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts, warm, knobs = _workload(smoke)
+
+    header = ["mode", "requests", "tokens", "tok_per_s",
+              "pages_allocated", "prefix_hits", "shared_rows",
+              "page_copies", "full_prefills", "suffix_prefills",
+              "follower_ttft_ms", "policy_evals_in_dispatch"]
+    rows, token_sets = [], []
+    for share in (True, False):
+        row, toks = run_cell(model, params, share, prompts, warm, knobs)
+        rows.append(row)
+        token_sets.append(toks)
+    title = ("prefix A/B: share_prefix on vs off "
+             f"({'smoke' if smoke else 'full'}, "
+             f"{len(prompts)} requests, one shared system prompt)")
+    print_table(header, rows, title)
+    write_csv("prefix_ab", header, rows, smoke=smoke)
+
+    shared_row, unshared_row = rows
+    n = len(prompts)
+    # structural claims (the reproducible part of the A/B)
+    assert token_sets[0] == token_sets[1], \
+        "prefix sharing changed greedy tokens"
+    for row in rows:
+        assert row[11] == 0, "policy ran inside a traced step"
+    assert shared_row[8] == 1 and shared_row[9] == n - 1, \
+        f"shared arm must full-prefill ONLY the leader: {shared_row}"
+    assert unshared_row[8] == n and unshared_row[9] == 0, \
+        f"unshared arm must full-prefill every request: {unshared_row}"
+    assert shared_row[4] < unshared_row[4], \
+        "sharing must allocate strictly fewer pages"
+    assert shared_row[5] == n - 1, "every follower must hit the trie"
+    if not smoke:
+        assert shared_row[10] < unshared_row[10], \
+            "follower TTFT must improve when the prefix is resident " \
+            f"(shared {shared_row[10]} ms vs unshared {unshared_row[10]})"
+    print(f"\nprefix A/B: greedy tokens identical, "
+          f"{shared_row[4]} vs {unshared_row[4]} pages allocated, "
+          f"full prefills {shared_row[8]} vs {unshared_row[8]}, "
+          f"{shared_row[6]} prompt rows served from the trie, "
+          "conservation + policy-eval counters clean")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale variant (make verify / CI)")
+    main(**vars(ap.parse_args()))

@@ -12,6 +12,7 @@ def main() -> None:
     from benchmarks import (
         cache_ab,
         metadata_ab,
+        prefix_ab,
         regression_sweep,
         roofline_report,
         serving_ab,
@@ -31,6 +32,8 @@ def main() -> None:
          serving_ab.main),
         ("cache_ab (DenseLayout vs PagedKVCache, mixed prompt lengths)",
          cache_ab.main),
+        ("prefix_ab (share_prefix on vs off, shared system prompt)",
+         prefix_ab.main),
         ("tune_ab (measured vs paper vs fa3_baseline split policies)",
          tune_ab.main),
     ]

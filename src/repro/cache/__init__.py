@@ -7,7 +7,9 @@ PagedKVCache), mirroring the repro.plan design.
   :class:`PagedKVCache` (fixed-size pages + per-slot page tables).
 - :class:`CacheManager` — residency bookkeeping: per-slot ``kv_len``
   (the planner's resident-length summary), free-list page allocation,
-  page-table device mirroring.
+  page-table device mirroring, and — under ``share_prefix`` — per-page
+  refcounts, copy-on-write, and the :class:`PrefixTrie` that maps new
+  prompts onto already-resident prefix pages.
 
 Entry points the stack threads instead of owning raw arrays:
 ``gather_view`` / ``scatter_view`` (decode), ``slot_view`` /
@@ -22,6 +24,7 @@ from repro.cache.layout import (  # noqa: F401
     PagedKVCache,
 )
 from repro.cache.manager import CacheManager  # noqa: F401
+from repro.cache.prefix import PrefixMatch, PrefixTrie  # noqa: F401
 from repro.cache.spec import (  # noqa: F401
     LAYOUTS,
     TRASH_PAGE,

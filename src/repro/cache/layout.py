@@ -240,6 +240,22 @@ class PagedKVCache(CacheLayout):
         return _map_specs(one, self.specs, self._paged_mask, storage,
                           view)
 
+    # --- page copies (prefix sharing) ---------------------------------------
+
+    def copy_page(self, storage: Pytree, src: jax.Array,
+                  dst: jax.Array) -> Pytree:
+        """Copy one pool page (every layer of every pageable leaf) from
+        ``src`` to ``dst``.  Backs copy-on-write and copy-on-adopt: the
+        manager queues (src, dst) pairs and the engine applies them
+        through a jitted step BEFORE any gather can read ``dst``."""
+        def one(s, paged, leaf):
+            if not paged:
+                return leaf
+            row = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst,
+                                                       axis=1)
+        return _map_specs(one, self.specs, self._paged_mask, storage)
+
     # --- admission reset ----------------------------------------------------
 
     def zero_slot(self, storage: Pytree, slot: jax.Array) -> Pytree:

@@ -37,6 +37,15 @@ class CacheSpec:
     refused.  Smaller budgets oversubscribe slots against each other:
     admission then gates on free pages and a mid-flight allocation
     failure surfaces as a per-request ``cache_capacity`` finish.
+
+    ``share_prefix`` (paged only) turns on per-page refcounts plus a
+    token-keyed prefix trie in the :class:`~repro.cache.CacheManager`:
+    admission maps a request's shared prompt prefix onto already-
+    resident pages (zero prefill compute for the shared part) and pages
+    copy-on-write when a write would dirty a page another owner still
+    reads.  ``prefix_capacity`` bounds how many pages the trie may keep
+    anchored (None = unbounded); anchored-only pages are evicted
+    leaf-first LRU when the pool runs dry or the bound is hit.
     """
     family: str
     batch: int
@@ -45,6 +54,8 @@ class CacheSpec:
     layout: str = "dense"
     page_size: int = 64
     page_budget: Optional[int] = None
+    share_prefix: bool = False
+    prefix_capacity: Optional[int] = None
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -60,6 +71,14 @@ class CacheSpec:
             if self.page_budget is not None and self.page_budget < 1:
                 raise ValueError(f"page_budget must be >= 1, "
                                  f"got {self.page_budget}")
+            if self.prefix_capacity is not None \
+                    and self.prefix_capacity < 1:
+                raise ValueError(f"prefix_capacity must be >= 1, "
+                                 f"got {self.prefix_capacity}")
+        elif self.share_prefix:
+            raise ValueError(
+                "share_prefix needs per-slot page tables to map shared "
+                "prefixes onto; use layout='paged'")
 
     # --- derived extents ----------------------------------------------------
 

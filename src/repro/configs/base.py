@@ -289,6 +289,20 @@ class ServeConfig:
     # oversubscribe slots; exhaustion mid-generation finishes that
     # request with finish_reason="cache_capacity".
     cache_page_budget: Optional[int] = None
+    # paged layout: share identical prompt prefixes across requests.
+    # Per-page refcounts + a token-keyed prefix trie: admission adopts a
+    # new prompt's already-resident prefix pages (refcount++, ZERO
+    # prefill compute for the shared rows — only the unshared suffix is
+    # prefilled, as an ("sprefill", ...) planned launch), writes
+    # copy-on-write shared pages, and release only frees a page when its
+    # last owner lets go.  Requires cache_layout="paged", fused prefill,
+    # and Model.supports_prefix_sharing (uniform full-attention stack).
+    share_prefix: bool = False
+    # share_prefix: max pages the prefix trie may keep anchored beyond
+    # their owners' lifetimes (None = unbounded, i.e. the page pool is
+    # the only bound).  Anchored-only pages are evicted leaf-first LRU
+    # when the pool runs dry or this bound is hit.
+    prefix_capacity: Optional[int] = None
     max_batch: int = 128
     seed: int = 0
 

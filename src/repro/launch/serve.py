@@ -41,8 +41,8 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 top_k: int = 0, top_p: float = 1.0,
                 sampler: str = "categorical",
                 prefill_mode: str = "auto", stream: bool = False,
-                cache_layout: str = "dense", tune_table=None,
-                stats_path=None, log_fn=print):
+                cache_layout: str = "dense", share_prefix: bool = False,
+                tune_table=None, stats_path=None, log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -57,6 +57,7 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                     num_splits_override=num_splits_override,
                     prefill_mode=prefill_mode,
                     cache_layout=cache_layout,
+                    share_prefix=share_prefix,
                     tune_table_path=(str(tune_table) if tune_table
                                      else None),
                     stats_path=(str(stats_path) if stats_path else None)),
@@ -65,9 +66,16 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
     engine.load(params)
 
     rng = np.random.default_rng(seed)
+    # --share-prefix traffic models the production shape the knob
+    # exists for: every request opens with the same "system prompt"
+    # (long enough to span full pages), then a short unique tail
+    system = (rng.integers(0, cfg.vocab_size, size=96).tolist()
+              if share_prefix else [])
     reqs: List[Request] = [
-        Request(i, rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-                .tolist(), max_new_tokens=max_new,
+        Request(i, system
+                + rng.integers(0, cfg.vocab_size,
+                               size=rng.integers(4, 12)).tolist(),
+                max_new_tokens=max_new,
                 sampling=SamplingParams(temperature=temperature,
                                         top_k=top_k, top_p=top_p,
                                         seed=seed + i))
@@ -106,6 +114,12 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
         log_fn(f"paged cache: {cs['total_pages']} pages of "
                f"{cs['page_size']} ({cs['storage_bytes']} B vs dense "
                f"{cs['dense_bytes']} B), {cs['free_pages']} free")
+        if share_prefix:
+            log_fn(f"prefix sharing: {cs['prefix_hits']} hits, "
+                   f"{cs['prefix_shared_rows']} prompt rows reused, "
+                   f"{cs['pages_allocated_total']} pages allocated, "
+                   f"{cs['prefix_copies']} page copies, "
+                   f"{cs['prefix_anchored_pages']} anchored")
     if engine.prefill_mode == "fused":
         log_fn("fused prefill buckets: "
                f"{engine.planned_prefill_buckets()}")
@@ -148,6 +162,10 @@ def main() -> None:
                     choices=["dense", "paged"],
                     help="repro.cache storage layout (paged: resident-"
                          "bucket views + page-budget admission)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="share identical prompt prefixes across "
+                         "requests (refcounted copy-on-write pages; "
+                         "requires --cache-layout paged)")
     ap.add_argument("--stream", action="store_true",
                     help="print TOKEN/FINISHED events as they happen")
     args = ap.parse_args()
@@ -159,6 +177,7 @@ def main() -> None:
                 top_p=args.top_p, sampler=args.sampler,
                 prefill_mode=args.prefill, stream=args.stream,
                 cache_layout=args.cache_layout,
+                share_prefix=args.share_prefix,
                 tune_table=args.tune_table, stats_path=args.stats_path)
 
 

@@ -130,6 +130,75 @@ def attention_prefill(
     return y, {"k": kc.astype(cfg.dtype), "v": vc.astype(cfg.dtype)}
 
 
+def _place_rows(old: jax.Array, new: jax.Array,
+                start: jax.Array) -> jax.Array:
+    """Write ``new`` (B, M, ...) into ``old`` (B, V, ...) at row offset
+    ``start`` (traced scalar).  ``dynamic_update_slice`` is wrong here:
+    it CLAMPS the start index so a suffix landing near the view's end
+    would silently shift — masked take/where places rows exactly and
+    out-of-range rows keep their old values."""
+    V, M = old.shape[1], new.shape[1]
+    idx = jnp.arange(V)
+    src = jnp.clip(idx - start, 0, M - 1)
+    mask = (idx >= start) & (idx < start + M)
+    moved = jnp.take(new, src, axis=1)
+    mask = mask.reshape((1, V) + (1,) * (old.ndim - 2))
+    return jnp.where(mask, moved.astype(old.dtype), old)
+
+
+def attention_suffix_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (1, M, d) — the unshared suffix
+    cache: Dict[str, jax.Array],        # slot view, prefix rows resident
+    start: jax.Array,                   # scalar int32: first suffix row
+    *,
+    impl: Optional[str] = None,
+    kv_dtype: str = "bfloat16",
+    plan: Optional[LaunchPlan] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill only rows [start, start + M) against an already-resident
+    prefix (prefix sharing): the view's rows [0, start) hold the adopted
+    pages' K/V, the suffix queries attend over prefix + themselves via
+    the causal ``q_offset`` mask, and the fresh K/V is placed into the
+    view in cache layout.  Rows past ``start + M`` are garbage from the
+    slot's unwritten tail — their key positions exceed every query
+    position, so the same mask discards them.
+
+    ``start`` is traced (one compiled step serves every split of a
+    bucket pair), which the pallas/seqpar paths cannot consume — they
+    specialize on a static ``q_offset`` — so those impls drop to the XLA
+    flash reference here.
+    """
+    B, M, _ = x.shape
+    assert B == 1, "suffix prefill is a batch-1 admission step"
+    if impl is None and plan is not None:
+        impl = plan.impl
+    impl = impl or cfg.attention_impl
+    if impl in ("pallas", "seqpar"):
+        impl = "xla"
+    positions = start + jnp.arange(M)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    if kv_dtype == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache = {"k": _place_rows(cache["k"], kq, start),
+                 "v": _place_rows(cache["v"], vq, start),
+                 "k_s": _place_rows(cache["k_s"], ks, start),
+                 "v_s": _place_rows(cache["v_s"], vs, start)}
+        kf = dequantize_kv(cache["k"], cache["k_s"])
+        vf = dequantize_kv(cache["v"], cache["v_s"])
+    else:
+        cache = {"k": _place_rows(cache["k"], k, start),
+                 "v": _place_rows(cache["v"], v, start)}
+        kf, vf = cache["k"], cache["v"]
+    out = ops.attention(q, kf.astype(q.dtype), vf.astype(q.dtype),
+                        causal=True, q_offset=start, impl=impl)
+    y = jnp.einsum("blhk,hkd->bld", out, params["wo"])
+    return y, cache
+
+
 def cross_attention_train(
     params: Params,
     cfg: ModelConfig,

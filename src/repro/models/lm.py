@@ -499,6 +499,86 @@ def lm_prefill_slot(
     return logits, write_cache_slot(caches, new, slot)
 
 
+def block_suffix_prefill(params, cfg: ModelConfig, x: jax.Array,
+                         cache: Pytree, start: jax.Array, *,
+                         kv_dtype: str = "bfloat16", plan=None
+                         ) -> Tuple[jax.Array, Pytree]:
+    """One full-attention block over an unshared suffix (prefix sharing).
+
+    Consumes AND updates the layer's batch-1 cache view: rows
+    [0, start) arrive resident from adopted pages, the suffix's K/V is
+    placed at [start, start + M).  Only ``attn`` blocks exist here —
+    the registry gates prefix sharing to uniform full-attention
+    families (windowed/recurrent blocks carry order-dependent state a
+    row-offset restart cannot reproduce).
+    """
+    h = apply_norm(params["ln1"], x, cfg.norm_eps)
+    mix, cache = attn_mod.attention_suffix_prefill(
+        params["mix"], cfg, h, cache, start, kv_dtype=kv_dtype, plan=plan)
+    x = x + mix
+    h2 = apply_norm(params["ln2"], x, cfg.norm_eps)
+    y, _ = _apply_ffn(params["ffn"], cfg, h2)
+    return x + y, cache
+
+
+def lm_prefill_suffix_view(
+    params: Pytree,
+    cfg: ModelConfig,
+    caches: Tuple[Pytree, ...],         # batch-1 views, prefix resident
+    tokens: jax.Array,                  # (Mb,) int32 — bucket-padded suffix
+    start: jax.Array,                   # scalar int32 — first suffix row
+    length: jax.Array,                  # scalar int32 — TOTAL prompt length
+    *,
+    plan=None,
+    kv_dtype: str = "bfloat16",
+) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
+    """Suffix-only admission prefill (prefix sharing).
+
+    The counterpart of :func:`lm_prefill_view` when rows [0, start) of
+    the slot already hold a shared prefix's K/V: one launch computes
+    only the ``length - start`` unshared rows (bucket-padded to ``Mb``),
+    attending over prefix + suffix through the causal ``q_offset`` mask,
+    and places their K/V into the passed-in cache views.  Returns
+    (logits at prompt row ``length - 1`` (vocab,) f32, updated views).
+
+    Like :func:`lm_decode_step` this scans (params, cache) together —
+    the view is an input, not an output, because the prefix rows must
+    flow through.  Padding rows >= ``length - start`` hold garbage but
+    land at key positions no real query attends, exactly the
+    ``lm_prefill_view`` padding argument shifted by ``start``.
+    """
+    x = embed_tokens(params["embed"], tokens[None])      # (1, Mb, d)
+
+    new_groups = []
+    for gi, (pattern, reps) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        gc = caches[gi]
+        assert pattern == ("attn",), \
+            f"suffix prefill supports uniform attn stacks, got {pattern}"
+
+        def body(xc, scanned):
+            layer_params, layer_cache = scanned
+            xc, c = block_suffix_prefill(layer_params[0], cfg, xc,
+                                         layer_cache[0], start,
+                                         kv_dtype=kv_dtype, plan=plan)
+            return xc, (c,)
+
+        if cfg.scan_layers:
+            x, gc = jax.lax.scan(body, x, (gp, gc))
+        else:
+            outs = []
+            for r in range(reps):
+                x, c = body(x, jax.tree.map(lambda a: a[r], (gp, gc)))
+                outs.append(c)
+            gc = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_groups.append(gc)
+
+    xl = jax.lax.dynamic_slice_in_dim(x, length - 1 - start, 1, axis=1)
+    xl = apply_norm(params["final_norm"], xl, cfg.norm_eps)
+    logits = unembed(params["embed"], xl)[0, 0]          # (vocab,)
+    return logits, tuple(new_groups)
+
+
 # ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------

@@ -73,10 +73,26 @@ class Model:
         meaning depends on the STORAGE length, so they stay dense."""
         return self.cfg.family in ("dense", "moe", "mla", "vlm", "encdec")
 
+    @property
+    def supports_prefix_sharing(self) -> bool:
+        """Whether ``share_prefix`` may index this family's pages.
+        Needs paged (position-linear) caches, the fused admission path
+        (suffix prefill is its restartable form), AND a uniform
+        full-attention stack whose per-layer cache is the standard
+        k/v dict the suffix placement path writes — which excludes
+        mla's split latent/rope caches (paged-compatible, but not yet
+        covered by :func:`repro.models.lm.block_suffix_prefill`) and
+        encdec's cross-attention column; recurrent families fail the
+        paged gate outright."""
+        return (self.supports_paged_cache and self.supports_fused_prefill
+                and self.cfg.family in ("dense", "moe"))
+
     def cache_spec(self, batch: int, max_len: int,
                    kv_dtype: str = "bfloat16", *, layout: str = "dense",
                    page_size: int = 64,
-                   page_budget: Optional[int] = None):
+                   page_budget: Optional[int] = None,
+                   share_prefix: bool = False,
+                   prefix_capacity: Optional[int] = None):
         """The declarative :class:`~repro.cache.CacheSpec` for this
         model's caches — the input the :class:`~repro.cache.CacheManager`
         resolves into a layout."""
@@ -85,9 +101,16 @@ class Model:
             raise ValueError(
                 f"{self.cfg.family} caches are not position-linear "
                 "(recurrent state / ring buffers); use layout='dense'")
+        if share_prefix and not self.supports_prefix_sharing:
+            raise ValueError(
+                f"{self.cfg.family} models cannot share prefix pages "
+                "(needs paged caches, fused prefill, and a uniform "
+                "full-attention stack)")
         return CacheSpec(self.cfg.family, batch, max_len,
                          kv_dtype=kv_dtype, layout=layout,
-                         page_size=page_size, page_budget=page_budget)
+                         page_size=page_size, page_budget=page_budget,
+                         share_prefix=share_prefix,
+                         prefix_capacity=prefix_capacity)
 
     def cache_manager(self, batch: int, max_len: int,
                       kv_dtype: str = "bfloat16", **layout_kw):
@@ -205,6 +228,27 @@ class Model:
         return lm_mod.lm_prefill_view(params, cfg, tokens, length,
                                       view_len, plan=plan,
                                       kv_dtype=kv_dtype)
+
+    def prefill_suffix_view(self, params: Pytree, caches: Pytree,
+                            tokens: jax.Array, start: jax.Array,
+                            length: jax.Array, *, plan=None,
+                            kv_dtype: str = "bfloat16"
+                            ) -> Tuple[jax.Array, Pytree]:
+        """Suffix-only admission prefill over a batch-1 cache view whose
+        rows [0, start) already hold a shared prefix's K/V (prefix
+        sharing).  ``tokens``: (Mb,) bucket-padded UNSHARED suffix;
+        ``start`` / ``length``: traced scalars (first suffix row /
+        total prompt length).  Returns (logits at prompt row
+        ``length - 1``, the updated views) — the paged layout scatters
+        them back through the slot's page table exactly like
+        :meth:`prefill_slot_view` output."""
+        if not self.supports_prefix_sharing:
+            raise NotImplementedError(
+                f"{self.cfg.family} models cannot suffix-prefill a "
+                "shared prefix; admit with the full prefill path")
+        return lm_mod.lm_prefill_suffix_view(
+            params, self.cfg, caches, tokens, start, length, plan=plan,
+            kv_dtype=kv_dtype)
 
     def decode_step(self, params: Pytree, caches: Pytree, token: jax.Array,
                     t: jax.Array, *, plan=None, metadata=None,

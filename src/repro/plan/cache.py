@@ -77,12 +77,21 @@ class PlanCacheStats:
     def distinct_buckets(self) -> int:
         return len(self.seen_buckets)
 
+    def _trim(self, trace: List[Any]) -> None:
+        """Bound a per-launch trace to the most recent ``TRACE_CAP``
+        entries (amortized: trimmed only past 2x, so appends stay O(1)).
+        EVERY trace must funnel through this — a long-lived engine leaks
+        in any recording path that appends without trimming, and the
+        aggregate counters (``launches`` / ``*_launches`` /
+        ``*_fallbacks``) are what survive the trim."""
+        if len(trace) > 2 * self.TRACE_CAP:
+            del trace[:-self.TRACE_CAP]
+
     def record_launch(self, key: Hashable) -> None:
         self.launches[key] = self.launches.get(key, 0) + 1
         self.seen_buckets.add(key)
         self.trace.append(key)
-        if len(self.trace) > 2 * self.TRACE_CAP:
-            del self.trace[:-self.TRACE_CAP]
+        self._trim(self.trace)
 
     def record_fallback(self, resident_max: int, traced_len: int) -> None:
         """One internal-heuristic (no-plan) launch: the policy saw
@@ -90,8 +99,7 @@ class PlanCacheStats:
         were actually resident."""
         self.fallback_launches += 1
         self.fallback_trace.append((int(resident_max), int(traced_len)))
-        if len(self.fallback_trace) > 2 * self.TRACE_CAP:
-            del self.fallback_trace[:-self.TRACE_CAP]
+        self._trim(self.fallback_trace)
 
     def record_measured(self, key: tuple, fallback: bool) -> None:
         """One measured-policy (SplitTable) lookup.  ``key`` is the
@@ -101,8 +109,7 @@ class PlanCacheStats:
         if fallback:
             self.measured_fallbacks += 1
             self.measured_fallback_trace.append(tuple(key))
-            if len(self.measured_fallback_trace) > 2 * self.TRACE_CAP:
-                del self.measured_fallback_trace[:-self.TRACE_CAP]
+            self._trim(self.measured_fallback_trace)
 
     def to_json(self) -> Dict[str, Any]:
         """JSON-safe snapshot of every counter (tuple keys flattened to

@@ -194,9 +194,28 @@ class ServingEngine:
                         f"cache_page_size ({scfg.cache_page_size}) must "
                         f"divide the plan bucket widths (got {width})")
         self.cache_layout = layout
+
+        self.share_prefix = scfg.share_prefix
+        if self.share_prefix:
+            if layout != "paged":
+                raise ValueError(
+                    "share_prefix maps prompts onto existing pages; set "
+                    "cache_layout='paged'")
+            if self.prefill_mode != "fused":
+                raise ValueError(
+                    "prefix sharing admits through the fused prefill "
+                    "path (suffix prefill is its restartable form); "
+                    "prefill_mode='loop' cannot start from adopted pages")
+            if not model.supports_prefix_sharing:
+                raise ValueError(
+                    f"{self.cfg.family} models cannot share prefix pages "
+                    "(needs a uniform full-attention stack over the "
+                    "standard k/v cache)")
         self._cache_kw = dict(kv_dtype=self.kv_dtype, layout=layout,
                               page_size=scfg.cache_page_size,
-                              page_budget=scfg.cache_page_budget)
+                              page_budget=scfg.cache_page_budget,
+                              share_prefix=scfg.share_prefix,
+                              prefix_capacity=scfg.prefix_capacity)
         # residency bookkeeping + layout resolution (storage arrays stay
         # on the engine for the donation flow; load() re-creates both)
         self.cache = model.cache_manager(self.B, self.max_len,
@@ -252,6 +271,12 @@ class ServingEngine:
         self._zero_step = jax.jit(
             self._zero_paged_impl if layout == "paged" else self._zero_impl,
             donate_argnums=(0,))
+        # device page copy (copy-on-adopt / copy-on-write): applied
+        # between launches, before any gather can read the copied-into
+        # page (prefix sharing)
+        if layout == "paged":
+            self._copy_step = jax.jit(self._copy_page_impl,
+                                      donate_argnums=(0,))
 
     # --- observability ------------------------------------------------------
 
@@ -269,6 +294,9 @@ class ServingEngine:
 
     def planned_prefill_buckets(self) -> List[int]:
         return self.sched.planned_prefill_buckets()
+
+    def planned_suffix_buckets(self) -> List[Any]:
+        return self.sched.planned_suffix_buckets()
 
     def cache_stats(self) -> Dict[str, Any]:
         """The cache manager's layout / residency / page-pool summary."""
@@ -361,6 +389,36 @@ class ServingEngine:
         storage = lay.write_slot(storage, view, table, slot, num_pages)
         return tok[0], storage
 
+    def _copy_page_impl(self, storage, src, dst):
+        return self.cache.layout.copy_page(storage, src, dst)
+
+    def _apply_copies(self) -> None:
+        """Apply the cache manager's queued (src, dst) device page
+        copies.  MUST run before any launch that could gather a
+        copied-into page — until the copy lands the page holds garbage
+        (fresh from the free list)."""
+        for src, dst in self.cache.drain_copies():
+            self._caches = self._copy_step(self._caches,
+                                           jnp.asarray(src, jnp.int32),
+                                           jnp.asarray(dst, jnp.int32))
+
+    def _suffix_prefill_paged_impl(self, params, storage, tokens, slot,
+                                   start, length, state, table,
+                                   plan: Optional[LaunchPlan] = None,
+                                   num_pages: int = 1):
+        """Suffix-only fused prefill (prefix sharing): gather the slot's
+        view — rows [0, start) already resident from adopted pages —
+        compute only the unshared suffix against it, scatter back."""
+        lay = self.cache.layout
+        view = lay.slot_view(storage, table, slot, num_pages)
+        with plan_scope(plan):
+            logits, view = self.model.prefill_suffix_view(
+                params, view, tokens, start, length,
+                plan=plan, kv_dtype=self.kv_dtype)
+        tok = self.sampler.sample(logits[None], state, (length - 1)[None])
+        storage = lay.write_slot(storage, view, table, slot, num_pages)
+        return tok[0], storage
+
     def _build_decode(self, plan: LaunchPlan):
         if self.cache.is_paged:
             return jax.jit(
@@ -381,6 +439,15 @@ class ServingEngine:
         return jax.jit(functools.partial(self._prefill_impl, plan=plan),
                        donate_argnums=(1,))
 
+    def _build_suffix_prefill(self, plan: LaunchPlan):
+        # plan.bucket is the VIEW bucket (whole resident prompt): the
+        # gather must span prefix + suffix, like decode's resident view
+        return jax.jit(
+            functools.partial(self._suffix_prefill_paged_impl, plan=plan,
+                              num_pages=self.cache.spec.view_pages(
+                                  plan.bucket)),
+            donate_argnums=(1,))
+
     # --- request lifecycle --------------------------------------------------
 
     def validate(self, req: Request) -> None:
@@ -388,14 +455,17 @@ class ServingEngine:
         self.sched.validate(req)
         self.sampler.check(req.sampling)
         if self.cache.is_paged:
-            need = self.cache.pages_for(len(req.prompt))
-            total = self.cache.spec.total_pages
-            if need > total:
-                # could never be admitted even into an EMPTY pool —
-                # admitting would deadlock the FIFO queue head forever
+            # +1: the request must also fit its FIRST decode-token row.
+            # A prompt whose pages exactly fill the pool would admit,
+            # then deadlock the FIFO head forever — alone in the pool,
+            # waiting on a page no finish can ever free.
+            need = self.cache.pages_for(len(req.prompt) + 1)
+            limit = self.cache.max_request_pages()
+            if need > limit:
                 raise ValueError(
-                    f"request {req.request_id}: prompt needs {need} "
-                    f"pages, page budget is {total} "
+                    f"request {req.request_id}: prompt plus its first "
+                    f"decode row needs {need} pages, page budget allows "
+                    f"{limit} per request "
                     f"(page_size={self.cache.spec.page_size})")
 
     def submit(self, req: Request) -> int:
@@ -431,7 +501,11 @@ class ServingEngine:
 
     def _admissible(self, st: SlotState) -> bool:
         """Page-budget admission gate (paged layout; dense always
-        admits): the queue head needs its whole prompt's pages free."""
+        admits): the queue head needs its whole prompt's pages free —
+        under prefix sharing, only the pages its shared prefix does NOT
+        already cover."""
+        if self.share_prefix:
+            return self.cache.can_admit(st.request.prompt)
         return self.cache.can_reserve(len(st.request.prompt))
 
     def stream(self, handle: int) -> Iterator[Event]:
@@ -501,8 +575,13 @@ class ServingEngine:
     def _admit(self, i: int, st: SlotState, events: List[Event]) -> None:
         # the whole prompt's pages are reserved up front (all-or-nothing;
         # _admissible already checked the free list, so this cannot fail)
-        ok = self.cache.reserve(i, len(st.request.prompt))
-        assert ok, "admission raced the page free list"
+        if self.share_prefix:
+            shared = self.cache.admit_prompt(i, st.request.prompt)
+            assert shared is not None, "admission raced the page free list"
+        else:
+            ok = self.cache.reserve(i, len(st.request.prompt))
+            assert ok, "admission raced the page free list"
+            shared = 0
         # the reset launch is only needed when the admission path leaves
         # any of the slot's cache rows unwritten: always for loop
         # teacher-forcing, and for fused prefill only when the model
@@ -516,31 +595,54 @@ class ServingEngine:
             self._state[name][i] = value
         self._state_dev = None                  # row dirtied: re-upload
         if self.prefill_mode == "fused":
-            self._admit_fused(i, st, events)
+            self._admit_fused(i, st, events, shared)
         else:
             st.prompt_left = list(st.request.prompt)
             self._pos[i] = 0
             self._next_token[i] = st.prompt_left.pop(0)
 
-    def _admit_fused(self, i: int, st: SlotState,
-                     events: List[Event]) -> None:
-        """Prefill the whole prompt in one planned launch; the slot
-        joins the decode lockstep already holding its first token."""
+    def _admit_fused(self, i: int, st: SlotState, events: List[Event],
+                     shared: int = 0) -> None:
+        """Prefill the prompt in one planned launch; the slot joins the
+        decode lockstep already holding its first token.  With
+        ``shared`` > 0 (prefix sharing) the launch is the SUFFIX-only
+        specialization: rows [0, shared) arrived with the adopted pages,
+        so only ``n - shared`` rows are computed — and the launch counts
+        under an ``("sprefill", ...)`` key, never ``("prefill", ...)``,
+        which is the structural form of the zero-prefill-launches-for-
+        shared-pages claim."""
         prompt = st.request.prompt
         n = len(prompt)
-        entry = self.sched.prefill_entry(n, self._build_prefill)
-        bucket = entry.key[1]
-        toks = np.zeros(bucket, np.int32)
-        toks[:n] = prompt
         state_row = {k: jnp.asarray(v[i:i + 1])
                      for k, v in self._state.items()}
-        args = (self._params, self._caches, jnp.asarray(toks),
-                jnp.asarray(i, jnp.int32), jnp.asarray(n, jnp.int32),
-                state_row)
-        if self.cache.is_paged:
-            args += (self.cache.table_device(),)
+        if shared:
+            # adopted boundary rows travel by device page copy — land
+            # them before the suffix launch gathers the slot's view
+            self._apply_copies()
+            entry = self.sched.suffix_prefill_entry(
+                n - shared, n, self._build_suffix_prefill)
+            toks = np.zeros(entry.key[2], np.int32)
+            toks[:n - shared] = prompt[shared:]
+            args = (self._params, self._caches, jnp.asarray(toks),
+                    jnp.asarray(i, jnp.int32),
+                    jnp.asarray(shared, jnp.int32),
+                    jnp.asarray(n, jnp.int32), state_row,
+                    self.cache.table_device())
+        else:
+            entry = self.sched.prefill_entry(n, self._build_prefill)
+            toks = np.zeros(entry.key[1], np.int32)
+            toks[:n] = prompt
+            args = (self._params, self._caches, jnp.asarray(toks),
+                    jnp.asarray(i, jnp.int32), jnp.asarray(n, jnp.int32),
+                    state_row)
+            if self.cache.is_paged:
+                args += (self.cache.table_device(),)
         tok, self._caches = entry.step(*args)
         self.cache.note_write(i, n - 1)
+        if self.share_prefix:
+            # index this prompt's (now fully resident) full pages so the
+            # NEXT request sharing the prefix adopts instead of computing
+            self.cache.register_prefix(i, prompt)
         self._pos[i] = n
         st.completion.steps += 1
         self._emit_token(i, st, int(tok), events)
@@ -558,6 +660,10 @@ class ServingEngine:
             live = self.sched.live()
             if not live:
                 return
+            if self.share_prefix:
+                # ensure() may have copy-on-written a shared page;
+                # its contents must land before this launch's gather
+                self._apply_copies()
         for i, _ in live:                       # residency bookkeeping
             self.cache.note_write(i, int(self._pos[i]))
         tok = jnp.asarray(self._next_token)

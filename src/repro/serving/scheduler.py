@@ -238,6 +238,29 @@ class Scheduler:
 
         return self.plans.get_or_build(key, miss)
 
+    def suffix_prefill_entry(self, suffix_len: int, total_len: int,
+                             build: Callable[[LaunchPlan], Any]
+                             ) -> PlanEntry:
+        """Suffix-only prefill specialization (prefix sharing): queries
+        span the unshared suffix (bucketed to ``mb``) while keys span
+        the whole resident prompt (the view bucket ``vb``), so entries
+        key on the PAIR — ``("sprefill", vb, mb)``.  The launch counter
+        under these keys is what lets callers assert zero (full)
+        prefill launches for shared admissions."""
+        mb = min(bucket_seqlen(suffix_len, self.prefill_bucket_width),
+                 self.max_len)
+        vb = self.prefill_len(total_len)
+        key = ("sprefill", vb, mb)
+
+        def miss() -> PlanEntry:
+            cfg = self.cfg
+            spec = AttentionSpec("prefill", 1, mb, vb, cfg.num_heads,
+                                 self._kv_heads(), cfg.resolved_head_dim)
+            plan = self.planner.plan(spec, bucket=vb)
+            return PlanEntry(key, plan, build(plan))
+
+        return self.plans.get_or_build(key, miss)
+
     # --- observability ------------------------------------------------------
 
     def planned_splits(self) -> Dict[int, int]:
@@ -249,3 +272,8 @@ class Scheduler:
         """Resident prefill-plan buckets (sorted)."""
         return sorted(k[1] for k in self.plans.keys()
                       if isinstance(k, tuple) and k[0] == "prefill")
+
+    def planned_suffix_buckets(self) -> List[Tuple[int, int]]:
+        """Resident suffix-prefill (view, suffix) bucket pairs (sorted)."""
+        return sorted((k[1], k[2]) for k in self.plans.keys()
+                      if isinstance(k, tuple) and k[0] == "sprefill")

@@ -146,6 +146,29 @@ def test_distinct_buckets_survives_trace_trim():
     assert st.launches[256] == 1
 
 
+def test_measured_fallback_trace_is_trace_capped():
+    """Regression: measured_fallback_trace grew without bound — a
+    long-lived engine on a tune-table family the grid does not cover
+    appended one tuple per launch forever, unlike trace/fallback_trace
+    which trim at TRACE_CAP.  Counters must survive the trim."""
+    st = PlanCacheStats()
+    n = 2 * PlanCacheStats.TRACE_CAP + 7
+    for i in range(n):
+        st.record_measured((1, 4, 1, 8, "xla", 2, i), fallback=True)
+        st.record_measured((1, 4, 1, 8, "xla", 2, i), fallback=False)
+    assert len(st.measured_fallback_trace) <= 2 * PlanCacheStats.TRACE_CAP
+    # the trimmed tail keeps the most RECENT entries
+    assert st.measured_fallback_trace[-1] == (1, 4, 1, 8, "xla", 2, n - 1)
+    # aggregate counters are exact despite the trim
+    assert st.measured_lookups == 2 * n
+    assert st.measured_fallbacks == n
+    # the other two traces hold the same bound under the shared helper
+    for _ in range(2 * PlanCacheStats.TRACE_CAP + 7):
+        st.record_fallback(100, 512)
+    assert len(st.fallback_trace) <= 2 * PlanCacheStats.TRACE_CAP
+    assert st.fallback_launches == 2 * PlanCacheStats.TRACE_CAP + 7
+
+
 def test_engine_revisits_evicted_bucket_as_fresh_miss():
     cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
     model = build_model(cfg)

@@ -1,0 +1,439 @@
+"""Prefix sharing on the paged KV cache: trie match/insert/evict,
+refcounted page lifetime (idempotent release, copy-on-write,
+copy-on-adopt), admission accounting, the shared-vs-unshared serving
+oracle, and the page-conservation property under random interleavings."""
+import jax
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+from repro.cache import CacheSpec, PrefixTrie, TRASH_PAGE
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.kernels import ops
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mgr(model, *, batch=2, max_len=32, page_size=4, budget=None,
+         capacity=None):
+    return model.cache_manager(batch, max_len, layout="paged",
+                               page_size=page_size, page_budget=budget,
+                               share_prefix=True,
+                               prefix_capacity=capacity)
+
+
+# ---------------------------------------------------------------------------
+# PrefixTrie
+# ---------------------------------------------------------------------------
+
+
+def test_trie_match_insert_roundtrip():
+    t = PrefixTrie(4)
+    toks = list(range(10, 20))                 # 10 tokens = 2.5 pages
+    assert t.insert(toks, [5, 6]) == [5, 6]
+    assert t.anchored == 2
+    m = t.match(toks)
+    assert m.pages == [5, 6] and m.boundary_page is None
+    # a diverging prompt matches only the common full pages
+    m = t.match(toks[:4] + [99] * 6)
+    assert m.pages == [5] and m.boundary_page is None
+    # re-inserting the same prefix anchors nothing new (dedup)
+    assert t.insert(toks, [7, 8]) == []
+    assert t.match(toks).pages == [5, 6]       # original pages kept
+
+
+def test_trie_full_page_match_is_capped():
+    """The LAST prompt token's logits are never cached, so a prompt that
+    IS an anchored prefix can adopt at most (n-1)//ps full pages — the
+    remainder arrives as a boundary copy, leaving >= 1 row to compute."""
+    t = PrefixTrie(4)
+    toks = list(range(30, 42))                 # 3 full pages
+    t.insert(toks, [1, 2, 3])
+    m = t.match(toks)                          # n = 12: cap = 11//4 = 2
+    assert m.pages == [1, 2]
+    assert m.boundary_page == 3 and m.boundary_rows == 3
+    # page-multiple-plus-one adopts all full pages, no boundary
+    m = t.match(toks + [77])
+    assert m.pages == [1, 2, 3] and m.boundary_page is None
+
+
+def test_trie_boundary_match():
+    t = PrefixTrie(4)
+    toks = list(range(50, 62))                 # 3 full pages anchored
+    t.insert(toks, [1, 2, 3])
+    # prompt ends 2 tokens into the second page: page 2 holds a superset
+    m = t.match(toks[:6])
+    assert m.pages == [1]
+    assert m.boundary_page == 2 and m.boundary_rows == 1
+    # a 1-token remainder has nothing cachable to copy (its only row is
+    # the recomputed last one): no boundary match
+    m = t.match(toks[:5])
+    assert m.pages == [1] and m.boundary_page is None
+    # diverging remainder: no donor
+    m = t.match(toks[:4] + [99, 98])
+    assert m.pages == [1] and m.boundary_page is None
+
+
+def test_trie_insert_capacity_hook_and_eviction():
+    t = PrefixTrie(4)
+    budget = [1]
+
+    def can_add():
+        if budget[0] <= 0:
+            return False
+        budget[0] -= 1
+        return True
+
+    new = t.insert(list(range(8)), [1, 2], can_add=can_add)
+    assert new == [1] and t.anchored == 1      # stopped at the bound
+    # LRU leaf-first eviction: deepest, least-recently-touched first
+    t2 = PrefixTrie(2)
+    t2.insert([1, 2, 3, 4], [7, 8])
+    t2.insert([1, 2, 9, 9], [7, 6])            # sibling at depth 2
+    t2.match([1, 2, 9, 9])                     # touch the [9,9] branch
+    assert t2.pop_evictable(lambda p: True) == 8   # LRU leaf
+    assert t2.pop_evictable(lambda p: p != 7) == 6
+    # 7 now a leaf but the predicate refuses it
+    assert t2.pop_evictable(lambda p: p != 7) is None
+    assert t2.pop_evictable(lambda p: True) == 7
+    assert t2.anchored == 0
+
+
+# ---------------------------------------------------------------------------
+# CacheManager: refcounts, COW, adoption, release
+# ---------------------------------------------------------------------------
+
+
+def test_release_is_idempotent(tiny_model):
+    """Satellite: a double-finish (streamed handle also swept by
+    drain()) must not double-decrement — under refcounting that frees
+    pages other owners still read, silently aliasing two live slots."""
+    _, model, _ = tiny_model
+    mgr = _mgr(model, budget=6)
+    assert mgr.reserve(0, 9)                   # 3 pages
+    assert mgr.reserve(1, 5)                   # 2 pages
+    free_before = mgr.free_pages
+    mgr.release(0)
+    assert mgr.free_pages == free_before + 3
+    mgr.release(0)                             # double-free: no-op
+    mgr.release(0)
+    assert mgr.free_pages == free_before + 3
+    assert sorted(mgr._free) == sorted(set(mgr._free))
+    mgr.check_conservation()
+    # slot 1's pages were never touched
+    assert int(mgr._allocated[1]) == 2
+    mgr.release(1)
+    mgr.check_conservation()
+
+
+def test_adoption_refcounts_and_release(tiny_model):
+    _, model, _ = tiny_model
+    mgr = _mgr(model, budget=8)
+    prompt = [(3 * j) % 11 + 1 for j in range(9)]   # 2 full pages + 1 row
+    assert mgr.admit_prompt(0, prompt) == 0         # cold trie
+    assert mgr.register_prefix(0, prompt) == 2
+    mgr.check_conservation()
+    shared = mgr.admit_prompt(1, prompt)
+    assert shared == 8                              # both full pages
+    pages = [int(p) for p in mgr._table[0, :2]]
+    for p in pages:
+        assert mgr.refcount[p] == 3                 # owner + adopter + trie
+    mgr.check_conservation()
+    # owner's death must not free the shared pages (twice: idempotent)
+    free_before = mgr.free_pages
+    mgr.release(0)
+    mgr.release(0)
+    assert mgr.free_pages == free_before + 1        # only the private page
+    for p in pages:
+        assert mgr.refcount[p] == 2
+    mgr.check_conservation()
+    # adopter's death leaves them trie-only; reset frees them
+    mgr.release(1)
+    assert all(mgr.refcount[p] == 1 for p in pages)
+    mgr.check_conservation()
+    assert mgr.reset_prefix() == 2
+    assert all(mgr.refcount[p] == 0 for p in pages)
+    assert mgr.free_pages == mgr.spec.total_pages
+    mgr.check_conservation()
+
+
+def test_copy_on_write_on_shared_page(tiny_model):
+    """ensure() on a row whose page another owner still reads must move
+    the writer onto a fresh private page and queue a device copy."""
+    _, model, _ = tiny_model
+    mgr = _mgr(model, budget=8)
+    prompt = list(range(1, 10))                     # 2 full pages + 1 row
+    mgr.admit_prompt(0, prompt)
+    mgr.register_prefix(0, prompt)
+    mgr.admit_prompt(1, prompt)
+    mgr.drain_copies()
+    shared_page = int(mgr._table[1, 0])
+    assert shared_page == int(mgr._table[0, 0])
+    assert mgr.ensure(1, 0)                         # write INTO the prefix
+    private = int(mgr._table[1, 0])
+    assert private != shared_page
+    assert mgr.refcount[shared_page] == 2           # owner + trie remain
+    assert mgr.refcount[private] == 1
+    assert mgr.drain_copies() == [(shared_page, private)]
+    assert mgr.prefix_copies >= 1
+    mgr.check_conservation()
+
+
+def test_boundary_copy_on_adopt(tiny_model):
+    _, model, _ = tiny_model
+    mgr = _mgr(model, budget=8)
+    toks = list(range(1, 13))                       # 3 full pages
+    mgr.admit_prompt(0, toks)
+    mgr.register_prefix(0, toks)
+    donor = int(mgr._table[0, 1])
+    shared = mgr.admit_prompt(1, toks[:6])          # ends 2 rows into pg 2
+    assert shared == 5                              # 4 full + 1 copied row
+    private = int(mgr._table[1, 1])
+    assert private != donor
+    assert mgr.refcount[donor] == 2                 # NOT bumped by adopt
+    assert (donor, private) in mgr.drain_copies()
+    mgr.check_conservation()
+
+
+def test_admission_accounting_and_eviction(tiny_model):
+    _, model, _ = tiny_model
+    mgr = _mgr(model, batch=2, max_len=16, budget=4)
+    a = list(range(1, 10))                          # needs 3 pages
+    assert mgr.can_admit(a)
+    mgr.admit_prompt(0, a)
+    mgr.register_prefix(0, a)
+    # same prompt: only 1 NEW page needed (2 adopted) -> admissible
+    assert mgr.can_admit(a)
+    # a disjoint prompt needs 3 fresh pages; only 1 free and the 2
+    # anchored pages are pinned by their live owner -> refused
+    b = [90 + j for j in range(9)]
+    assert not mgr.can_admit(b)
+    mgr.release(0)
+    # owner gone: the anchored pages are evictable now
+    assert mgr.can_admit(b)
+    assert mgr.admit_prompt(1, b) == 0
+    assert mgr.trie.anchored < 2                    # evicted to make room
+    mgr.check_conservation()
+
+
+def test_admit_rollback_on_exhaustion(tiny_model):
+    """A failed admission must leave NO trace: adopted refcounts undone,
+    popped pages freed, no pending copies."""
+    _, model, _ = tiny_model
+    mgr = _mgr(model, batch=2, max_len=16, budget=3)
+    a = list(range(1, 9))                           # 2 pages, both full
+    mgr.admit_prompt(0, a)
+    mgr.register_prefix(0, a)
+    free_before = mgr.free_pages
+    rc_before = mgr.refcount.copy()
+    # matches both anchored full pages, but the suffix needs more pages
+    # than remain (the live owner pins them) -> all-or-nothing failure
+    big = a + [50 + j for j in range(8)]            # 4 pages total
+    assert mgr.admit_prompt(1, big) is None
+    assert mgr.free_pages == free_before
+    assert (mgr.refcount == rc_before).all()
+    assert mgr.drain_copies() == []
+    assert int(mgr._allocated[1]) == 0
+    mgr.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Page-conservation property (random interleavings)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def prop_model(tiny_model):
+    return tiny_model[1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(script=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2),
+                                 st.integers(1, 12)),
+                       min_size=1, max_size=50))
+def test_page_conservation_property(prop_model, script):
+    """Random admit/decode/finish/double-release/reset interleavings:
+    after every op, (# pages with refcount > 0) + free == total, every
+    refcount equals its reachability count, a page in two slots has
+    refcount > 1, and the trash page is never refcounted or freed."""
+    mgr = _mgr(prop_model, batch=3, max_len=32, page_size=4, budget=10,
+               capacity=6)
+    pos = {}                                    # live slot -> next row
+    base = [(7 * j) % 5 + 1 for j in range(16)]
+    for op, slot, arg in script:
+        if op == 0 and slot not in pos:         # admit (prefix family)
+            prompt = base[:max(1, arg)]
+            if arg % 3 == 0:
+                prompt = prompt[:-1] + [99]     # diverging tail
+            if mgr.can_admit(prompt):
+                shared = mgr.admit_prompt(slot, prompt)
+                assert shared is not None, "can_admit over-promised"
+                assert shared < len(prompt)     # last row never adopted
+                mgr.register_prefix(slot, prompt)
+                mgr.drain_copies()
+                pos[slot] = len(prompt)
+        elif op == 1 and slot in pos:           # decode one row
+            if pos[slot] >= 32:                 # request hit max_len
+                mgr.release(slot)
+                del pos[slot]
+            elif mgr.ensure(slot, pos[slot]):
+                mgr.note_write(slot, pos[slot])
+                mgr.drain_copies()
+                pos[slot] += 1
+            else:                               # pool exhausted: finish
+                mgr.release(slot)
+                del pos[slot]
+        elif op == 2 and slot in pos:           # finish
+            mgr.release(slot)
+            del pos[slot]
+        elif op == 3:                           # stray double-release
+            mgr.release(slot)
+            pos.pop(slot, None)
+        elif op == 4 and arg == 12:             # rare: drop all anchors
+            mgr.reset_prefix()
+        mgr.check_conservation()
+        live = int((mgr.refcount > 0).sum())
+        assert live + mgr.free_pages == mgr.spec.total_pages
+        assert mgr.refcount[TRASH_PAGE] == 0
+        assert TRASH_PAGE not in mgr._free
+
+
+# ---------------------------------------------------------------------------
+# Submit-time page-budget rejection (off-by-one regression)
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_pool_filling_prompt(tiny_model):
+    """Regression: a prompt whose pages exactly fill the pool used to be
+    admitted, then deadlock the FIFO head forever on its first
+    decode-token page (alone in the pool, no finish can free a page)."""
+    cfg, model, params = tiny_model
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, cache_layout="paged",
+                           cache_page_size=16, cache_page_budget=3),
+        max_len=128, batch_slots=2)
+    eng.load(params)
+    # 48 tokens = exactly 3 pages; row 48 (first decode token) needs a
+    # 4th page that can never exist -> must be rejected at submit
+    with pytest.raises(ValueError, match="page budget"):
+        eng.submit(Request(0, list(range(1, 49)), max_new_tokens=4))
+    # one row of headroom: admitted, decodes its first token, and the
+    # engine's per-request capacity finish handles the rest
+    eng.submit(Request(1, list(range(1, 48)), max_new_tokens=1))
+    outs = eng.drain()
+    assert len(outs) == 1 and outs[0].finish_reason == "length"
+    assert len(outs[0].tokens) == 1
+
+
+# ---------------------------------------------------------------------------
+# Serving oracle: shared vs unshared
+# ---------------------------------------------------------------------------
+
+
+def _serve(model, cfg, reqs, *, share, page_size=32, **kw):
+    eng = ServingEngine(
+        model, ServeConfig(model=cfg, cache_layout="paged",
+                           cache_page_size=page_size, prefill_bucket=32,
+                           share_prefix=share, **kw),
+        max_len=256, batch_slots=4)
+    eng.load(model.init_params(jax.random.PRNGKey(0)))
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.drain()
+    return {c.request_id: c.tokens for c in outs}, eng
+
+
+def test_shared_matches_unshared_and_skips_prefill(tiny_model):
+    """The tentpole oracle: N requests sharing a system prompt produce
+    identical greedy tokens with sharing on vs off, allocate fewer
+    pages, and issue ZERO full-prefill launches for the followers —
+    their admissions are suffix launches under ("sprefill", ...) keys."""
+    cfg, model, _ = tiny_model
+    system = [(3 * j) % 150 + 1 for j in range(100)]
+    reqs = [Request(i, system + [(7 * i + j) % 150 + 1 for j in range(9)],
+                    max_new_tokens=4) for i in range(4)]
+    ops.reset_policy_eval_count()
+    ta, ea = _serve(model, cfg, [Request(r.request_id, list(r.prompt),
+                                         max_new_tokens=r.max_new_tokens)
+                                 for r in reqs], share=True)
+    tb, eb = _serve(model, cfg, reqs, share=False)
+    assert ta == tb
+    assert ops.policy_eval_count() == 0         # plans stay frozen
+    sa, sb = ea.stats, eb.stats
+    full = lambda s: sum(v for k, v in s.launches.items()
+                         if isinstance(k, tuple) and k[0] == "prefill")
+    sfx = lambda s: sum(v for k, v in s.launches.items()
+                        if isinstance(k, tuple) and k[0] == "sprefill")
+    assert full(sa) == 1 and sfx(sa) == 3       # leader + 3 suffix
+    assert full(sb) == 4 and sfx(sb) == 0
+    assert ea.cache.pages_allocated_total < eb.cache.pages_allocated_total
+    ca = ea.cache_stats()
+    assert ca["prefix_hits"] == 3
+    assert ca["prefix_shared_rows"] == 3 * 96   # 3 full 32-row pages each
+    ea.cache.check_conservation()
+    assert ea.planned_suffix_buckets() == [(128, 32)]
+
+
+def test_boundary_copy_on_adopt_end_to_end(tiny_model):
+    """A shorter prompt that is a strict prefix of an already-served one
+    adopts its full pages AND copies the boundary page — greedy tokens
+    still match the unshared engine bit-for-bit."""
+    cfg, model, _ = tiny_model
+    leader = [(5 * j) % 150 + 1 for j in range(100)]    # 3 full pages
+    reqs = [Request(0, list(leader), max_new_tokens=3),
+            Request(1, leader[:70], max_new_tokens=3)]  # ends mid-page 3
+    ta, ea = _serve(model, cfg,
+                    [Request(r.request_id, list(r.prompt),
+                             max_new_tokens=r.max_new_tokens)
+                     for r in reqs], share=True)
+    tb, _ = _serve(model, cfg, reqs, share=False)
+    assert ta == tb
+    cs = ea.cache_stats()
+    assert cs["prefix_copies"] >= 1             # the boundary page copy
+    assert cs["prefix_shared_rows"] >= 64 + 5   # 2 full pages + boundary
+    ea.cache.check_conservation()
+
+
+def test_trie_eviction_under_pool_pressure(tiny_model):
+    """Anchored-only pages yield to new admissions: disjoint prompts
+    sweep through a pool too small to keep every prefix anchored."""
+    cfg, model, _ = tiny_model
+    reqs = [Request(i, [(i * 37 + j) % 150 + 1 for j in range(40)],
+                    max_new_tokens=2) for i in range(5)]
+    toks, eng = _serve(model, cfg, reqs, share=True,
+                       cache_page_budget=6)
+    assert sorted(toks) == [0, 1, 2, 3, 4]
+    assert all(len(t) == 2 for t in toks.values())
+    eng.cache.check_conservation()
+    cs = eng.cache_stats()
+    assert cs["free_pages"] + cs["prefix_anchored_pages"] \
+        <= eng.cache.spec.total_pages
+
+
+def test_share_prefix_config_gates(tiny_model):
+    cfg, model, _ = tiny_model
+    with pytest.raises(ValueError, match="cache_layout='paged'"):
+        ServingEngine(model, ServeConfig(model=cfg, share_prefix=True),
+                      max_len=64, batch_slots=2)
+    with pytest.raises(ValueError, match="prefill_mode='loop'"):
+        ServingEngine(model, ServeConfig(model=cfg, share_prefix=True,
+                                         cache_layout="paged",
+                                         prefill_mode="loop"),
+                      max_len=64, batch_slots=2)
+    mla = build_model(reduced_config("minicpm3-4b", num_layers=2,
+                                     d_model=32))
+    with pytest.raises(ValueError, match="share prefix"):
+        ServingEngine(mla, ServeConfig(model=mla.cfg, share_prefix=True,
+                                       cache_layout="paged"),
+                      max_len=64, batch_slots=2)
+    with pytest.raises(ValueError, match="share_prefix"):
+        CacheSpec("dense", 2, 64, share_prefix=True)
