@@ -8,10 +8,10 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify verify-all bench golden plan-golden tune-golden \
-	serving-smoke cache-smoke prefix-smoke tune-smoke
+	serving-smoke cache-smoke prefix-smoke tune-smoke spec-smoke
 
 verify: plan-golden tune-golden serving-smoke cache-smoke prefix-smoke \
-	tune-smoke
+	tune-smoke spec-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 # seconds-scale serving A/B: fused-prefill admission must stay O(1)
@@ -30,6 +30,13 @@ cache-smoke:
 # allocating strictly fewer pages (structural counters + conservation)
 prefix-smoke:
 	$(PY) -m benchmarks.prefix_ab --smoke
+
+# seconds-scale speculative-decoding A/B: greedy tokens bit-identical
+# with speculation on/off, oracle drafter accepts ~all and emits > 1
+# token per planned verify launch, page conservation after the
+# reject-heavy cell (structural counters, not timing)
+spec-smoke:
+	$(PY) -m benchmarks.spec_ab --smoke
 
 # seconds-scale tuning A/B: measured policy never slower than the
 # analytic policies on covered shapes, counted paper fallback elsewhere,

@@ -16,6 +16,7 @@ def main() -> None:
         regression_sweep,
         roofline_report,
         serving_ab,
+        spec_ab,
         table1_ab,
         tune_ab,
         u_curve_sweep,
@@ -36,6 +37,8 @@ def main() -> None:
          prefix_ab.main),
         ("tune_ab (measured vs paper vs fa3_baseline split policies)",
          tune_ab.main),
+        ("spec_ab (speculative verify steps vs plain decode)",
+         spec_ab.main),
     ]
     failures = 0
     for name, fn in jobs:

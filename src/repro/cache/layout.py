@@ -32,7 +32,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cache.spec import CacheSpec
+from repro.cache.spec import CacheSpec, TRASH_PAGE
 from repro.kernels import ops
 from repro.models.common import ParamSpec, is_spec
 
@@ -209,6 +209,44 @@ class PagedKVCache(CacheLayout):
                                + vleaf.shape[3:])
             idx = pidx.reshape((1, B, 1, 1) + (1,) * (vp.ndim - 4))
             sel = jnp.take_along_axis(vp, idx, axis=2)  # (l, B, 1, ps, ..)
+            return leaf.at[:, dst].set(sel.astype(leaf.dtype))
+        return _map_specs(one, self.specs, self._paged_mask, storage,
+                          view)
+
+    def write_rows(self, storage: Pytree, view: Pytree,
+                   table: jax.Array, start: jax.Array,
+                   count: jax.Array, max_rows: int,
+                   num_pages: int) -> Pytree:
+        """Write back only the pages overlapping each slot's rows
+        ``[start[b], start[b] + count[b])`` — the speculative verify
+        step's accept-masked commit.  ``max_rows`` (static) bounds the
+        per-slot row count, so a run straddles at most
+        ``ceil(max_rows / page_size) + 1`` pages; pages in the span but
+        wholly beyond the accepted extent are redirected to the trash
+        page, which is how rejected draft rows die INSIDE the jitted
+        step (the host then rolls ``kv_len`` back — no storage
+        mutation needed).  Rows below ``start`` on the first page
+        round-trip their gathered values unchanged.
+        """
+        ps = self.spec.page_size
+        span = -(-int(max_rows) // ps) + 1
+        first = start.astype(jnp.int32) // ps                   # (B,)
+        pidx = first[:, None] + jnp.arange(span, dtype=jnp.int32)
+        end = (start + count).astype(jnp.int32)                 # (B,)
+        commit = (pidx * ps < end[:, None]) & (pidx < num_pages)
+        pidx_c = jnp.minimum(pidx, num_pages - 1)
+        dst = jnp.take_along_axis(table, pidx_c, axis=1)        # (B, span)
+        dst = jnp.where(commit, dst, TRASH_PAGE)
+
+        def one(s, paged, leaf, vleaf):
+            if not paged:
+                return vleaf
+            B = vleaf.shape[1]
+            vp = vleaf.reshape(vleaf.shape[:2] + (num_pages, ps)
+                               + vleaf.shape[3:])
+            idx = pidx_c.reshape((1, B, span, 1)
+                                 + (1,) * (vp.ndim - 4))
+            sel = jnp.take_along_axis(vp, idx, axis=2)
             return leaf.at[:, dst].set(sel.astype(leaf.dtype))
         return _map_specs(one, self.specs, self._paged_mask, storage,
                           view)

@@ -102,6 +102,17 @@ class CacheManager:
         """Record that row ``pos`` of ``slot`` is now resident."""
         self.kv_len[slot] = max(self.kv_len[slot], pos + 1)
 
+    def truncate(self, slot: int, length: int) -> None:
+        """Roll a slot's resident length BACK to ``length`` (speculative
+        rejection).  Pages are NOT freed: the speculative rows were
+        allocated against the slot's eventual extent, the very next
+        verify launch rewrites them, and every attention path already
+        masks rows above ``kv_len`` — so conservation holds with the
+        pages still owned, and releasing/re-granting them per step would
+        thrash the free list (and, under prefix sharing, re-trigger COW
+        on pages the slot just privatized)."""
+        self.kv_len[slot] = min(self.kv_len[slot], max(int(length), 0))
+
     def resident_max(self) -> int:
         """Largest per-slot resident length (the planner's summary)."""
         return int(self.kv_len.max()) if self.B else 0

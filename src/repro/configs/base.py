@@ -303,6 +303,18 @@ class ServeConfig:
     # the only bound).  Anchored-only pages are evicted leaf-first LRU
     # when the pool runs dry or this bound is hit.
     prefix_capacity: Optional[int] = None
+    # repro.spec: engine-wide speculative-decoding default — a drafter
+    # name ("ngram" | "prompt_lookup" | a registered backend) every
+    # request decodes with unless its SamplingParams.speculation says
+    # otherwise.  None = plain decode.  Rides the metadata-enabled plan
+    # path (verify launches are planned under ("verify", k, bucket)
+    # keys) and needs Model.supports_speculation.
+    speculation: Optional[str] = None
+    # repro.spec: draft tokens proposed per verify step (1..64).
+    speculation_k: int = 4
+    # repro.spec: consecutive zero-accept verify steps before the
+    # engine stops speculating for that request (None = never).
+    speculation_max_rejects: Optional[int] = None
     max_batch: int = 128
     seed: int = 0
 

@@ -387,6 +387,71 @@ def decode_attention(
                                 shard_split=split_constraint)
 
 
+def verify_attention(
+    q: jax.Array,            # (B, M, Hq, D) — k+1-row verify query block
+    k: jax.Array,            # (B, Lk, Hkv, D) cache (or PagedKV view)
+    v: jax.Array,
+    pos: jax.Array,          # (B,) int32 absolute position of q[:, 0]
+    *,
+    plan: Optional[LaunchPlan] = None,
+    use_ctx_metadata: bool = True,
+    policy: str = _DEFAULT_POLICY,
+    num_cores: Optional[int] = None,
+    impl: str = "xla",
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Speculative-decoding verify attention: one planned launch scoring
+    a block of ``M = k + 1`` query rows per slot (the committed current
+    token + k drafts), causal *within* the block at the slot's traced
+    absolute offset, full prefix outside it.
+
+    Plans come from the same surfaces as :func:`decode_attention` — an
+    explicit frozen ``plan`` (the serving engine's
+    ``("verify", k, bucket)`` entries) or the ambient decode-family
+    scope; with neither, the split policy runs at trace time on the
+    M-row workload and counts as an in-dispatch policy evaluation.
+    The k-row query block scales ``num_m_blocks``, so the sequence-aware
+    policy sees the occupancy shift speculation buys — that is the
+    planning-side point of the verify kind.
+
+    ``pos`` is traced (per-slot offsets differ in a lockstep batch), so
+    the pallas/seqpar impls — which need static offsets — fall back to
+    the xla reference, mirroring ``attention_suffix_prefill``.
+    """
+    k = _resolve_paged(k)
+    v = _resolve_paged(v)
+    scope = current_plan("decode")
+    if (plan is None or not plan.frozen) and use_ctx_metadata \
+            and scope is not None and scope.frozen:
+        plan = scope
+
+    B, M, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    if plan is not None and plan.impl is not None:
+        impl = plan.impl
+    if plan is None or not plan.frozen:
+        global _POLICY_EVALS, _LAST_INLINE
+        _POLICY_EVALS += 1
+        pol, cores = _resolve_policy(scope, plan, policy, num_cores)
+        kwargs = {} if cores is None else {"num_cores": cores}
+        plan = get_scheduler_metadata(B, M, Lk, Hq, Hkv, D, policy=pol,
+                                      **kwargs)
+        _LAST_INLINE = plan
+    s = max(1, min(plan.num_splits, Lk))
+    if impl in ("pallas", "seqpar"):
+        impl = "xla"                     # traced per-slot offsets
+    if impl == "naive":
+        tv = pos.astype(jnp.int32)
+        lens = tv[:, None] + jnp.arange(M, dtype=jnp.int32)[None, :] + 1
+
+        def row(qj, lenj):
+            return ref.naive_decode_attention(
+                qj, k, v, jnp.clip(lenj, 1, Lk), scale=scale)
+
+        return jax.vmap(row, in_axes=(1, 1), out_axes=1)(q, lens)
+    return ref.verify_decode_xla(q, k, v, pos, s, scale=scale)
+
+
 def decode_attention_update(
     q: jax.Array,            # (B, Hq, Dq) — new token's queries (UNscaled)
     cache_k: jax.Array,      # (B, L, Hkv, Dk)

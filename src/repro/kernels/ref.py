@@ -251,3 +251,34 @@ def split_decode_xla(
     )(kc, vc, valid)
     out = lse_combine(accs, ls, ms)                              # (B,Hkv,g,Dv)
     return out.reshape(B, Hq, Dv).astype(q.dtype)
+
+
+def verify_decode_xla(
+    q: jax.Array,          # (B, M, Hq, D) — k+1-row verify query block
+    k: jax.Array,          # (B, Lk, Hkv, D) padded cache (block written)
+    v: jax.Array,
+    pos: jax.Array,        # (B,) int32 — absolute position of q[:, 0]
+    num_splits: int,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Speculative-verify attention: split-KV decode per query row.
+
+    Query row ``j`` of slot ``b`` sits at absolute position
+    ``pos[b] + j`` and attends keys ``<= pos[b] + j`` — causal *within*
+    the block, full-prefix outside it.  Computed as a vmap of
+    :func:`split_decode_xla` over the row axis with per-row
+    ``kv_len = pos + j + 1``, so every row reduces with exactly the
+    schedule (and float accumulation order) of the single-row decode
+    path it replaces, just with the verify plan's split count.
+    """
+    B, M, Hq, D = q.shape
+    Lk = k.shape[1]
+
+    def row(qj: jax.Array, j: jax.Array) -> jax.Array:
+        lenj = jnp.clip(pos.astype(jnp.int32) + j + 1, 1, Lk)
+        return split_decode_xla(qj, k, v, lenj, num_splits, scale=scale)
+
+    out = jax.vmap(row, in_axes=(1, 0), out_axes=1)(
+        q, jnp.arange(M, dtype=jnp.int32))
+    return out                                                   # (B,M,Hq,Dv)

@@ -42,6 +42,8 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 sampler: str = "categorical",
                 prefill_mode: str = "auto", stream: bool = False,
                 cache_layout: str = "dense", share_prefix: bool = False,
+                speculate=None, speculate_k: int = 4,
+                speculate_max_rejects=None,
                 tune_table=None, stats_path=None, log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
@@ -58,6 +60,9 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                     prefill_mode=prefill_mode,
                     cache_layout=cache_layout,
                     share_prefix=share_prefix,
+                    speculation=speculate,
+                    speculation_k=speculate_k,
+                    speculation_max_rejects=speculate_max_rejects,
                     tune_table_path=(str(tune_table) if tune_table
                                      else None),
                     stats_path=(str(stats_path) if stats_path else None)),
@@ -123,6 +128,15 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
     if engine.prefill_mode == "fused":
         log_fn("fused prefill buckets: "
                f"{engine.planned_prefill_buckets()}")
+    if speculate:
+        st = engine.stats
+        log_fn(f"speculation ({speculate}, k={speculate_k}): "
+               f"{st.spec_steps} verify steps, acceptance "
+               f"{st.spec_acceptance_rate:.2f} "
+               f"({st.spec_accepted}/{st.spec_proposed} drafts), "
+               f"{st.spec_tokens_per_step:.2f} tokens/step, "
+               f"{st.spec_disabled} requests disabled; verify plans "
+               f"{engine.sched.planned_verify_keys()}")
     assert len(handles) == len(outs)
     return outs
 
@@ -166,6 +180,15 @@ def main() -> None:
                     help="share identical prompt prefixes across "
                          "requests (refcounted copy-on-write pages; "
                          "requires --cache-layout paged)")
+    ap.add_argument("--speculate", default=None,
+                    help="speculative decoding: drafter registry name "
+                         "(ngram | prompt_lookup; extensible via "
+                         "repro.spec.register_drafter)")
+    ap.add_argument("--speculate-k", type=int, default=4,
+                    help="draft tokens per verify step (with --speculate)")
+    ap.add_argument("--speculate-max-rejects", type=int, default=None,
+                    help="consecutive zero-accept verify steps before a "
+                         "request stops speculating (default: never)")
     ap.add_argument("--stream", action="store_true",
                     help="print TOKEN/FINISHED events as they happen")
     args = ap.parse_args()
@@ -178,6 +201,9 @@ def main() -> None:
                 prefill_mode=args.prefill, stream=args.stream,
                 cache_layout=args.cache_layout,
                 share_prefix=args.share_prefix,
+                speculate=args.speculate,
+                speculate_k=args.speculate_k,
+                speculate_max_rejects=args.speculate_max_rejects,
                 tune_table=args.tune_table, stats_path=args.stats_path)
 
 

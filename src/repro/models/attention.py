@@ -401,3 +401,68 @@ def attention_decode(
         cache = {"k": ck, "v": cv}
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
     return y[:, None], cache
+
+
+def _place_rows_at(old: jax.Array, new: jax.Array,
+                   start: jax.Array) -> jax.Array:
+    """Per-slot variant of :func:`_place_rows`: write ``new`` (B, M, ...)
+    into ``old`` (B, V, ...) at PER-SLOT row offsets ``start`` (B,).
+    Lockstep verify batches place each slot's k+1 fresh K/V rows at that
+    slot's own position, so the offset is a vector, not a scalar."""
+    B, V = old.shape[:2]
+    M = new.shape[1]
+    idx = jnp.arange(V)[None, :]                         # (1, V)
+    st = start.astype(jnp.int32)[:, None]                # (B, 1)
+    src = jnp.clip(idx - st, 0, M - 1)                   # (B, V)
+    mask = (idx >= st) & (idx < st + M)
+    src = src.reshape((B, V) + (1,) * (old.ndim - 2))
+    moved = jnp.take_along_axis(new, src, axis=1)
+    mask = mask.reshape((B, V) + (1,) * (old.ndim - 2))
+    return jnp.where(mask, moved.astype(old.dtype), old)
+
+
+def attention_verify(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                       # (B, M, d) — current token + drafts
+    cache: Dict[str, jax.Array],
+    t: jax.Array,                       # (B,) int32: each slot's position
+    *,
+    plan: Optional[LaunchPlan] = None,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Speculative-verify attention step: score an ``M = k + 1``-row
+    query block per slot in one planned launch.
+
+    Rows land in the cache at [t, t + M) via masked per-slot placement
+    (the k-row analogue of the suffix-prefill write); queries attend
+    causal-within-block at the slot's absolute offset through
+    :func:`ops.verify_attention`, which consumes the frozen
+    ``("verify", k, bucket)`` plan.  The caller commits only accepted
+    rows (paged write-back masks pages past the accept point; dense
+    rollback is the host-side ``kv_len`` truncate) — rejected rows stay
+    as garbage above ``kv_len``, the repo-wide masking invariant.
+    """
+    B, M, _ = x.shape
+    tv = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    positions = tv[:, None] + jnp.arange(M, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    if "k_s" in cache:                      # int8 KV cache
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        cache = {"k": _place_rows_at(cache["k"], kq, tv),
+                 "v": _place_rows_at(cache["v"], vq, tv),
+                 "k_s": _place_rows_at(cache["k_s"], ks, tv),
+                 "v_s": _place_rows_at(cache["v_s"], vs, tv)}
+        kf = dequantize_kv(cache["k"], cache["k_s"])
+        vf = dequantize_kv(cache["v"], cache["v_s"])
+    else:
+        cache = {"k": _place_rows_at(cache["k"], k_new, tv),
+                 "v": _place_rows_at(cache["v"], v_new, tv)}
+        kf, vf = cache["k"], cache["v"]
+    out = ops.verify_attention(q, kf.astype(q.dtype), vf.astype(q.dtype),
+                               tv, plan=plan,
+                               impl=impl or cfg.attention_impl)
+    y = jnp.einsum("bmhk,hkd->bmd", out, params["wo"])
+    return y, cache

@@ -631,3 +631,81 @@ def lm_decode_step(
     logits = unembed(params["embed"], x)[:, 0]           # (B, vocab)
     logits = shard_activation(logits, ("batch", "vocab"))
     return logits, tuple(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify step (repro.spec)
+# ---------------------------------------------------------------------------
+
+
+def block_verify(params, cfg: ModelConfig, x: jax.Array,
+                 cache: Pytree, t: jax.Array, *,
+                 plan=None) -> Tuple[jax.Array, Pytree]:
+    """One full-attention block over an M-row verify block. x: (B, M, d).
+
+    Only ``attn`` blocks exist here — the registry gates speculation to
+    uniform full-attention families, the same restriction as prefix
+    sharing: windowed ring caches and recurrent state cannot roll back
+    rejected rows by truncating ``kv_len``.
+    """
+    h = apply_norm(params["ln1"], x, cfg.norm_eps)
+    mix, cache = attn_mod.attention_verify(params["mix"], cfg, h, cache, t,
+                                           plan=plan)
+    x = x + mix
+    if _has_mlp(cfg, "attn"):
+        h2 = apply_norm(params["ln2"], x, cfg.norm_eps)
+        y, _ = _apply_ffn(params["ffn"], cfg, h2)
+        x = x + y
+    return x, cache
+
+
+def lm_verify_step(
+    params: Pytree,
+    cfg: ModelConfig,
+    caches: Tuple[Pytree, ...],
+    tokens: jax.Array,                  # (B, M) int32 — current + drafts
+    t: jax.Array,                       # (B,) int32 — each slot's position
+    *,
+    plan=None,
+) -> Tuple[jax.Array, Tuple[Pytree, ...]]:
+    """Speculative verify: score M = k + 1 rows per slot in one launch.
+
+    The multi-token sibling of :func:`lm_decode_step`: ``tokens[:, 0]``
+    is each slot's committed current token, ``tokens[:, 1:]`` the k
+    drafts, and row ``j`` of the returned logits (B, M, vocab) is the
+    model's next-token distribution after feeding rows [0, j] — the
+    teacher-forced scores batched accept/reject consumes.  Every
+    attention block attends causal-within-block at the slot's own
+    offset through the frozen ``("verify", k, bucket)`` plan.
+    """
+    x = embed_tokens(params["embed"], tokens)            # (B, M, d)
+    x = shard_activation(x, _ACT)
+
+    new_caches = []
+    for gi, (pattern, reps) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        gc = caches[gi]
+        assert pattern == ("attn",), \
+            f"verify step supports uniform attn stacks, got {pattern}"
+
+        def body(xc, scanned):
+            layer_params, layer_cache = scanned
+            xc = shard_activation(xc, _ACT)
+            xc, c = block_verify(layer_params[0], cfg, xc, layer_cache[0],
+                                 t, plan=plan)
+            return shard_activation(xc, _ACT), (c,)
+
+        if cfg.scan_layers:
+            x, nc = jax.lax.scan(body, x, (gp, gc))
+        else:
+            outs = []
+            for r in range(reps):
+                x, c = body(x, jax.tree.map(lambda a: a[r], (gp, gc)))
+                outs.append(c)
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_caches.append(nc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)                 # (B, M, vocab)
+    logits = shard_activation(logits, ("batch", None, "vocab"))
+    return logits, tuple(new_caches)

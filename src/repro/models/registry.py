@@ -280,6 +280,42 @@ class Model:
         return lm_mod.lm_decode_step(params, cfg, caches, token, t,
                                      plan=plan)
 
+    @property
+    def supports_speculation(self) -> bool:
+        """Whether the engine may run speculative verify steps
+        (``SamplingParams.speculation``) against this family.  Like the
+        prefix-sharing gate: needs a uniform full-attention stack whose
+        per-layer cache is the standard k/v dict the multi-row verify
+        placement writes, and whose rejected rows roll back by
+        truncating ``kv_len`` — recurrent families (ssm / hybrid) carry
+        per-token state a rollback cannot rewind, windowed ring caches
+        lose overwritten rows, encdec adds the cross column, and mla's
+        split latent caches aren't covered by
+        :func:`repro.models.lm.block_verify` yet."""
+        return (self.cfg.family in ("dense", "moe")
+                and self.cfg.frontend.kind == "none")
+
+    def verify_step(self, params: Pytree, caches: Pytree,
+                    tokens: jax.Array, t: jax.Array, *, plan=None
+                    ) -> Tuple[jax.Array, Pytree]:
+        """Speculative verify: score an (B, M = k + 1)-token block per
+        slot — each slot's committed current token plus its k draft
+        tokens at positions [t, t + M) — in ONE planned launch.
+
+        Returns (logits (B, M, vocab) f32, updated caches): logits row
+        ``j`` is the next-token distribution after feeding rows
+        [0, j], the teacher-forced scores that batched accept/reject
+        (``Sampler.verify``) consumes.  ``plan`` is the frozen
+        ``("verify", k, bucket)`` :class:`~repro.plan.LaunchPlan`.
+        """
+        if not self.supports_speculation:
+            raise NotImplementedError(
+                f"{self.cfg.family} models cannot run speculative verify "
+                "steps (needs a uniform full-attention stack with "
+                "truncation-rollbackable caches)")
+        return lm_mod.lm_verify_step(params, self.cfg, caches, tokens, t,
+                                     plan=plan)
+
     # --- frontend stubs ---------------------------------------------------------
 
     def frontend_inputs(self, batch: int, seq_len: int

@@ -68,10 +68,33 @@ class PlanCacheStats:
     measured_fallbacks: int = 0
     # (batch, Hq, Hkv, head_dim, impl, dtype_bytes, L_K) per fallback
     measured_fallback_trace: List[tuple] = field(default_factory=list)
+    # speculative decoding (repro.spec): one spec_step per verify launch;
+    # proposed/accepted count draft tokens, emitted counts everything the
+    # verify steps contributed (accepted drafts + correction/bonus rows).
+    spec_steps: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_emitted: int = 0
+    spec_disabled: int = 0   # requests that hit SpecConfig.max_rejects
 
     @property
     def total_launches(self) -> int:
         return self.hits + self.misses
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens that verified (0.0 when no
+        drafts were ever proposed)."""
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
+
+    @property
+    def spec_tokens_per_step(self) -> float:
+        """Effective tokens per verify step (> 1.0 means speculation is
+        beating one-token-per-launch decode; 0.0 when no verify steps
+        ran)."""
+        return (self.spec_emitted / self.spec_steps
+                if self.spec_steps else 0.0)
 
     @property
     def distinct_buckets(self) -> int:
@@ -111,6 +134,22 @@ class PlanCacheStats:
             self.measured_fallback_trace.append(tuple(key))
             self._trim(self.measured_fallback_trace)
 
+    def record_spec_step(self, proposed: int, accepted: int,
+                         emitted: int) -> None:
+        """One speculative verify launch: ``proposed`` draft tokens went
+        in across all drafting slots, ``accepted`` survived the batched
+        accept/reject, ``emitted`` tokens came out (accepted drafts plus
+        one correction/bonus token per generating slot)."""
+        self.spec_steps += 1
+        self.spec_proposed += int(proposed)
+        self.spec_accepted += int(accepted)
+        self.spec_emitted += int(emitted)
+
+    def record_spec_disabled(self) -> None:
+        """One request gave up on speculation (max_rejects consecutive
+        zero-accept verify steps)."""
+        self.spec_disabled += 1
+
     def to_json(self) -> Dict[str, Any]:
         """JSON-safe snapshot of every counter (tuple keys flattened to
         ``"a/b"`` strings).  ``ServingEngine.drain`` dumps this when
@@ -132,6 +171,13 @@ class PlanCacheStats:
             "measured_fallbacks": self.measured_fallbacks,
             "measured_fallback_trace": [
                 list(t) for t in self.measured_fallback_trace],
+            "spec_steps": self.spec_steps,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "spec_disabled": self.spec_disabled,
+            "spec_acceptance_rate": round(self.spec_acceptance_rate, 4),
+            "spec_tokens_per_step": round(self.spec_tokens_per_step, 4),
         }
 
     def reset(self) -> None:
@@ -145,6 +191,11 @@ class PlanCacheStats:
         self.measured_lookups = 0
         self.measured_fallbacks = 0
         self.measured_fallback_trace.clear()
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.spec_disabled = 0
 
 
 class PlanCache:

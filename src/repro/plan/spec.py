@@ -15,8 +15,11 @@ from repro.core.split_policy import KV_BLOCK, DecodeWorkload
 # The launch kinds the planner understands.  ``decode`` and
 # ``decode_update`` share one decision surface (the paper's split-KV
 # policy); ``cross`` is decode against a fixed encoder memory (same
-# policy, different L_K); ``prefill`` never splits KV.
-KINDS = ("decode", "decode_update", "prefill", "cross")
+# policy, different L_K); ``prefill`` never splits KV; ``verify`` is the
+# speculative-decoding verify step — decode with a k-row query block
+# (seqlen_q = draft length + 1), same split policy over a workload whose
+# ``num_m_blocks`` scales with the query rows.
+KINDS = ("decode", "decode_update", "prefill", "cross", "verify")
 
 
 def bucket_seqlen(seqlen_k: int, bucket: int = KV_BLOCK) -> int:
@@ -103,6 +106,19 @@ class AttentionSpec:
         spec still flows through the Planner so the launch is planned,
         cached and counted like any other."""
         return cls("prefill", batch, seqlen, seqlen, num_heads_q,
+                   num_heads_kv, head_dim, **kw)
+
+    @classmethod
+    def verify(cls, batch: int, seqlen_q: int, seqlen_k: int,
+               num_heads_q: int, num_heads_kv: int, head_dim: int = 128,
+               **kw) -> "AttentionSpec":
+        """Speculative-decoding verify step: a ``seqlen_q``-row query
+        block (the committed current token + k drafts) against the KV
+        cache, causal *within* the block at the slot's absolute offset.
+        Splits are planned by the same sequence-aware policy as decode —
+        the k-row block shifts ``num_m_blocks`` and hence the occupancy
+        picture, which is the planning-side point of speculation."""
+        return cls("verify", batch, seqlen_q, seqlen_k, num_heads_q,
                    num_heads_kv, head_dim, **kw)
 
     @classmethod

@@ -73,6 +73,27 @@ evaluated at trace time on the PADDED cache length; each such launch
 records the resident summary it actually covered in
 ``PlanCacheStats.fallback_trace`` so A/Bs can attribute it.
 
+Speculative decoding (repro.spec)
+---------------------------------
+A request opting in via ``SamplingParams.speculation`` (or an engine-
+wide ``ServeConfig.speculation`` default) decodes through planned
+**verify** launches instead of 1-token decode launches: a host-side
+:class:`~repro.spec.Drafter` proposes up to ``k`` draft tokens from the
+slot's own token history, the model scores the slot's current token
+plus all drafts in ONE ``kind="verify"`` launch (planned and frozen
+under ``("verify", k, bucket)`` keys in the same PlanCache), and the
+sampler accepts the longest valid draft prefix *inside the jitted step*
+(argmax match for greedy; standard rejection sampling for sampled
+rows).  Accepted rows commit to the paged cache via an accept-masked
+multi-row write-back (``PagedKVCache.write_rows``); rejected rows die
+by rolling ``kv_len`` back (``CacheManager.truncate``) — pages are
+never freed mid-request, so page conservation holds under any
+accept/reject interleaving.  Greedy speculative output is bit-identical
+to plain greedy decode by construction of the acceptance rule.
+``PlanCacheStats`` carries acceptance-rate / effective-tokens-per-step
+counters; ``SpecConfig.max_rejects`` consecutive zero-accept steps
+disable speculation for that request (counted in ``spec_disabled``).
+
 :class:`DecodeEngine` is the legacy batch-synchronous facade
 (``generate(requests) -> completions``): a thin wrapper pinned to
 ``prefill_mode="loop"``, bit-identical to the pre-redesign engine for
@@ -112,6 +133,7 @@ from repro.serving.scheduler import (
     Scheduler,
     SlotState,
 )
+from repro.spec import Drafter, SpecConfig, get_drafter
 
 Pytree = Any
 
@@ -245,6 +267,18 @@ class ServingEngine:
         # pre-redesign engine (whose arrays behaved the same way)
         self._pos = np.zeros(self.B, np.int32)
         self._next_token = np.zeros(self.B, np.int32)
+
+        # engine-wide speculation default (per-request SamplingParams
+        # wins); per-slot drafter instances + disable bookkeeping
+        self._default_spec: Optional[SpecConfig] = None
+        if scfg.speculation:
+            self._default_spec = SpecConfig(
+                method=scfg.speculation, k=scfg.speculation_k,
+                max_rejects=scfg.speculation_max_rejects)
+            self._check_speculation(self._default_spec, "ServeConfig")
+        self._spec_cfg: List[Optional[SpecConfig]] = [None] * self.B
+        self._drafters: List[Optional[Drafter]] = [None] * self.B
+        self._spec_rejects = [0] * self.B
 
         self._next_handle = 0
         self._queues: Dict[int, Deque[Event]] = {}
@@ -389,6 +423,36 @@ class ServingEngine:
         storage = lay.write_slot(storage, view, table, slot, num_pages)
         return tok[0], storage
 
+    def _verify_impl(self, params, caches, tokens, t, dlen, state,
+                     plan: Optional[LaunchPlan] = None):
+        """Speculative verify over the dense cache: score (B, M = K+1)
+        token rows in one planned launch, accept/reject in-batch.
+        ``dlen`` (B,) is each slot's TRUE draft count — ``accepted`` is
+        clamped by it so mixed-k padding rows never commit."""
+        logits, caches = self.model.verify_step(
+            params, caches, tokens, t, plan=plan)
+        toks, acc = self.sampler.verify(logits, tokens[:, 1:], state, t)
+        acc = jnp.minimum(acc, dlen)
+        return toks, acc, caches
+
+    def _verify_paged_impl(self, params, storage, tokens, t, dlen, state,
+                           table, plan: Optional[LaunchPlan] = None,
+                           num_pages: int = 1):
+        """Paged verify: gather the resident view, score the K+1-row
+        block, then commit ONLY the pages overlapping each slot's
+        accepted rows ``[t, t + accepted + 1)`` — rejected draft rows
+        never reach storage (their span pages are redirected to the
+        trash page inside the jitted step)."""
+        lay = self.cache.layout
+        view = lay.gather_view(storage, table, num_pages)
+        logits, view = self.model.verify_step(
+            params, view, tokens, t, plan=plan)
+        toks, acc = self.sampler.verify(logits, tokens[:, 1:], state, t)
+        acc = jnp.minimum(acc, dlen)
+        storage = lay.write_rows(storage, view, table, t, acc + 1,
+                                 tokens.shape[1], num_pages)
+        return toks, acc, storage
+
     def _copy_page_impl(self, storage, src, dst):
         return self.cache.layout.copy_page(storage, src, dst)
 
@@ -439,6 +503,16 @@ class ServingEngine:
         return jax.jit(functools.partial(self._prefill_impl, plan=plan),
                        donate_argnums=(1,))
 
+    def _build_verify(self, plan: LaunchPlan):
+        if self.cache.is_paged:
+            return jax.jit(
+                functools.partial(self._verify_paged_impl, plan=plan,
+                                  num_pages=self.cache.spec.view_pages(
+                                      plan.bucket)),
+                donate_argnums=(1,))
+        return jax.jit(functools.partial(self._verify_impl, plan=plan),
+                       donate_argnums=(1,))
+
     def _build_suffix_prefill(self, plan: LaunchPlan):
         # plan.bucket is the VIEW bucket (whole resident prompt): the
         # gather must span prefix + suffix, like decode's resident view
@@ -450,10 +524,34 @@ class ServingEngine:
 
     # --- request lifecycle --------------------------------------------------
 
+    def _check_speculation(self, spec: SpecConfig, who: str) -> None:
+        """Shared submit-time / engine-default speculation gate: the
+        drafter name must resolve, the family must support multi-row
+        verify + kv_len rollback, and the verify launch is planned —
+        it cannot ride the internal-heuristic fallback."""
+        try:
+            get_drafter(spec.method)
+        except KeyError as e:
+            raise ValueError(f"{who}: {e.args[0]}") from None
+        if not self.model.supports_speculation:
+            raise ValueError(
+                f"{who}: {self.cfg.family} models cannot run speculative "
+                "verify steps (needs a uniform full-attention stack over "
+                "the standard k/v cache; see Model.supports_speculation)")
+        if not self.use_metadata:
+            raise ValueError(
+                f"{who}: speculative decoding rides the metadata-enabled "
+                "plan path (verify launches are planned under "
+                "('verify', k, bucket) keys); set "
+                "use_scheduler_metadata=True or drop the speculation knob")
+
     def validate(self, req: Request) -> None:
         """Raise on requests that could never run (no state mutated)."""
         self.sched.validate(req)
         self.sampler.check(req.sampling)
+        spec = req.sampling.speculation or self._default_spec
+        if spec is not None:
+            self._check_speculation(spec, f"request {req.request_id}")
         if self.cache.is_paged:
             # +1: the request must also fit its FIRST decode-token row.
             # A prompt whose pages exactly fill the pool would admit,
@@ -594,6 +692,10 @@ class ServingEngine:
                 st.request.sampling).items():
             self._state[name][i] = value
         self._state_dev = None                  # row dirtied: re-upload
+        spec = st.request.sampling.speculation or self._default_spec
+        self._spec_cfg[i] = spec
+        self._drafters[i] = get_drafter(spec.method)() if spec else None
+        self._spec_rejects[i] = 0
         if self.prefill_mode == "fused":
             self._admit_fused(i, st, events, shared)
         else:
@@ -648,6 +750,13 @@ class ServingEngine:
         self._emit_token(i, st, int(tok), events)
 
     def _decode_launch(self, live, events: List[Event]) -> None:
+        drafts = self._collect_drafts(live)
+        if drafts:
+            self._verify_launch(live, drafts, events)
+        else:
+            self._plain_launch(live, events)
+
+    def _plain_launch(self, live, events: List[Event]) -> None:
         if self.cache.is_paged:
             # every live slot is about to write row _pos[i]: allocate its
             # page now, and finish (only) the requests whose allocation
@@ -686,6 +795,137 @@ class ServingEngine:
         out = np.asarray(out)
         for i, st in live:
             self._advance(i, st, int(out[i]), events)
+
+    # --- speculative verify launch ------------------------------------------
+
+    def _collect_drafts(self, live) -> Dict[int, List[int]]:
+        """Ask each speculating slot's drafter for draft tokens.
+
+        Only slots that are past their prompt, still enabled, and with
+        generation budget left get to draft; everything else rides the
+        launch as a 1-token row.  Returns only NON-empty drafts — an
+        empty dict means this step is a plain decode launch."""
+        drafts: Dict[int, List[int]] = {}
+        for i, st in live:
+            spec, drafter = self._spec_cfg[i], self._drafters[i]
+            if spec is None or drafter is None or st.prompt_left:
+                continue
+            # a draft row past the request's remaining budget could
+            # never emit — don't pay to verify it.  The cache-wall bound
+            # is one stricter than decode's (max_len - 2): the whole
+            # accepted run must land strictly below the capacity-finish
+            # position, else a multi-token emit would hit the wall after
+            # FEWER tokens than sequential decode (the wall check reads
+            # the already-advanced position) — breaking bit-equality
+            budget = st.request.max_new_tokens \
+                - len(st.completion.tokens) - 1
+            room = self.max_len - 2 - int(self._pos[i])
+            k = min(spec.k, budget, room)
+            if k < 1:
+                continue
+            history = st.completion.prompt + st.completion.tokens
+            d = list(drafter.propose(history, k))[:k]
+            if d:
+                drafts[i] = d
+        return drafts
+
+    def _verify_launch(self, live, drafts: Dict[int, List[int]],
+                       events: List[Event]) -> None:
+        """One planned verify launch: every live slot rides (lockstep),
+        speculating slots carry their drafts, the rest take 1-token
+        rows (``dlen = 0`` — behaviorally a decode row)."""
+        if self.cache.is_paged:
+            # each slot writes rows [pos, pos + dlen]: allocate row pos
+            # like decode (failure finishes the request), then extend
+            # page-by-page for the draft rows, truncating the draft at
+            # the first row the pool cannot cover (speculation must not
+            # steal a page a plain decode step would have had)
+            for i, st in list(live):
+                p = int(self._pos[i])
+                if not self.cache.ensure(i, p):
+                    drafts.pop(i, None)
+                    self._finish_capacity(i, st, events)
+                    continue
+                d = drafts.get(i)
+                if not d:
+                    continue
+                kept = 0
+                while kept < len(d) and self.cache.ensure(i, p + kept + 1):
+                    kept += 1
+                drafts[i] = d[:kept]
+            live = self.sched.live()
+            if not live:
+                return
+            if self.share_prefix:
+                self._apply_copies()
+        K = max((len(drafts.get(i, [])) for i, _ in live), default=0)
+        if K == 0:                      # every draft culled: plain step
+            self._plain_launch(live, events)
+            return
+        toks = np.zeros((self.B, K + 1), np.int32)
+        dlen = np.zeros(self.B, np.int32)
+        toks[:, 0] = self._next_token
+        t_max = 0
+        for i, _ in live:
+            d = drafts.get(i, [])
+            dlen[i] = len(d)
+            toks[i, 1:1 + len(d)] = d
+            self.cache.note_write(i, int(self._pos[i]) + len(d))
+            t_max = max(t_max, int(self._pos[i]) + len(d))
+        entry = self.sched.verify_entry(K, t_max, self._build_verify)
+        if self._state_dev is None:
+            self._state_dev = {k: jnp.asarray(v)
+                               for k, v in self._state.items()}
+        args = (self._params, self._caches, jnp.asarray(toks),
+                jnp.asarray(self._pos), jnp.asarray(dlen),
+                self._state_dev)
+        if self.cache.is_paged:
+            args += (self.cache.table_device(),)
+        out, acc, self._caches = entry.step(*args)
+        out, acc = np.asarray(out), np.asarray(acc)
+        for i, st in live:
+            self._advance_verified(i, st, drafts.get(i, []),
+                                   int(acc[i]), out[i], events)
+
+    def _advance_verified(self, i: int, st: SlotState, d: List[int],
+                          a: int, row: np.ndarray,
+                          events: List[Event]) -> None:
+        """Post-verify bookkeeping for one slot: commit the accepted
+        positions, emit ``d[:a]`` plus the correction/bonus token, roll
+        ``kv_len`` back over the rejected rows, and run the
+        acceptance-rate / max_rejects accounting."""
+        st.completion.steps += 1
+        if st.prompt_left:              # loop-mode prefill rider
+            self._pos[i] += 1
+            self._next_token[i] = st.prompt_left.pop(0)
+            return
+        self._pos[i] += a + 1
+        self.cache.truncate(i, int(self._pos[i]))
+        emit = d[:a] + [int(row[a])]
+        emitted = 0
+        for tok in emit:
+            self._emit_token(i, st, tok, events)
+            emitted += 1
+            if st.completion.finish_reason is not None:
+                break
+        if not d:                       # non-speculating rider
+            return
+        spec = self._spec_cfg[i]
+        self.stats.record_spec_step(len(d), a, emitted)
+        drafter = self._drafters[i]
+        if drafter is not None:
+            drafter.observe(a, len(d))
+        if a == 0:
+            self._spec_rejects[i] += 1
+            if spec is not None and spec.max_rejects is not None \
+                    and self._spec_rejects[i] >= spec.max_rejects:
+                # this request's traffic doesn't draft well — stop
+                # paying for verify rows it keeps rejecting
+                self._spec_cfg[i] = None
+                self._drafters[i] = None
+                self.stats.record_spec_disabled()
+        else:
+            self._spec_rejects[i] = 0
 
     def _advance(self, i: int, st: SlotState, tok_out: int,
                  events: List[Event]) -> None:

@@ -21,11 +21,13 @@ pre-redesign engine's ``jnp.argmax`` path, which the legacy
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Tuple, Type
+from typing import Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.spec import SpecConfig
 
 Array = jax.Array
 # sampler state: one row per decode slot, threaded through the jit
@@ -40,12 +42,19 @@ class SamplingParams:
     ``top_p == 1.0`` disable the respective truncations.  ``stop`` is a
     tuple of token ids that end the request with
     ``finish_reason="stop"`` (the stop token itself is still emitted).
+
+    ``speculation`` opts the request into speculative decoding: a
+    :class:`repro.spec.SpecConfig` naming the drafter, draft length k,
+    and give-up threshold.  Validated at submit (drafter must exist in
+    the registry, the model family must pass
+    ``Model.supports_speculation``); ``None`` = plain decode.
     """
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
     stop: Tuple[int, ...] = ()
+    speculation: Optional[SpecConfig] = None
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -55,6 +64,11 @@ class SamplingParams:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.speculation is not None and \
+                not isinstance(self.speculation, SpecConfig):
+            raise TypeError(
+                "SamplingParams.speculation must be a repro.spec."
+                f"SpecConfig or None, got {type(self.speculation).__name__}")
 
 
 GREEDY = SamplingParams()
@@ -128,6 +142,34 @@ class Sampler:
         Runs at trace time inside the jitted decode/prefill step."""
         raise NotImplementedError
 
+    def verify(self, logits: Array, draft: Array, state: SamplerState,
+               pos: Array) -> Tuple[Array, Array]:
+        """Batched speculative accept/reject, inside the jitted step.
+
+        ``logits``: (B, M, V) teacher-forced verify scores — row ``j``
+        is the distribution of the token at absolute position
+        ``pos + j + 1``; ``draft``: (B, M - 1) proposed tokens for rows
+        0..M-2 (row M-1 is the bonus row when everything accepts);
+        ``pos``: (B,) absolute position of each slot's first fed row.
+
+        Returns ``(tokens (B, M) int32, accepted (B,) int32)``:
+        ``accepted`` is the longest accepted draft prefix, and
+        ``tokens[b, accepted[b]]`` is the correction/bonus token the
+        engine emits after the accepted drafts.  The engine clamps
+        ``accepted`` by each slot's true draft length (padding rows
+        must never commit).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement speculative "
+            "verify; use GreedySampler or CategoricalSampler for "
+            "requests with SamplingParams.speculation")
+
+
+def _accepted_prefix(accept_rows: Array) -> Array:
+    """(B, M-1) per-row accept bools -> (B,) longest-accepted-prefix."""
+    return jnp.sum(jnp.cumprod(accept_rows.astype(jnp.int32), axis=1),
+                   axis=1)
+
 
 class GreedySampler(Sampler):
     """Pure argmax — the cheapest jitted step (no vocab sorts / PRNG).
@@ -136,6 +178,16 @@ class GreedySampler(Sampler):
     def sample(self, logits: Array, state: SamplerState,
                pos: Array) -> Array:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def verify(self, logits: Array, draft: Array, state: SamplerState,
+               pos: Array) -> Tuple[Array, Array]:
+        """Longest-accepted-prefix: row j accepts iff the draft equals
+        the teacher-forced argmax, so the emitted stream is bit-identical
+        to sequential greedy decode by construction (the acceptance-rule
+        oracle the property test drives)."""
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, M)
+        accepted = _accepted_prefix(greedy[:, :-1] == draft)
+        return greedy, accepted.astype(jnp.int32)
 
     def check(self, sp: SamplingParams) -> None:
         if sp.temperature > 0 or sp.top_k > 0 or sp.top_p < 1.0:
@@ -164,6 +216,73 @@ class CategoricalSampler(Sampler):
                                             pos.astype(jnp.uint32))
         sampled = jax.vmap(jax.random.categorical)(keys, scaled)
         return jnp.where(temp <= 0.0, greedy, sampled.astype(jnp.int32))
+
+    def verify(self, logits: Array, draft: Array, state: SamplerState,
+               pos: Array) -> Tuple[Array, Array]:
+        """Standard rejection sampling against the teacher-forced target.
+
+        Our drafters propose deterministically (point-mass draft
+        distribution), so the textbook rule reduces to: accept draft
+        ``d`` at row ``j`` with probability ``p_j(d)`` (the masked,
+        temperature-scaled target probability); on rejection, resample
+        from the residual — ``p_j`` with ``d`` removed, renormalized —
+        which keeps every emitted token exactly target-distributed.
+
+        PRNG reuse: the per-row key is the request key folded with the
+        row's absolute position — the same derivation ``sample`` uses —
+        so the bonus row (all drafts accepted) draws the bit-identical
+        token sequential decode would have drawn at that position; the
+        accept coin and the residual draw fold in distinct tags so they
+        never reuse a stream.  Greedy rows (``temperature == 0``) take
+        the exact argmax-prefix rule instead.
+        """
+        B, M, V = logits.shape
+        temp = state["temperature"]                              # (B,)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, M)
+
+        scaled = logits.astype(jnp.float32) \
+            / jnp.maximum(temp, 1e-6)[:, None, None]
+        flat = scaled.reshape(B * M, V)
+        flat = _mask_top_k(flat, jnp.repeat(state["top_k"], M))
+        flat = _mask_top_p(flat, jnp.repeat(state["top_p"], M))
+        scaled = flat.reshape(B, M, V)
+
+        rows_pos = (pos[:, None].astype(jnp.uint32)
+                    + jnp.arange(M, dtype=jnp.uint32)[None, :])  # (B, M)
+        keys = jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))(
+            state["key"], rows_pos)                              # (B, M, 2)
+
+        # accept coin per draft row: u < p(draft)
+        probs = jax.nn.softmax(scaled, axis=-1)
+        p_draft = jnp.take_along_axis(
+            probs[:, :M - 1], draft[..., None], axis=-1)[..., 0]
+        coin_keys = jax.vmap(jax.vmap(
+            lambda kk: jax.random.fold_in(kk, jnp.uint32(0x5EC))))(
+                keys[:, :M - 1])
+        coin = jax.vmap(jax.vmap(jax.random.uniform))(coin_keys)
+        accept_rows = coin < p_draft                             # (B, M-1)
+
+        # correction token per draft row: residual = target minus the
+        # rejected point mass, renormalized (categorical over the
+        # draft-masked scaled logits)
+        onehot = jax.nn.one_hot(draft, V, dtype=bool)
+        resid = jnp.where(onehot, -jnp.inf, scaled[:, :M - 1])
+        res_keys = jax.vmap(jax.vmap(
+            lambda kk: jax.random.fold_in(kk, jnp.uint32(0x5ED))))(
+                keys[:, :M - 1])
+        res_tok = jax.vmap(jax.vmap(jax.random.categorical))(
+            res_keys, resid).astype(jnp.int32)
+        # bonus row: plain categorical with the UNsplit positional key —
+        # bit-identical to what sequential decode would draw there
+        bonus = jax.vmap(jax.random.categorical)(
+            keys[:, M - 1], scaled[:, M - 1]).astype(jnp.int32)
+        sampled = jnp.concatenate([res_tok, bonus[:, None]], axis=1)
+
+        g = temp[:, None] <= 0.0
+        tokens = jnp.where(g, greedy, sampled)
+        accept_rows = jnp.where(g, greedy[:, :M - 1] == draft, accept_rows)
+        accepted = _accepted_prefix(accept_rows)
+        return tokens, accepted.astype(jnp.int32)
 
 
 _SAMPLERS: Dict[str, Type[Sampler]] = {}

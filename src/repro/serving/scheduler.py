@@ -210,6 +210,38 @@ class Scheduler:
 
         return self.plans.get_or_build(bucket, miss)
 
+    # --- speculative verify planning ----------------------------------------
+
+    def verify_spec(self, k: int, bucket: int) -> AttentionSpec:
+        """The verify-kind spec: a ``k + 1``-row query block (current
+        token + k drafts) against the resident-length bucket."""
+        cfg = self.cfg
+        return AttentionSpec.verify(self.B, k + 1, bucket, cfg.num_heads,
+                                    self._kv_heads(),
+                                    cfg.resolved_head_dim,
+                                    quantized=self.kv_quantized,
+                                    layout=self.cache_layout)
+
+    def verify_entry(self, k: int, t_max: int,
+                     build: Callable[[LaunchPlan], Any]) -> PlanEntry:
+        """One planned, jitted verify specialization per
+        ``("verify", k, bucket)`` key, resident in the same PlanCache as
+        decode/prefill plans.  ``t_max`` is the max position of any row
+        the launch writes (each slot's position + its draft count), so
+        the bucket covers the speculative extent; the split decision
+        runs the same sequence-aware policy as decode, on the k+1-row
+        workload (``num_m_blocks`` scales with the query block — the
+        occupancy shift speculation buys)."""
+        bucket = self.decode_bucket(t_max)
+        key = ("verify", k, bucket)
+
+        def miss() -> PlanEntry:
+            plan = self.planner.plan(self.verify_spec(k, bucket),
+                                     bucket=bucket)
+            return PlanEntry(key, plan, build(plan))
+
+        return self.plans.get_or_build(key, miss)
+
     # --- prefill planning ---------------------------------------------------
 
     def prefill_len(self, prompt_len: int) -> int:
@@ -277,3 +309,8 @@ class Scheduler:
         """Resident suffix-prefill (view, suffix) bucket pairs (sorted)."""
         return sorted((k[1], k[2]) for k in self.plans.keys()
                       if isinstance(k, tuple) and k[0] == "sprefill")
+
+    def planned_verify_keys(self) -> List[Tuple[int, int]]:
+        """Resident verify-plan (k, bucket) pairs (sorted)."""
+        return sorted((k[1], k[2]) for k in self.plans.keys()
+                      if isinstance(k, tuple) and k[0] == "verify")

@@ -1,0 +1,41 @@
+"""``repro.spec`` — the speculative-decoding subsystem (SpecConfig ->
+Drafter -> VerifyOutcome).
+
+The fifth first-class subsystem, opening the workload class the ROADMAP
+names after TPOT: verify steps attend with per-slot query blocks of
+``k + 1 > 1`` tokens, raising decode arithmetic intensity and giving
+the paper's sequence-aware split policy a new planning regime.  Same
+spec -> resolver -> artifact design as ``repro.plan`` / ``repro.cache``
+/ ``repro.tune``:
+
+- :class:`SpecConfig`    — declarative per-request knob (drafter
+  ``method``, draft length ``k``, ``max_rejects`` give-up threshold),
+  carried on ``SamplingParams.speculation`` and validated at submit.
+- :class:`Drafter`       — the resolver: host-side token proposers over
+  each slot's prompt+emitted history.  Built-ins are self-speculative
+  (:class:`NGramDrafter`, :class:`PromptLookupDrafter`); the registry
+  (:func:`register_drafter`) is shaped so a draft-model backend slots
+  in under a new name with per-request state.
+- :class:`VerifyOutcome` — the artifact: per-slot accept/reject result
+  of one verify launch, aggregated into ``PlanCacheStats``
+  (``spec_acceptance_rate``, ``spec_tokens_per_step``).
+
+The verify launch itself is planned like everything else: a ``"verify"``
+:class:`~repro.plan.AttentionSpec` kind, frozen under
+``("verify", k, bucket)`` keys in the same :class:`~repro.plan.PlanCache`
+— k-row query blocks, causal-within-block masking, zero policy
+evaluations in dispatch — with batched accept/reject *inside* the
+jitted step (longest-accepted-prefix for greedy, standard rejection
+sampling on the per-request seeded PRNG for sampled requests) and a
+multi-token KV write-back that commits only accepted rows.
+"""
+from repro.spec.config import MAX_DRAFT_LEN, SpecConfig  # noqa: F401
+from repro.spec.drafter import (  # noqa: F401
+    Drafter,
+    NGramDrafter,
+    PromptLookupDrafter,
+    available_drafters,
+    get_drafter,
+    register_drafter,
+)
+from repro.spec.outcome import VerifyOutcome  # noqa: F401

@@ -1,0 +1,137 @@
+"""Drafters: the resolver half of ``repro.spec``.
+
+A :class:`Drafter` turns a slot's token history (prompt + everything
+emitted so far) into up to ``k`` *draft* tokens — guesses for the next
+tokens the model would emit — which the engine then scores in one
+planned verify launch and accepts/rejects in a batch.
+
+The built-ins are **self-speculative**: they propose continuations
+copied out of the request's own history (n-gram match / prompt lookup),
+so they cost zero model FLOPs and zero extra weights.  The interface is
+deliberately wider than they need — ``propose`` receives the full
+history and may return *fewer* than ``k`` tokens (including none) — so
+a draft-model backend can implement the same contract: run a small LM
+over ``history``, return its greedy continuation, register under a new
+name.  Nothing in the engine assumes drafts came from a lookup.
+
+Registry idiom mirrors ``repro.serving.sampling.register_sampler``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Type
+
+
+class Drafter:
+    """Base drafter: propose up to ``k`` draft tokens from a history.
+
+    One drafter instance is created per admitted request (so stateful
+    backends — a draft model carrying its own KV cache — can keep
+    per-request state across calls).  ``propose`` must be cheap: it runs
+    on the host inside the engine's step loop.
+    """
+
+    #: registry name (set by ``register_drafter``)
+    name: str = "base"
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        """Return 0..k draft tokens continuing ``history``.
+
+        ``history`` is the request's prompt followed by every token
+        emitted so far — exactly the token stream the model has been fed.
+        Returning ``[]`` skips speculation for this step (the slot takes
+        a plain 1-token row in the verify launch).
+        """
+        raise NotImplementedError
+
+    def observe(self, accepted: int, proposed: int) -> None:
+        """Feedback hook after each verify step (accepted of proposed).
+
+        Built-ins ignore it; adaptive drafters (e.g. a draft model
+        tuning its own k) can use it.  Must not raise.
+        """
+
+
+class NGramDrafter(Drafter):
+    """Self-speculative n-gram continuation over the full history.
+
+    Matches the trailing ``n-1``-gram of the history against earlier
+    occurrences (most recent first) and proposes the tokens that
+    followed the match.  Greedy decode loves to settle into repetitive
+    continuations — exactly the regime where copying history verifies.
+    """
+
+    name = "ngram"
+
+    def __init__(self, n: int = 3) -> None:
+        if n < 2:
+            raise ValueError(f"NGramDrafter needs n >= 2, got {n}")
+        self.n = int(n)
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        h = list(history)
+        m = self.n - 1
+        if len(h) <= m:
+            return []
+        key = tuple(h[-m:])
+        # most recent earlier occurrence of the trailing (n-1)-gram
+        for start in range(len(h) - m - 1, -1, -1):
+            if tuple(h[start:start + m]) == key:
+                cont = h[start + m:start + m + k]
+                return cont
+        return []
+
+
+class PromptLookupDrafter(Drafter):
+    """Prompt-lookup decoding: longest-suffix match, longest n first.
+
+    Tries trailing n-grams from ``max_ngram`` down to ``min_ngram``
+    against the history and copies the continuation of the most recent
+    match — the "prompt lookup" heuristic (good for summarize/extract
+    traffic where the output quotes its prompt), generalized over the
+    emitted tokens too.
+    """
+
+    name = "prompt_lookup"
+
+    def __init__(self, min_ngram: int = 1, max_ngram: int = 4) -> None:
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.min_ngram = int(min_ngram)
+        self.max_ngram = int(max_ngram)
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        h = list(history)
+        for m in range(min(self.max_ngram, len(h) - 1),
+                       self.min_ngram - 1, -1):
+            key = tuple(h[-m:])
+            for start in range(len(h) - m - 1, -1, -1):
+                if tuple(h[start:start + m]) == key:
+                    cont = h[start + m:start + m + k]
+                    if cont:
+                        return cont
+        return []
+
+
+_DRAFTERS: Dict[str, Type[Drafter]] = {}
+
+
+def register_drafter(name: str, cls: Type[Drafter]) -> None:
+    """Register a drafter class under ``name`` (draft-model backends
+    plug in here; ``SpecConfig.method`` selects by this name)."""
+    cls.name = name
+    _DRAFTERS[name] = cls
+
+
+def get_drafter(name: str) -> Type[Drafter]:
+    if name not in _DRAFTERS:
+        raise KeyError(
+            f"unknown drafter {name!r}; have {sorted(_DRAFTERS)}")
+    return _DRAFTERS[name]
+
+
+def available_drafters() -> List[str]:
+    return sorted(_DRAFTERS)
+
+
+register_drafter("ngram", NGramDrafter)
+register_drafter("prompt_lookup", PromptLookupDrafter)

@@ -1,0 +1,428 @@
+"""repro.spec — speculative decoding: drafters, SpecConfig/VerifyOutcome
+validation, the batched accept/reject rule (acceptance-rule oracle as a
+hypothesis property), engine-level greedy bit-identity with speculation
+on vs off, page conservation under reject-heavy interleavings, verify
+plan keys / PlanCacheStats counters, and submit-time validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.kernels import ops
+from repro.models import build_model
+from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving.sampling import CategoricalSampler, GreedySampler
+from repro.spec import (
+    Drafter,
+    NGramDrafter,
+    PromptLookupDrafter,
+    SpecConfig,
+    VerifyOutcome,
+    available_drafters,
+    get_drafter,
+    register_drafter,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class GarbageDrafter(Drafter):
+    """Adversarial drafter: always proposes out-of-distribution junk
+    (cycling tokens unrelated to the history) — the reject-heavy path."""
+
+    def propose(self, history, k):
+        n = len(history)
+        return [(n * 7 + j * 13) % 50 + 1 for j in range(k)]
+
+
+class OracleDrafter(Drafter):
+    """Replays a reference run's continuation per prompt — every draft
+    verifies (the acceptance upper bound, and the extension seam a real
+    draft-model backend would plug into)."""
+
+    script = {}                                  # prompt tuple -> tokens
+
+    def propose(self, history, k):
+        h = tuple(history)
+        for prompt, toks in self.script.items():
+            if h[:len(prompt)] == prompt:
+                done = len(h) - len(prompt)
+                return list(toks[done:done + k])
+        return []
+
+
+register_drafter("garbage", GarbageDrafter)
+register_drafter("test_oracle", OracleDrafter)
+
+
+# ---------------------------------------------------------------------------
+# config / outcome / drafter units
+# ---------------------------------------------------------------------------
+
+
+def test_spec_config_validates():
+    assert SpecConfig().k == 4
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(k=65)
+    with pytest.raises(ValueError):
+        SpecConfig(max_rejects=0)
+    with pytest.raises(ValueError):
+        SpecConfig(method="")
+    assert "ngram" in SpecConfig().describe()
+
+
+def test_verify_outcome_validates():
+    o = VerifyOutcome(slot=0, proposed=4, accepted=2, emitted=(1, 2, 3))
+    assert o.tokens_gained == 2
+    with pytest.raises(ValueError):
+        VerifyOutcome(slot=0, proposed=2, accepted=3, emitted=())
+
+
+def test_drafter_registry():
+    assert {"ngram", "prompt_lookup", "garbage"} <= set(
+        available_drafters())
+    assert get_drafter("ngram") is NGramDrafter
+    with pytest.raises(KeyError, match="unknown drafter"):
+        get_drafter("nope")
+    assert get_drafter("garbage")().name == "garbage"
+
+
+def test_ngram_drafter_copies_most_recent_continuation():
+    d = NGramDrafter(n=3)
+    #          0  1  2  3  4  5  6  7
+    h = [5, 6, 7, 9, 5, 6, 8, 5, 6]
+    # trailing bigram (5, 6) last recurred at index 4 -> continues 8, 5, 6
+    assert d.propose(h, 3) == [8, 5, 6]
+    assert d.propose(h, 1) == [8]
+    assert d.propose([1, 2], 4) == []          # history shorter than n
+    assert d.propose([1, 2, 3], 4) == []       # no earlier occurrence
+    with pytest.raises(ValueError):
+        NGramDrafter(n=1)
+
+
+def test_prompt_lookup_prefers_longest_suffix_match():
+    d = PromptLookupDrafter(min_ngram=1, max_ngram=3)
+    h = [1, 2, 3, 4, 9, 2, 3, 4]
+    # trailing 3-gram (2,3,4) matches at index 1 -> continues with 9
+    assert d.propose(h, 2) == [9, 2]
+    # falls back to shorter n-grams when long ones never recurred
+    assert d.propose([7, 8, 7], 1) == [8]
+    assert d.propose([4], 3) == []
+
+
+# ---------------------------------------------------------------------------
+# acceptance rule (hypothesis property): speculative greedy == sequential
+# ---------------------------------------------------------------------------
+
+_VOCAB = 16
+
+
+def _true_next(history):
+    """A deterministic stand-in language model: next token is a hash of
+    the last three tokens (repetitive enough that lookup drafters
+    sometimes verify, chaotic enough that they sometimes reject)."""
+    a, b, c = ([0, 0, 0] + list(history))[-3:]
+    return (a * 31 + b * 7 + c * 3 + 1) % _VOCAB
+
+
+def _onehot_logits(contexts):
+    """(M, V) greedy-argmax logits for each context's true next token."""
+    rows = np.full((len(contexts), _VOCAB), -5.0, np.float32)
+    for j, ctx in enumerate(contexts):
+        rows[j, _true_next(ctx)] = 5.0
+    return rows
+
+
+def _speculative_greedy(drafter, prompt, n, k):
+    """Emulate the engine's verify loop against the _true_next oracle,
+    accepting via the REAL GreedySampler.verify kernel."""
+    sampler = GreedySampler()
+    hist = list(prompt)
+    out = []
+    while len(out) < n:
+        draft = list(drafter.propose(hist, k))[:k]
+        m = len(draft) + 1
+        # row j scores position len(hist) + j given [hist, draft[:j]]
+        contexts = [hist + draft[:j] for j in range(m)]
+        logits = jnp.asarray(_onehot_logits(contexts))[None]
+        toks, acc = sampler.verify(
+            logits, jnp.asarray([draft], jnp.int32).reshape(1, m - 1),
+            {}, jnp.asarray([len(hist)], jnp.int32))
+        a = int(acc[0])
+        emit = draft[:a] + [int(np.asarray(toks)[0, a])]
+        for t in emit:
+            out.append(t)
+            hist.append(t)
+            if len(out) >= n:
+                break
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, _VOCAB - 1), min_size=3, max_size=12),
+       st.sampled_from(["ngram", "prompt_lookup", "garbage"]),
+       st.integers(1, 6))
+def test_property_speculative_greedy_is_bit_identical(prompt, name, k):
+    """For ANY drafter and ANY token history, the accept rule commits
+    exactly the tokens sequential greedy decode would emit."""
+    n = 12
+    hist = list(prompt)
+    sequential = []
+    for _ in range(n):
+        t = _true_next(hist)
+        sequential.append(t)
+        hist.append(t)
+    spec = _speculative_greedy(get_drafter(name)(), prompt, n, k)
+    assert spec == sequential
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 5))
+def test_property_accepted_is_longest_matching_prefix(k, agree):
+    """accepted == |common prefix(draft, argmax)| for crafted logits."""
+    agree = min(agree, k)
+    rng = np.random.default_rng(k * 10 + agree)
+    hist = rng.integers(0, _VOCAB, size=5).tolist()
+    contexts = [hist]
+    draft = []
+    for j in range(k):
+        true = _true_next(contexts[-1])
+        tok = true if j < agree else (true + 1) % _VOCAB
+        draft.append(tok)
+        contexts.append(contexts[-1] + [tok])
+    logits = jnp.asarray(_onehot_logits(contexts))[None]
+    _, acc = GreedySampler().verify(
+        logits, jnp.asarray([draft], jnp.int32), {},
+        jnp.asarray([len(hist)], jnp.int32))
+    assert int(acc[0]) == agree
+
+
+def test_categorical_verify_greedy_rows_match_greedy_sampler():
+    """temperature == 0 rows take the exact argmax-prefix rule, so the
+    two samplers agree bit-for-bit on greedy traffic."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(2, 4, _VOCAB)), jnp.float32)
+    draft = jnp.asarray(rng.integers(0, _VOCAB, size=(2, 3)), jnp.int32)
+    pos = jnp.asarray([5, 9], jnp.int32)
+    state = {"temperature": jnp.zeros(2, jnp.float32),
+             "top_k": jnp.zeros(2, jnp.int32),
+             "top_p": jnp.ones(2, jnp.float32),
+             "key": jnp.stack([jax.random.PRNGKey(i) for i in range(2)])}
+    tg, ag = GreedySampler().verify(logits, draft, {}, pos)
+    tc, ac = CategoricalSampler().verify(logits, draft, state, pos)
+    assert jnp.array_equal(tg, tc) and jnp.array_equal(ag, ac)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+_PROMPTS = [[5, 6, 7, 5, 6, 7, 5, 6], [1, 2, 3, 4, 1, 2, 3],
+            [9, 9, 8, 9, 9, 8, 9], [2, 4, 6, 8, 2, 4, 6, 8, 2]]
+
+
+def _drain(model, params, *, spec=None, layout="paged", max_new=16,
+           scfg_kw=None, prompts=_PROMPTS, slots=4, max_len=96,
+           sampling_kw=None):
+    eng = ServingEngine(
+        model, ServeConfig(model=model.cfg, cache_layout=layout,
+                           **(scfg_kw or {})),
+        max_len=max_len, batch_slots=slots)
+    eng.load(params)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new_tokens=max_new,
+                           sampling=SamplingParams(
+                               speculation=spec, **(sampling_kw or {}))))
+    outs = eng.drain()
+    return [c.tokens for c in outs], eng
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize("method", ["ngram", "prompt_lookup"])
+def test_engine_speculative_greedy_bit_identical(tiny_model, layout,
+                                                 method):
+    cfg, model, params = tiny_model
+    base, _ = _drain(model, params, layout=layout)
+    spec, eng = _drain(model, params, layout=layout,
+                       spec=SpecConfig(method=method, k=4))
+    assert spec == base
+    if eng.cache.is_paged:
+        eng.cache.check_conservation()
+
+
+def test_engine_verify_plans_and_stats(tiny_model):
+    cfg, model, params = tiny_model
+    ops.reset_policy_eval_count()
+    base, _ = _drain(model, params)
+    OracleDrafter.script = {tuple(p): t for p, t in zip(_PROMPTS, base)}
+    spec, eng = _drain(model, params,
+                       spec=SpecConfig(method="test_oracle", k=4))
+    assert spec == base
+    st = eng.stats
+    # oracle drafts always verify: real multi-token acceptance happened
+    assert st.spec_steps > 0 and st.spec_proposed > 0
+    assert st.spec_accepted == st.spec_proposed
+    assert st.spec_acceptance_rate == 1.0
+    assert st.spec_tokens_per_step > 1.0
+    # verify launches were planned and frozen under tuple keys in the
+    # SAME plan cache as decode/prefill entries
+    keys = eng.sched.planned_verify_keys()
+    assert keys and all(k >= 1 and b >= 1 for k, b in keys)
+    assert any(key[0] == "verify" for key in eng.sched.plans.keys()
+               if isinstance(key, tuple))
+    snap = st.to_json()
+    assert snap["spec_tokens_per_step"] > 1.0
+    assert any(k.startswith("verify/") for k in snap["launches"])
+    # the split policy never ran inside traced code
+    assert ops.policy_eval_count() == 0
+
+
+def test_engine_mixed_spec_and_plain_traffic(tiny_model):
+    """Speculating and non-speculating requests share lockstep verify
+    launches (plain slots ride as 1-token rows) without divergence."""
+    cfg, model, params = tiny_model
+    base, _ = _drain(model, params)
+    eng = ServingEngine(model, ServeConfig(model=cfg,
+                                           cache_layout="paged"),
+                        max_len=96, batch_slots=4)
+    eng.load(params)
+    for i, p in enumerate(_PROMPTS):
+        sp = SpecConfig(method="ngram", k=3) if i % 2 == 0 else None
+        eng.submit(Request(i, p, max_new_tokens=16,
+                           sampling=SamplingParams(speculation=sp)))
+    outs = eng.drain()
+    assert [c.tokens for c in outs] == base
+    eng.cache.check_conservation()
+
+
+def test_engine_loop_prefill_rides_verify_launches(tiny_model):
+    """prompt_left slots ride verify launches as teacher-forcing rows."""
+    cfg, model, params = tiny_model
+    base, _ = _drain(model, params, scfg_kw=dict(prefill_mode="loop"))
+    spec, eng = _drain(model, params, scfg_kw=dict(prefill_mode="loop"),
+                       spec=SpecConfig(method="ngram", k=3))
+    assert spec == base
+    eng.cache.check_conservation()
+
+
+def test_engine_default_speculation_from_serve_config(tiny_model):
+    cfg, model, params = tiny_model
+    base, _ = _drain(model, params)
+    spec, eng = _drain(model, params,
+                       scfg_kw=dict(speculation="ngram",
+                                    speculation_k=4))
+    assert spec == base
+    assert eng.stats.spec_steps > 0
+
+
+def test_reject_heavy_conservation_and_rollback(tiny_model):
+    """A drafter that always proposes junk forces the maximal
+    reject/rollback traffic — every verify step truncates kv_len back
+    over speculative rows — under a tight page budget that also forces
+    mid-draft allocation failure.  Page conservation must hold
+    throughout and tokens must still match plain decode bit-exact."""
+    cfg, model, params = tiny_model
+    kw = dict(scfg_kw=dict(cache_page_size=4, cache_page_budget=40),
+              max_len=48, max_new=10)
+    base, beng = _drain(model, params, **kw)
+    spec, eng = _drain(model, params,
+                       spec=SpecConfig(method="garbage", k=4), **kw)
+    assert spec == base
+    eng.cache.check_conservation()
+    st = eng.stats
+    assert st.spec_proposed > 0
+    assert st.spec_accepted < st.spec_proposed   # junk mostly rejects
+    # every request still finished for the same reasons as baseline
+    assert ([c.finish_reason for c in eng._completions.values()]
+            == [c.finish_reason for c in beng._completions.values()])
+
+
+def test_max_rejects_disables_speculation(tiny_model):
+    cfg, model, params = tiny_model
+    spec, eng = _drain(model, params,
+                       spec=SpecConfig(method="garbage", k=3,
+                                       max_rejects=2),
+                       max_new=12)
+    st = eng.stats
+    assert st.spec_disabled == len(_PROMPTS)
+    # after disabling, slots stop drafting: far fewer verify steps than
+    # a never-disabled garbage run would pay
+    assert st.spec_steps <= 3 * len(_PROMPTS)
+    base, _ = _drain(model, params, max_new=12)
+    assert spec == base
+
+
+def test_sampled_speculation_runs_and_conserves(tiny_model):
+    """Rejection sampling path: sampled speculative requests complete
+    with the right lengths and page accounting (distributional
+    equivalence is the design property; bit-equality is only a greedy
+    guarantee)."""
+    cfg, model, params = tiny_model
+    toks, eng = _drain(model, params,
+                       spec=SpecConfig(method="ngram", k=3),
+                       sampling_kw=dict(temperature=0.8, seed=7),
+                       max_new=12)
+    assert all(len(t) == 12 for t in toks)
+    eng.cache.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# submit-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_unknown_drafter(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServingEngine(model, ServeConfig(model=cfg), max_len=64,
+                        batch_slots=1)
+    eng.load(params)
+    with pytest.raises(ValueError, match="unknown drafter"):
+        eng.submit(Request(0, [1, 2], sampling=SamplingParams(
+            speculation=SpecConfig(method="nope"))))
+
+
+def test_sampling_params_speculation_type_checked():
+    with pytest.raises(TypeError, match="SpecConfig"):
+        SamplingParams(speculation="ngram")
+
+
+def test_submit_rejects_unsupported_family():
+    cfg = reduced_config("mamba2-780m", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    assert not model.supports_speculation
+    eng = ServingEngine(model, ServeConfig(model=cfg), max_len=64,
+                        batch_slots=1)
+    with pytest.raises(ValueError, match="supports_speculation"):
+        eng.validate(Request(0, [1, 2], sampling=SamplingParams(
+            speculation=SpecConfig())))
+
+
+def test_engine_default_speculation_validated_at_init(tiny_model):
+    cfg, model, params = tiny_model
+    with pytest.raises(ValueError, match="unknown drafter"):
+        ServingEngine(model, ServeConfig(model=cfg, speculation="nope"),
+                      max_len=64, batch_slots=1)
+    with pytest.raises(ValueError, match="metadata-enabled"):
+        ServingEngine(model,
+                      ServeConfig(model=cfg, speculation="ngram",
+                                  use_scheduler_metadata=False),
+                      max_len=64, batch_slots=1)
+
+
+def test_supports_speculation_gates():
+    for arch, ok in [("qwen2.5-3b", True), ("granite-moe-3b-a800m", True),
+                     ("mamba2-780m", False), ("recurrentgemma-9b", False),
+                     ("whisper-large-v3", False), ("minicpm3-4b", False)]:
+        cfg = reduced_config(arch, num_layers=2, d_model=32)
+        assert build_model(cfg).supports_speculation is ok, arch
