@@ -8,10 +8,11 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify verify-all bench golden plan-golden tune-golden \
-	serving-smoke cache-smoke prefix-smoke tune-smoke spec-smoke
+	serving-smoke cache-smoke prefix-smoke tune-smoke spec-smoke \
+	quant-smoke
 
 verify: plan-golden tune-golden serving-smoke cache-smoke prefix-smoke \
-	tune-smoke spec-smoke
+	tune-smoke spec-smoke quant-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 # seconds-scale serving A/B: fused-prefill admission must stay O(1)
@@ -37,6 +38,13 @@ prefix-smoke:
 # reject-heavy cell (structural counters, not timing)
 spec-smoke:
 	$(PY) -m benchmarks.spec_ab --smoke
+
+# seconds-scale quantized-KV A/B: fused int8 never modeled-slower than
+# dequant-then-attend, fused==unfused within per-dtype tolerance
+# (int8 + fp8, poisoned tails, dense + paged), int8 engine streams
+# identical across the serving matrix (structural, not timing)
+quant-smoke:
+	$(PY) -m benchmarks.quant_ab --smoke
 
 # seconds-scale tuning A/B: measured policy never slower than the
 # analytic policies on covered shapes, counted paper fallback elsewhere,

@@ -13,6 +13,7 @@ def main() -> None:
         cache_ab,
         metadata_ab,
         prefix_ab,
+        quant_ab,
         regression_sweep,
         roofline_report,
         serving_ab,
@@ -39,6 +40,8 @@ def main() -> None:
          tune_ab.main),
         ("spec_ab (speculative verify steps vs plain decode)",
          spec_ab.main),
+        ("quant_ab (fused quantized KV vs dequant-then-attend)",
+         quant_ab.main),
     ]
     failures = 0
     for name, fn in jobs:

@@ -271,6 +271,15 @@ class ServeConfig:
     # quantized K/V + f32 scales: ~2x less cache traffic, the dominant
     # decode roofline term (§Perf C.4)
     kv_cache_dtype: str = "bfloat16"
+    # repro.quant: the planned low-precision KV serving mode — a
+    # QUANT_DTYPES name ("int8" | "fp8") that becomes the engine's
+    # effective KV storage dtype (wins over kv_cache_dtype).  The
+    # Scheduler keys every decode/verify AttentionSpec on it, so
+    # quantized workloads plan their own dtype_bytes-aware splits and
+    # the measured policy looks up (or explicitly misses) the matching
+    # quant table family; pallas launches take the fused in-register
+    # dequant kernel.  None = kv_cache_dtype rules (legacy knob).
+    kv_quant: Optional[str] = None
     # repro.cache storage layout: "dense" = one (B, max_len, ...) block
     # per cache tensor (pre-redesign arrays, bit-identical); "paged" =
     # fixed-size pages + per-slot page tables — per-request capacity,

@@ -59,6 +59,21 @@ KV_BLOCK = 128
 DEFAULT_NUM_CORES = 8
 MAX_SPLITS = 128
 
+# Bytes per KV-cache element, by dtype *name*.  ``dtype_bytes`` is what the
+# occupancy cost model streams; the NAME is what keys tuned-table families —
+# int8 and fp8 both move 1 byte/element but run different dequant kernels, so
+# a measured int8 cell must never answer for an fp8 workload.
+KV_DTYPES: Dict[str, int] = {
+    "bfloat16": 2,
+    "float32": 4,
+    "int8": 1,
+    "fp8": 1,        # float8_e4m3fn storage, f32 scales
+}
+
+# Legacy inference for workloads constructed before kv_dtype existed (and
+# for hand-built DecodeWorkloads in tests/benchmarks): bytes -> canonical name.
+_BYTES_TO_NAME: Dict[int, str] = {2: "bfloat16", 4: "float32", 1: "int8"}
+
 
 @dataclass(frozen=True)
 class DecodeWorkload:
@@ -73,6 +88,35 @@ class DecodeWorkload:
     num_heads_kv: int
     head_dim: int = 128
     dtype_bytes: int = 2   # bf16
+    # KV dtype NAME (a KV_DTYPES key).  None = infer from dtype_bytes —
+    # normalized in __post_init__ so legacy call sites compare equal to
+    # name-passing ones.  The name distinguishes same-width families:
+    # fp8 must not inherit int8 tune cells.
+    kv_dtype: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.kv_dtype is None:
+            object.__setattr__(self, "kv_dtype",
+                               _BYTES_TO_NAME.get(self.dtype_bytes))
+            return
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; "
+                f"known: {sorted(KV_DTYPES)}")
+        if KV_DTYPES[self.kv_dtype] != self.dtype_bytes:
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r} is "
+                f"{KV_DTYPES[self.kv_dtype]} byte(s)/element but "
+                f"dtype_bytes={self.dtype_bytes}; pass matching values "
+                f"(e.g. dtype_bytes=KV_DTYPES[kv_dtype])")
+
+    @property
+    def kv_dtype_name(self) -> str:
+        """Canonical dtype name for family keying (never None for any
+        registered byte width)."""
+        if self.kv_dtype is not None:
+            return self.kv_dtype
+        return f"bytes{self.dtype_bytes}"
 
     @property
     def num_n_blocks(self) -> int:

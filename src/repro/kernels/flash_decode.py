@@ -176,3 +176,168 @@ def flash_decode_partials(
     l = l[..., 0].transpose(2, 0, 1, 3)
     m = m[..., 0].transpose(2, 0, 1, 3)
     return acc, l, m
+
+
+# ---------------------------------------------------------------------------
+# Fused low-precision variant: int8/fp8 KV blocks dequantized in-register
+# ---------------------------------------------------------------------------
+
+
+def _decode_quant_kernel(
+    # scalar prefetch
+    kv_len_ref,              # (B,) int32 in SMEM
+    # inputs
+    q_ref,                   # (1, 1, G, D)      — pre-scaled f32/bf16
+    k_ref,                   # (1, BK, 1, D)     int8 / float8_e4m3fn
+    v_ref,                   # (1, BK, 1, D)     int8 / float8_e4m3fn
+    ks_ref,                  # (1, BK, 1) f32    per-(row, head) scales
+    vs_ref,                  # (1, BK, 1) f32
+    # outputs
+    acc_out_ref,             # (1, 1, 1, G, D)   f32 unnormalized partial
+    l_out_ref,               # (1, 1, 1, G, STATS_LANES) f32
+    m_out_ref,               # (1, 1, 1, G, STATS_LANES) f32
+    # scratch
+    m_scr,                   # (G, STATS_LANES) f32
+    l_scr,                   # (G, STATS_LANES) f32
+    acc_scr,                 # (G, D) f32
+    *,
+    num_blocks_per_split: int,
+    block_k: int,
+):
+    """:func:`_decode_kernel` with in-register dequant of quantized KV.
+
+    The ONLY difference from the bf16 kernel is the two
+    ``astype(f32) * scale`` lines — HBM streams 1 byte/element plus a
+    4-byte scale per (row, head) (a ``4/D`` fraction, ~3% at D=128), and
+    the rest of the flash accumulation is bit-identical to attending the
+    dequantized arrays.  Scales of unallocated tail rows are masked by
+    the same ``pos < kv_len`` predicate as the data, so poisoned (finite)
+    page tails never reach the output.
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    nb = pl.program_id(3)
+
+    @pl.when(nb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    ks = ks_ref[0, :, 0]                                   # (BK,)
+    vs = vs_ref[0, :, 0]
+    # in-register dequant: same transform as Quantizer.dequantize
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks[:, None]  # (BK, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs[:, None]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, BK)
+
+    blk_idx = s * num_blocks_per_split + nb
+    pos = blk_idx * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1)                        # (G, BK)
+    valid = pos < kv_len_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_scr[:, :1]                                  # (G, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)                           # kill exp(-inf - -inf)
+    alpha = jnp.exp(m_prev - m_new)                        # (G, 1)
+
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(nb == num_blocks_per_split - 1)
+    def _flush():
+        acc_out_ref[0, 0, 0] = acc_scr[...]
+        l_out_ref[0, 0, 0] = l_scr[...]
+        m_out_ref[0, 0, 0] = m_scr[...]
+
+
+def flash_decode_quant_partials(
+    q: jax.Array,            # (B, Hkv, G, D) — already GQA-packed & scaled
+    k: jax.Array,            # (B, L_pad, Hkv, D) int8 / float8_e4m3fn
+    v: jax.Array,
+    k_scale: jax.Array,      # (B, L_pad, Hkv) f32
+    v_scale: jax.Array,
+    kv_len: jax.Array,       # (B,) int32
+    *,
+    num_splits: int,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Split-KV kernel over a quantized cache; unnormalized partials.
+
+    Same grid, accumulation and return layout as
+    :func:`flash_decode_partials`; K/V blocks arrive in storage dtype and
+    are dequantized in-register against their per-row scale blocks.
+    """
+    B, Hkv, G, D = q.shape
+    _, L, _, _ = k.shape
+    S = num_splits
+    assert L % block_k == 0, f"pad L ({L}) to block_k ({block_k})"
+    nblk = L // block_k
+    assert nblk % S == 0, f"pad blocks ({nblk}) to splits ({S})"
+    NB = nblk // S
+
+    kernel = functools.partial(
+        _decode_quant_kernel, num_blocks_per_split=NB, block_k=block_k)
+
+    grid = (B, Hkv, S, NB)
+    acc, l, m = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, s, nb, kvl: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, s, nb, kvl: (b, s * NB + nb, h, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, s, nb, kvl: (b, s * NB + nb, h, 0)),
+                pl.BlockSpec((1, block_k, 1),
+                             lambda b, h, s, nb, kvl: (b, s * NB + nb, h)),
+                pl.BlockSpec((1, block_k, 1),
+                             lambda b, h, s, nb, kvl: (b, s * NB + nb, h)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G, D),
+                             lambda b, h, s, nb, kvl: (b, h, s, 0, 0)),
+                pl.BlockSpec((1, 1, 1, G, STATS_LANES),
+                             lambda b, h, s, nb, kvl: (b, h, s, 0, 0)),
+                pl.BlockSpec((1, 1, 1, G, STATS_LANES),
+                             lambda b, h, s, nb, kvl: (b, h, s, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((G, STATS_LANES), jnp.float32),
+                pltpu.VMEM((G, STATS_LANES), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, S, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, G, STATS_LANES), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, G, STATS_LANES), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"flash_decode_quant_s{S}",
+    )(kv_len.astype(jnp.int32), q, k, v,
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+
+    acc = acc.transpose(2, 0, 1, 3, 4)
+    l = l[..., 0].transpose(2, 0, 1, 3)
+    m = m[..., 0].transpose(2, 0, 1, 3)
+    return acc, l, m

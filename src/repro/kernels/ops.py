@@ -312,6 +312,8 @@ def decode_attention(
     v: jax.Array,
     kv_len: jax.Array,       # (B,) int32 valid lengths
     *,
+    k_scale: Optional[jax.Array] = None,   # (B, Lk, Hkv) quantized-KV scales
+    v_scale: Optional[jax.Array] = None,
     plan: Optional[LaunchPlan] = None,
     metadata: Optional[LaunchPlan] = None,   # legacy alias of ``plan``
     use_ctx_metadata: bool = True,
@@ -343,9 +345,18 @@ def decode_attention(
     gathered resident pages — ``L_K`` is the resident-length bucket, not
     the padded slot capacity, so the split decision and the HBM traffic
     both track what is actually resident.
+
+    Quantized caches (``repro.quant``): pass the per-(row, head) scales
+    via ``k_scale`` / ``v_scale`` (dense or ``PagedKV`` views — the
+    scale pools page with the data pools).  ``impl="pallas"`` then runs
+    the fused kernel (storage-dtype KV blocks dequantized in-register);
+    the xla/naive impls dequantize up front and attend the f32 arrays —
+    the dequant-then-attend reference the fused path is A/B'd against.
     """
     k = _resolve_paged(k)
     v = _resolve_paged(v)
+    k_scale = _resolve_paged(k_scale)
+    v_scale = _resolve_paged(v_scale)
     scope = current_plan("decode")
     if plan is None:
         plan = metadata
@@ -379,12 +390,41 @@ def decode_attention(
 
     if impl == "pallas":
         assert scale is None, "pallas path computes its own scale"
+        if k_scale is not None:
+            return _decode_pallas_quant(
+                q, k, v, k_scale, v_scale, kv_len, num_splits=s,
+                block_k=plan.block_k, interpret=interpret)
         return _decode_pallas(q, k, v, kv_len, num_splits=s,
                               block_k=plan.block_k, interpret=interpret)
+    if k_scale is not None:
+        # unfused reference: materialize the dequantized cache, then
+        # attend it (bit-identical to Quantizer.dequantize + attend)
+        k = k.astype(jnp.float32) * k_scale[..., None]
+        v = v.astype(jnp.float32) * v_scale[..., None]
     if impl == "naive":
         return ref.naive_decode_attention(q, k, v, kv_len, scale=scale)
     return ref.split_decode_xla(q, k, v, kv_len, s, scale=scale,
                                 shard_split=split_constraint)
+
+
+def decode_attention_quant(
+    q: jax.Array,            # (B, Hq, D)
+    qkv,                     # repro.quant.QuantizedKV (leaves may be PagedKV)
+    kv_len: jax.Array,       # (B,) int32
+    **kw,
+) -> jax.Array:
+    """Split-KV decode over a quantized cache artifact.
+
+    Thin entry point for :class:`repro.quant.QuantizedKV` (or any
+    4-sequence ``(k, v, k_scale, v_scale)``): one plan-resolution path
+    with :func:`decode_attention`, so quantized launches consume frozen
+    plans / ambient scopes / inline policy evaluation identically to
+    bf16 ones — the split decision differs only through the workload's
+    ``dtype_bytes`` / ``kv_dtype`` family.
+    """
+    k, v, k_scale, v_scale = qkv
+    return decode_attention(q, k, v, kv_len,
+                            k_scale=k_scale, v_scale=v_scale, **kw)
 
 
 def verify_attention(
@@ -468,7 +508,8 @@ def decode_attention_update(
     use_ctx_metadata: bool = True,
     policy: str = _DEFAULT_POLICY,
     num_cores: Optional[int] = None,
-    quant: Optional[dict] = None,   # int8 cache: {"k_s","v_s","k_ns","v_ns"}
+    impl: Optional[str] = None,     # None = xla (a plan's impl overrides)
+    quant: Optional[dict] = None,   # quantized cache: {"k_s","v_s","k_ns","v_ns"}
 ) -> tuple:
     """Fused cache-write + split decode attention.
 
@@ -510,20 +551,24 @@ def decode_attention_update(
     if cache_v is not None:
         cache_v = jax.vmap(upd)(cache_v, v_new, t)
     if quant is not None:
-        from repro.models.attention import dequantize_kv
         k_s = jax.vmap(upd2)(quant["k_s"], quant["k_ns"], t)
         v_s = jax.vmap(upd2)(quant["v_s"], quant["v_ns"], t)
-        kf = dequantize_kv(cache_k, k_s)
-        vf = dequantize_kv(cache_v, v_s)
-        out = decode_attention(q, kf, vf, kv_len, scale=scale, plan=plan,
+        # scales ride into decode_attention: xla/naive dequantize up
+        # front (the old dequant-then-attend, numerics unchanged) while
+        # a plan carrying impl="pallas" hits the fused in-register path
+        out = decode_attention(q, cache_k, cache_v, kv_len,
+                               k_scale=k_s, v_scale=v_s,
+                               scale=scale, plan=plan,
                                use_ctx_metadata=use_ctx_metadata,
-                               policy=policy, num_cores=num_cores)
+                               policy=policy, num_cores=num_cores,
+                               impl=impl or "xla")
         return out, cache_k, cache_v, k_s, v_s
     v_used = cache_v if cache_v is not None else cache_k[..., :v_width]
     out = decode_attention(q, cache_k, v_used, kv_len, scale=scale,
                            plan=plan,
                            use_ctx_metadata=use_ctx_metadata,
-                           policy=policy, num_cores=num_cores)
+                           policy=policy, num_cores=num_cores,
+                           impl=impl or "xla")
     return out, cache_k, cache_v
 
 
@@ -664,6 +709,41 @@ def _decode_pallas(q, k, v, kv_len, *, num_splits: int,
     acc, l, m = flash_decode_partials(
         qp.astype(q.dtype), k, v, kv_len, num_splits=num_splits,
         block_k=block_k, interpret=interpret)
+    from repro.kernels.flash_combine import flash_combine
+    out = flash_combine(acc, l, m, interpret=interpret)  # (B, Hkv, g, D)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def _decode_pallas_quant(q, k, v, k_scale, v_scale, kv_len, *,
+                         num_splits: int, block_k: Optional[int] = None,
+                         interpret: bool) -> jax.Array:
+    """Quantized-cache twin of :func:`_decode_pallas`: GQA-pack, pad the
+    storage-dtype cache AND its scale leaves, run the fused in-register
+    dequant kernel, LSE-combine.  Padded tail rows carry zero scales but
+    are masked by ``kv_len`` regardless (the repo-wide invariant)."""
+    from repro.kernels.flash_decode import (DEFAULT_BLOCK_K,
+                                            flash_decode_quant_partials)
+
+    B, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    qp = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+
+    block_k = min(block_k or DEFAULT_BLOCK_K, Lk)
+    blocks = -(-Lk // block_k)
+    blocks = -(-blocks // num_splits) * num_splits
+    Lp = blocks * block_k
+    if Lp != Lk:
+        pad4 = ((0, 0), (0, Lp - Lk), (0, 0), (0, 0))
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        k_scale = jnp.pad(k_scale, pad4[:3])
+        v_scale = jnp.pad(v_scale, pad4[:3])
+
+    acc, l, m = flash_decode_quant_partials(
+        qp.astype(q.dtype), k, v, k_scale, v_scale, kv_len,
+        num_splits=num_splits, block_k=block_k, interpret=interpret)
     from repro.kernels.flash_combine import flash_combine
     out = flash_combine(acc, l, m, interpret=interpret)  # (B, Hkv, g, D)
     return out.reshape(B, Hq, D).astype(q.dtype)

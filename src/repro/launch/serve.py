@@ -43,7 +43,7 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 prefill_mode: str = "auto", stream: bool = False,
                 cache_layout: str = "dense", share_prefix: bool = False,
                 speculate=None, speculate_k: int = 4,
-                speculate_max_rejects=None,
+                speculate_max_rejects=None, kv_quant=None,
                 tune_table=None, stats_path=None, log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
@@ -63,6 +63,7 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                     speculation=speculate,
                     speculation_k=speculate_k,
                     speculation_max_rejects=speculate_max_rejects,
+                    kv_quant=kv_quant,
                     tune_table_path=(str(tune_table) if tune_table
                                      else None),
                     stats_path=(str(stats_path) if stats_path else None)),
@@ -106,6 +107,10 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
            f"in {dt:.2f}s ({1e3 * dt / max(1, total_new):.1f} ms/token)")
     log_fn("frozen plans (bucket -> num_splits): "
            f"{engine.planned_splits()}")
+    if kv_quant:
+        log_fn(f"kv quant: {kv_quant} storage + f32 scales "
+               f"(plans keyed on the {kv_quant} family, "
+               f"dtype_bytes={engine.sched.decode_spec(128).workload().dtype_bytes})")
     if engine.tune_table is not None:
         st = engine.stats
         log_fn(f"measured policy: table {engine.tune_table.version}, "
@@ -189,6 +194,11 @@ def main() -> None:
     ap.add_argument("--speculate-max-rejects", type=int, default=None,
                     help="consecutive zero-accept verify steps before a "
                          "request stops speculating (default: never)")
+    ap.add_argument("--kv-quant", default=None,
+                    choices=["int8", "fp8"],
+                    help="repro.quant low-precision KV serving mode: "
+                         "quantize-on-write KV cache + in-kernel dequant "
+                         "on pallas, quant-keyed split plans everywhere")
     ap.add_argument("--stream", action="store_true",
                     help="print TOKEN/FINISHED events as they happen")
     args = ap.parse_args()
@@ -204,6 +214,7 @@ def main() -> None:
                 speculate=args.speculate,
                 speculate_k=args.speculate_k,
                 speculate_max_rejects=args.speculate_max_rejects,
+                kv_quant=args.kv_quant,
                 tune_table=args.tune_table, stats_path=args.stats_path)
 
 

@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models.common import ParamSpec, apply_rope
 from repro.plan import LaunchPlan
+from repro.quant import QUANT_DTYPES, Quantizer
 
 Params = Dict[str, jax.Array]
 
@@ -123,9 +124,10 @@ def attention_prefill(
             pad = W - L
             kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
             vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    if kv_dtype == "int8":
-        kq, ks = quantize_kv(kc)
-        vq, vs = quantize_kv(vc)
+    if kv_dtype in QUANT_DTYPES:
+        qz = Quantizer.from_kv_dtype(kv_dtype)
+        kq, ks = qz.quantize(kc)
+        vq, vs = qz.quantize(vc)
         return y, {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
     return y, {"k": kc.astype(cfg.dtype), "v": vc.astype(cfg.dtype)}
 
@@ -180,15 +182,16 @@ def attention_suffix_prefill(
     positions = start + jnp.arange(M)[None, :]
     q, k, v = _project_qkv(params, cfg, x, positions)
 
-    if kv_dtype == "int8":
-        kq, ks = quantize_kv(k)
-        vq, vs = quantize_kv(v)
+    if kv_dtype in QUANT_DTYPES:
+        qz = Quantizer.from_kv_dtype(kv_dtype)
+        kq, ks = qz.quantize(k)
+        vq, vs = qz.quantize(v)
         cache = {"k": _place_rows(cache["k"], kq, start),
                  "v": _place_rows(cache["v"], vq, start),
                  "k_s": _place_rows(cache["k_s"], ks, start),
                  "v_s": _place_rows(cache["v_s"], vs, start)}
-        kf = dequantize_kv(cache["k"], cache["k_s"])
-        vf = dequantize_kv(cache["v"], cache["v_s"])
+        kf = qz.dequantize(cache["k"], cache["k_s"])
+        vf = qz.dequantize(cache["v"], cache["v_s"])
     else:
         cache = {"k": _place_rows(cache["k"], k, start),
                  "v": _place_rows(cache["v"], v, start)}
@@ -285,22 +288,26 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                    dtype: str = "bfloat16") -> Dict[str, ParamSpec]:
-    """KV cache layout.  ``dtype="int8"`` adds per-(token, head) symmetric
-    scales — halves the decode step's dominant memory term (§Perf C.4).
+    """KV cache layout.  A quantized ``dtype`` ("int8" | "fp8") stores
+    the data leaves in the :class:`~repro.quant.QuantSpec` storage dtype
+    plus per-(token, head) symmetric scales — halving (or better) the
+    decode step's dominant memory term (§Perf C.4).
 
-    Leaves are marked ``paged=True``: self-attention K/V (and its int8
-    scales) is position-linear, so the ``repro.cache`` paged layout may
-    store it as pages when the seq axis spans the full slot capacity.
+    Leaves are marked ``paged=True``: self-attention K/V (and its
+    quantization scales) is position-linear, so the ``repro.cache``
+    paged layout may store it as pages when the seq axis spans the full
+    slot capacity — one page table serves data and scale pools alike.
     """
     hd = cfg.resolved_head_dim
     shape = (batch, max_len, cfg.num_kv_heads, hd)
     axes = ("batch", "seq", "kv_heads", "head_dim")
-    if dtype == "int8":
+    if dtype in QUANT_DTYPES:
+        storage = QUANT_DTYPES[dtype].storage
         sspec = ParamSpec(shape[:3], axes[:3], dtype="float32",
                           init="zeros", paged=True)
-        return {"k": ParamSpec(shape, axes, dtype="int8", init="zeros",
+        return {"k": ParamSpec(shape, axes, dtype=storage, init="zeros",
                                paged=True),
-                "v": ParamSpec(shape, axes, dtype="int8", init="zeros",
+                "v": ParamSpec(shape, axes, dtype=storage, init="zeros",
                                paged=True),
                 "k_s": sspec, "v_s": sspec}
     return {"k": ParamSpec(shape, axes, dtype=dtype, init="zeros",
@@ -309,18 +316,20 @@ def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
                            paged=True)}
 
 
+# int8 per-(token, head) transforms, kept as module-level functions for
+# the many existing call sites; they delegate to the repro.quant default
+# resolver (numerics pinned bit-identical by tests/test_quant.py).
+_INT8 = Quantizer()
+
+
 def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-(..., head) int8 over the feature dim.
     x: (..., H, D) -> (q int8 same shape, scale f32 (..., H))."""
-    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(m, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale
+    return _INT8.quantize(x)
 
 
 def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale[..., None]
+    return _INT8.dequantize(q, scale)
 
 
 def cache_update(cache: Dict[str, jax.Array], k_new: jax.Array,
@@ -380,20 +389,26 @@ def attention_decode(
     else:
         write_t = tv
         kv_len = tv + 1
-    if (impl or cfg.attention_impl) == "pallas":
+    if "k_s" in cache:                      # quantized KV cache (§Perf C.4)
+        # checked BEFORE the pallas branch: a raw cache_update would cast
+        # bf16 rows straight into the storage dtype (garbage without the
+        # scales).  impl="pallas" here means the fused in-register-
+        # dequant kernel, not the bf16 one.
+        qz = Quantizer.for_cache(cache)
+        kq, kns = qz.quantize(k_new[:, 0])
+        vq, vns = qz.quantize(v_new[:, 0])
+        out, ck, cv, ks, vs = ops.decode_attention_update(
+            q[:, 0], cache["k"], cache["v"], kq, vq, write_t, kv_len,
+            plan=plan, use_ctx_metadata=use_ctx_md,
+            impl=impl or cfg.attention_impl,
+            quant={"k_s": cache["k_s"], "v_s": cache["v_s"],
+                   "k_ns": kns, "v_ns": vns})
+        cache = {"k": ck, "v": cv, "k_s": ks, "v_s": vs}
+    elif (impl or cfg.attention_impl) == "pallas":
         cache = cache_update(cache, k_new[:, 0], v_new[:, 0], write_t)
         out = ops.decode_attention(
             q[:, 0], cache["k"], cache["v"], kv_len,
             plan=plan, use_ctx_metadata=use_ctx_md, impl="pallas")
-    elif "k_s" in cache:                    # int8 KV cache (§Perf C.4)
-        kq, kns = quantize_kv(k_new[:, 0])
-        vq, vns = quantize_kv(v_new[:, 0])
-        out, ck, cv, ks, vs = ops.decode_attention_update(
-            q[:, 0], cache["k"], cache["v"], kq, vq, write_t, kv_len,
-            plan=plan, use_ctx_metadata=use_ctx_md,
-            quant={"k_s": cache["k_s"], "v_s": cache["v_s"],
-                   "k_ns": kns, "v_ns": vns})
-        cache = {"k": ck, "v": cv, "k_s": ks, "v_s": vs}
     else:
         out, ck, cv = ops.decode_attention_update(
             q[:, 0], cache["k"], cache["v"], k_new[:, 0], v_new[:, 0],
@@ -448,15 +463,16 @@ def attention_verify(
     positions = tv[:, None] + jnp.arange(M, dtype=jnp.int32)[None, :]
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
 
-    if "k_s" in cache:                      # int8 KV cache
-        kq, ks = quantize_kv(k_new)
-        vq, vs = quantize_kv(v_new)
+    if "k_s" in cache:                      # quantized KV cache
+        qz = Quantizer.for_cache(cache)
+        kq, ks = qz.quantize(k_new)
+        vq, vs = qz.quantize(v_new)
         cache = {"k": _place_rows_at(cache["k"], kq, tv),
                  "v": _place_rows_at(cache["v"], vq, tv),
                  "k_s": _place_rows_at(cache["k_s"], ks, tv),
                  "v_s": _place_rows_at(cache["v_s"], vs, tv)}
-        kf = dequantize_kv(cache["k"], cache["k_s"])
-        vf = dequantize_kv(cache["v"], cache["v_s"])
+        kf = qz.dequantize(cache["k"], cache["k_s"])
+        vf = qz.dequantize(cache["v"], cache["v_s"])
     else:
         cache = {"k": _place_rows_at(cache["k"], k_new, tv),
                  "v": _place_rows_at(cache["v"], v_new, tv)}

@@ -107,4 +107,9 @@ class LaunchPlan:
             d["shape"] = (f"B{w.batch} Lq{w.seqlen_q} Lk{w.seqlen_k} "
                           f"Hq{w.num_heads_q} Hkv{w.num_heads_kv} "
                           f"D{w.head_dim}")
+            if w.dtype_bytes != 2:
+                # quantized (or widened) KV provenance: the split decision
+                # above was made for THIS byte width / dtype family.
+                d["kv_dtype"] = w.kv_dtype_name
+                d["dtype_bytes"] = w.dtype_bytes
         return d

@@ -7,10 +7,11 @@ compiles the how into a :class:`~repro.plan.LaunchPlan`.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core.split_policy import KV_BLOCK, DecodeWorkload
+from repro.core.split_policy import KV_BLOCK, KV_DTYPES, DecodeWorkload
 
 # The launch kinds the planner understands.  ``decode`` and
 # ``decode_update`` share one decision surface (the paper's split-KV
@@ -38,7 +39,9 @@ class AttentionSpec:
     Mirrors the paper's shape tuple (Batch, L_Q, L_K, H_Q, H_KV, D) plus
     the launch kind and the launch-affecting extras: sliding ``window``
     (ring cache => L_K = window), MLA ``v_width`` (v = k[..., :v_width]),
-    int8-``quantized`` KV, and the mesh axis the launch may shard over.
+    the KV-cache ``kv_dtype`` (a :data:`repro.core.split_policy.KV_DTYPES`
+    name — quantized dtypes get their own split decisions AND their own
+    tune-table families), and the mesh axis the launch may shard over.
 
     ``layout`` is the cache-side summary the serving engine plans from:
     under the ``repro.cache`` paged layout ``seqlen_k`` is the
@@ -56,7 +59,14 @@ class AttentionSpec:
     head_dim: int = 128
     window: Optional[int] = None
     v_width: Optional[int] = None       # MLA latent: v ⊂ k
-    quantized: bool = False             # int8 KV cache
+    # DEPRECATED: the boolean cannot distinguish int8 from fp8 (both
+    # 1 byte, different kernels/tolerances/tune families).  Pass
+    # ``kv_dtype="int8"`` / ``"fp8"`` instead.  ``quantized=True`` still
+    # works via a compat shim (DeprecationWarning, implies int8) and the
+    # field is normalized in ``__post_init__`` to ``kv_dtype``'s
+    # quantized-ness so equality/hash stay consistent.
+    quantized: Optional[bool] = None
+    kv_dtype: str = "bfloat16"          # a KV_DTYPES name
     mesh_axis: Optional[str] = None     # sharding axis name (mesh plans)
     mesh_axis_size: int = 1
     layout: str = "dense"               # repro.cache layout ("dense"|"paged")
@@ -65,21 +75,38 @@ class AttentionSpec:
         if self.kind not in KINDS:
             raise ValueError(
                 f"unknown attention kind {self.kind!r}; known: {KINDS}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; "
+                f"known: {sorted(KV_DTYPES)}")
+        if self.quantized and self.kv_dtype == "bfloat16":
+            # legacy call site: quantized=True meant "int8 KV cache".
+            # (A replayed spec with kv_dtype already quantized skips this
+            # branch, so dataclasses.replace / bucketed() never re-warn.)
+            warnings.warn(
+                "AttentionSpec.quantized is deprecated; pass "
+                "kv_dtype='int8' (or 'fp8') instead — the boolean cannot "
+                "distinguish same-width quantized dtypes",
+                DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "kv_dtype", "int8")
+        object.__setattr__(self, "quantized",
+                           KV_DTYPES[self.kv_dtype] == 1)
 
     def workload(self) -> DecodeWorkload:
         """The policy-facing shape tuple (what the split heuristic reads).
 
-        ``dtype_bytes`` follows the cache dtype (int8-quantized KV moves
-        half the bytes of bf16): the occupancy cost model and the
-        ``measured`` table's family key both read it, so a quantized
-        launch must not plan (or look up) as if it streamed bf16.
+        ``dtype_bytes`` follows the cache dtype (quantized KV moves half
+        the bytes of bf16): the occupancy cost model reads the bytes, and
+        the ``measured`` table's family key additionally reads the dtype
+        NAME, so an fp8 launch never plans from (or looks up) int8 cells.
         """
         lk = self.seqlen_k if self.window is None \
             else min(self.window, self.seqlen_k)
         return DecodeWorkload(self.batch, self.seqlen_q, lk,
                               self.num_heads_q, self.num_heads_kv,
                               self.head_dim,
-                              dtype_bytes=1 if self.quantized else 2)
+                              dtype_bytes=KV_DTYPES[self.kv_dtype],
+                              kv_dtype=self.kv_dtype)
 
     def bucketed(self, bucket: int = KV_BLOCK) -> "AttentionSpec":
         """Spec with L_K rounded up to its cache-length bucket."""
@@ -124,5 +151,6 @@ class AttentionSpec:
     @classmethod
     def from_workload(cls, w: DecodeWorkload, kind: str = "decode",
                       **kw) -> "AttentionSpec":
+        kw.setdefault("kv_dtype", w.kv_dtype_name)
         return cls(kind, w.batch, w.seqlen_q, w.seqlen_k, w.num_heads_q,
                    w.num_heads_kv, w.head_dim, **kw)

@@ -1,0 +1,27 @@
+"""repro.quant — low-precision KV as a first-class planned subsystem.
+
+Spec → resolver → artifact, like every other repro package:
+
+    QuantSpec  ──resolve──▶  Quantizer  ──produce──▶  QuantizedKV
+    (kv dtype, granularity,  (traced quantize /      (int8/fp8 K/V +
+     scale dtype, amax mode)  dequantize transforms)  per-row scales)
+
+The artifact feeds ``kernels.ops.decode_attention_quant`` (fused Pallas
+in-register dequant, or the dequant-then-attend reference), plans carry
+the dtype family through ``AttentionSpec.kv_dtype``, and ``repro.tune``
+calibrates quantized cells through the fused harness.
+"""
+from repro.quant.quantizer import QuantizedKV, Quantizer
+from repro.quant.spec import (AB_ATOL, AMAX_MODES, GRANULARITIES,
+                              QUANT_DTYPES, QuantDtype, QuantSpec)
+
+__all__ = [
+    "AB_ATOL",
+    "AMAX_MODES",
+    "GRANULARITIES",
+    "QUANT_DTYPES",
+    "QuantDtype",
+    "QuantSpec",
+    "QuantizedKV",
+    "Quantizer",
+]

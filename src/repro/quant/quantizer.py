@@ -1,0 +1,142 @@
+"""Quantizer: resolves a QuantSpec into traced KV transforms.
+
+The resolver of the ``repro.quant`` package: stateless, fully traced
+(jit/vmap/scan-safe), and numerics-pinned — the int8 ``per_head`` /
+``abs_max`` path is bit-identical to the pre-package
+``models.attention.quantize_kv`` so existing engines, caches and golden
+token streams are unchanged by construction.
+
+Artifact: :class:`QuantizedKV`, a pytree of the four leaves every
+quantized attention launch consumes (data + scales, each either a dense
+array or a :class:`~repro.kernels.ops.PagedKV` view).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.spec import QUANT_DTYPES, QuantSpec
+
+Leaf = Union[jax.Array, object]         # array or kernels.ops.PagedKV view
+
+
+class QuantizedKV(NamedTuple):
+    """The quantized-cache artifact: what a fused decode launch reads.
+
+    ``k``/``v``: (B, L, H_kv, D) in the spec's storage dtype.
+    ``k_scale``/``v_scale``: (B, L, H_kv) scales (``scale_dtype``).
+    Any leaf may be a ``PagedKV`` view — ``kernels.ops`` resolves views
+    uniformly (the scale pools page exactly like the data pools, so one
+    page table serves all four).
+    """
+    k: Leaf
+    v: Leaf
+    k_scale: Leaf
+    v_scale: Leaf
+
+
+class Quantizer:
+    """Traced quantize/dequantize for one :class:`QuantSpec`."""
+
+    def __init__(self, spec: QuantSpec = QuantSpec()):
+        self.spec = spec
+
+    # --- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_kv_dtype(cls, kv_dtype: str, **kw) -> "Quantizer":
+        """Resolver entry point from a KV_DTYPES name ("int8" | "fp8")."""
+        return cls(QuantSpec(kv_dtype=kv_dtype, **kw))
+
+    @classmethod
+    def for_cache(cls, cache: Dict[str, jax.Array]) -> Optional["Quantizer"]:
+        """Infer the quantizer a cache dict was built for, from its leaf
+        dtype; ``None`` for unquantized caches (no scale leaves)."""
+        if "k_s" not in cache:
+            return None
+        leaf = jnp.dtype(cache["k"].dtype)
+        for name, qd in QUANT_DTYPES.items():
+            if leaf == jnp.dtype(qd.storage):
+                return cls(QuantSpec(kv_dtype=name))
+        raise ValueError(
+            f"cache has scale leaves but data dtype {leaf} matches no "
+            f"registered quantized dtype ({sorted(QUANT_DTYPES)})")
+
+    # --- amax / scale -------------------------------------------------------
+
+    def _amax(self, xf: jax.Array, page_size: Optional[int]) -> jax.Array:
+        """Per-(row, head) amax (..., L, H), pooled per page if asked."""
+        amax = jnp.max(jnp.abs(xf), axis=-1)            # (..., L, H)
+        if self.spec.amax_mode == "static":
+            return jnp.full_like(amax, self.spec.static_amax)
+        if self.spec.granularity == "per_page":
+            if page_size is None:
+                raise ValueError(
+                    "granularity='per_page' needs page_size= at quantize "
+                    "time (the cache layout's page width)")
+            L = amax.shape[-2]
+            n = -(-L // page_size)
+            pad = n * page_size - L
+            a = jnp.pad(amax,
+                        [(0, 0)] * (amax.ndim - 2) + [(0, pad), (0, 0)])
+            a = a.reshape(a.shape[:-2] + (n, page_size, a.shape[-1]))
+            a = jnp.max(a, axis=-2)                      # (..., n, H)
+            # materialize per-row so the scale-leaf layout (and the
+            # kernels' per-row scale blocks) stay granularity-blind
+            amax = jnp.repeat(a, page_size, axis=-2)[..., :L, :]
+        return amax
+
+    # --- the traced transforms ---------------------------------------------
+
+    def quantize(self, x: jax.Array, *, page_size: Optional[int] = None
+                 ) -> tuple:
+        """x: (..., H, D) -> (q storage-dtype same shape, scale (..., H)).
+
+        int8: symmetric round-to-nearest with saturate-clip at ±127 —
+        bit-identical to the legacy ``quantize_kv``.  fp8 (e4m3fn):
+        scale-to-±448 then dtype cast (the cast rounds to the nearest
+        representable; no integer rounding step).
+        """
+        qd = self.spec.qdtype
+        xf = x.astype(jnp.float32)
+        amax = self._amax(xf, page_size)
+        scale = jnp.maximum(amax, self.spec.eps) / qd.qmax
+        y = xf / scale[..., None]
+        if qd.rounds:
+            y = jnp.round(y)
+        y = jnp.clip(y, -qd.qmax, qd.qmax)
+        return (y.astype(jnp.dtype(qd.storage)),
+                scale.astype(jnp.dtype(self.spec.scale_dtype)))
+
+    def dequantize(self, q: jax.Array, scale: jax.Array) -> jax.Array:
+        """(q (..., H, D), scale (..., H)) -> f32 (..., H, D).
+
+        The unfused reference transform; the fused Pallas kernel applies
+        the same ``q.astype(f32) * scale`` in-register per KV block, so
+        fused and unfused attend mathematically identical K/V.
+        """
+        return q.astype(jnp.float32) * scale[..., None]
+
+    def quantized_kv(self, k: jax.Array, v: jax.Array, *,
+                     page_size: Optional[int] = None) -> QuantizedKV:
+        """Quantize a K/V pair into the artifact the kernels consume."""
+        kq, ks = self.quantize(k, page_size=page_size)
+        vq, vs = self.quantize(v, page_size=page_size)
+        return QuantizedKV(kq, vq, ks, vs)
+
+    # --- error bound --------------------------------------------------------
+
+    def row_error_bound(self, scale: jax.Array) -> jax.Array:
+        """Elementwise |x - dequant(quant(x))| bound per (row, head).
+
+        int8 round-to-nearest: half a quantization step (scale / 2).
+        fp8 e4m3 (3 mantissa bits): relative 2^-4 of the scaled value,
+        i.e. ≤ qmax · 2^-4 · scale on the largest element.  Used by the
+        roundtrip property tests — the fused-vs-unfused oracle needs no
+        bound (the quant error cancels; see ``repro.quant.spec.AB_ATOL``).
+        """
+        if self.spec.qdtype.rounds:
+            return 0.5 * scale
+        return self.spec.qmax * (2.0 ** -4) * scale

@@ -1,0 +1,131 @@
+"""QuantSpec: the declarative input to the KV-quantization resolver.
+
+The sixth spec→resolver→artifact package (after repro.plan, repro.cache,
+repro.tune, repro.spec, and the serving engine's request specs): a
+:class:`QuantSpec` says WHAT low-precision scheme the KV cache uses —
+storage dtype, scale granularity, scale dtype, amax calibration mode —
+and nothing about HOW rows get quantized or attended; the
+:class:`~repro.quant.Quantizer` resolves it into traced quantize /
+dequantize transforms and a :class:`~repro.quant.QuantizedKV` artifact
+the kernels consume directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.split_policy import KV_DTYPES
+
+
+@dataclass(frozen=True)
+class QuantDtype:
+    """Storage format of one quantized KV family."""
+    name: str            # KV_DTYPES key ("int8" | "fp8")
+    storage: str         # jnp dtype name of the cache leaves
+    qmax: float          # largest representable magnitude
+    rounds: bool         # True: round-to-nearest-int; False: dtype cast
+
+
+# The quantized members of KV_DTYPES.  ``fp8`` is float8_e4m3fn — the
+# decode-side FA3 choice (e5m2 trades mantissa for exponent range the
+# scaled KV values never use).  Both are 1 byte/element, which is exactly
+# why family keying is by NAME, not width.
+QUANT_DTYPES: Dict[str, QuantDtype] = {
+    "int8": QuantDtype("int8", "int8", 127.0, rounds=True),
+    "fp8": QuantDtype("fp8", "float8_e4m3fn", 448.0, rounds=False),
+}
+
+GRANULARITIES = ("per_head", "per_page")
+AMAX_MODES = ("abs_max", "static")
+
+# Fused-vs-unfused A/B tolerance, per dtype (absolute, on attention
+# outputs of O(1)-magnitude activations).  Both paths read the SAME
+# quantized artifact and dequantize with the same scales, so the
+# quantization error cancels exactly; what remains is kernel
+# accumulation-order drift (blockwise online softmax vs split-XLA
+# reference), which is dtype-independent float noise.  The headroom over
+# the observed ~1e-5 keeps the oracle meaningful without flaking.
+AB_ATOL: Dict[str, float] = {"int8": 2e-2, "fp8": 2e-2}
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """One KV-cache quantization scheme, declaratively.
+
+    ``granularity``:
+      - ``per_head``: one scale per (token, head) — amax over the feature
+        dim.  The serving default; matches the cache's existing
+        ``k_s``/``v_s`` scale-leaf layout exactly.
+      - ``per_page``: one scale per (page, head) — amax pooled over each
+        ``page_size``-row page, materialized per-row into the same scale
+        leaves (rows of a page share the value).  Coarser ⇒ cheaper scale
+        traffic, looser error bound; the kernels are granularity-blind
+        (they always dequant against per-row scale blocks).
+
+    ``amax_mode``:
+      - ``abs_max``: dynamic — amax observed from the rows being written.
+      - ``static``: fixed ``static_amax`` calibration constant (scale =
+        static_amax / qmax everywhere); rows beyond it saturate-clip.
+    """
+    kv_dtype: str = "int8"              # QUANT_DTYPES key
+    granularity: str = "per_head"       # per_head | per_page
+    scale_dtype: str = "float32"
+    amax_mode: str = "abs_max"          # abs_max | static
+    static_amax: Optional[float] = None
+    eps: float = 1e-8                   # amax floor (all-zero rows)
+
+    def __post_init__(self) -> None:
+        if self.kv_dtype not in QUANT_DTYPES:
+            raise ValueError(
+                f"unknown quantized kv_dtype {self.kv_dtype!r}; "
+                f"known: {sorted(QUANT_DTYPES)} "
+                f"(non-quantized KV_DTYPES: {sorted(KV_DTYPES)})")
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(
+                f"unknown scale granularity {self.granularity!r}; "
+                f"known: {GRANULARITIES}")
+        if self.amax_mode not in AMAX_MODES:
+            raise ValueError(
+                f"unknown amax mode {self.amax_mode!r}; "
+                f"known: {AMAX_MODES}")
+        if self.amax_mode == "static" and (
+                self.static_amax is None or self.static_amax <= 0):
+            raise ValueError(
+                "amax_mode='static' needs a positive static_amax "
+                "calibration constant")
+        if self.eps <= 0:
+            raise ValueError(
+                "eps must be positive — it floors the amax so all-zero "
+                "rows never divide by zero")
+        jnp.dtype(self.scale_dtype)     # must be a real dtype name
+
+    # --- resolved storage properties ---------------------------------------
+
+    @property
+    def qdtype(self) -> QuantDtype:
+        return QUANT_DTYPES[self.kv_dtype]
+
+    @property
+    def storage_dtype(self) -> str:
+        """jnp dtype NAME of the cache data leaves (ParamSpec-ready)."""
+        return self.qdtype.storage
+
+    @property
+    def qmax(self) -> float:
+        return self.qdtype.qmax
+
+    @property
+    def dtype_bytes(self) -> int:
+        return int(jnp.dtype(self.storage_dtype).itemsize)
+
+    def describe(self) -> Dict[str, object]:
+        """JSON-safe summary (LaunchPlan provenance, logs)."""
+        d: Dict[str, object] = {
+            "kv_dtype": self.kv_dtype, "storage": self.storage_dtype,
+            "granularity": self.granularity, "amax_mode": self.amax_mode,
+        }
+        if self.static_amax is not None:
+            d["static_amax"] = self.static_amax
+        return d

@@ -156,7 +156,13 @@ class ServingEngine:
         self.max_len = max_len
         self.B = batch_slots
         self.use_metadata = scfg.use_scheduler_metadata
-        self.kv_dtype = scfg.kv_cache_dtype
+        if scfg.kv_quant is not None:
+            from repro.quant import QUANT_DTYPES
+            if scfg.kv_quant not in QUANT_DTYPES:
+                raise ValueError(
+                    f"unknown kv_quant {scfg.kv_quant!r}; "
+                    f"known: {sorted(QUANT_DTYPES)}")
+        self.kv_dtype = scfg.kv_quant or scfg.kv_cache_dtype
         self._stats_path = scfg.stats_path
 
         # measured policy (repro.tune): resolve the SplitTable once —

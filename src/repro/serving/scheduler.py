@@ -92,7 +92,8 @@ class Scheduler:
         self.bucket_width = bucket_width
         self.prefill_bucket_width = prefill_bucket or bucket_width
         self.cache_layout = cache_layout
-        self.kv_quantized = kv_dtype == "int8"
+        self.kv_dtype = kv_dtype
+        self.kv_quantized = kv_dtype != "bfloat16"
         self.planner = Planner(policy=policy,
                                num_splits_override=num_splits_override,
                                table=table)
@@ -190,7 +191,7 @@ class Scheduler:
         return AttentionSpec.decode(self.B, bucket, cfg.num_heads,
                                     self._kv_heads(),
                                     cfg.resolved_head_dim,
-                                    quantized=self.kv_quantized,
+                                    kv_dtype=self.kv_dtype,
                                     layout=self.cache_layout)
 
     def decode_plan(self, t_max: int) -> LaunchPlan:
@@ -219,7 +220,7 @@ class Scheduler:
         return AttentionSpec.verify(self.B, k + 1, bucket, cfg.num_heads,
                                     self._kv_heads(),
                                     cfg.resolved_head_dim,
-                                    quantized=self.kv_quantized,
+                                    kv_dtype=self.kv_dtype,
                                     layout=self.cache_layout)
 
     def verify_entry(self, k: int, t_max: int,

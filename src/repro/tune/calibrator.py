@@ -62,33 +62,60 @@ class Calibrator:
     # --- timing -------------------------------------------------------------
 
     def _inputs(self, w: DecodeWorkload, cell: int):
-        """Seeded decode-shaped inputs (deterministic per cell index)."""
+        """Seeded decode-shaped inputs (deterministic per cell index).
+
+        Quantized workloads get a quantized cache: bf16-scale normals
+        quantized through the family's :class:`~repro.quant.Quantizer`
+        (returning the extra scale leaves), so the timed launch streams
+        exactly the bytes a quantized serving step streams.
+        """
+        from repro.quant import QUANT_DTYPES, Quantizer
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), cell)
         kq, kk, kv = jax.random.split(key, 3)
-        dt = {2: jnp.bfloat16, 4: jnp.float32}[w.dtype_bytes]
+        name = w.kv_dtype_name
+        quant = name in QUANT_DTYPES
+        dt = jnp.bfloat16 if quant else \
+            {2: jnp.bfloat16, 4: jnp.float32}[w.dtype_bytes]
         q = jax.random.normal(kq, (w.batch, w.num_heads_q, w.head_dim), dt)
         k = jax.random.normal(
             kk, (w.batch, w.seqlen_k, w.num_heads_kv, w.head_dim), dt)
         v = jax.random.normal(
             kv, (w.batch, w.seqlen_k, w.num_heads_kv, w.head_dim), dt)
         kv_len = jnp.full((w.batch,), w.seqlen_k, jnp.int32)
+        if quant:
+            qkv = Quantizer.from_kv_dtype(name).quantized_kv(k, v)
+            return q, qkv.k, qkv.v, qkv.k_scale, qkv.v_scale, kv_len
         return q, k, v, kv_len
 
     def _time_wallclock(self, w: DecodeWorkload, impl: str, s: int,
                         cell: int) -> float:
-        """Median-of-repeats latency (us) of the jitted frozen launch."""
+        """Median-of-repeats latency (us) of the jitted frozen launch.
+
+        Quantized families ride the fused harness: the same
+        ``ops.decode_attention`` dispatch, with the cell's scale leaves
+        passed through — ``impl="pallas"`` times the fused in-register-
+        dequant kernel, ``impl="xla"`` times the dequant-then-attend
+        reference (each under its own table family).
+        """
         from repro.kernels import ops   # local: keep import cost off the
         #                                 modeled-only (CI) path
         plan = Planner(num_splits_override=s, impl=impl).plan(
             AttentionSpec.from_workload(w))
         interpret = self.interpret
-
-        @jax.jit
-        def step(q, k, v, kv_len):
-            return ops.decode_attention(q, k, v, kv_len, plan=plan,
-                                        impl=impl, interpret=interpret)
-
         args = self._inputs(w, cell)
+
+        if len(args) == 6:              # quantized cell (fused harness)
+            @jax.jit
+            def step(q, k, v, k_s, v_s, kv_len):
+                return ops.decode_attention(
+                    q, k, v, kv_len, k_scale=k_s, v_scale=v_s,
+                    plan=plan, impl=impl, interpret=interpret)
+        else:
+            @jax.jit
+            def step(q, k, v, kv_len):
+                return ops.decode_attention(q, k, v, kv_len, plan=plan,
+                                            impl=impl, interpret=interpret)
+
         for _ in range(max(1, self.spec.warmup)):   # compile + warmup
             step(*args).block_until_ready()
         times = []
@@ -112,13 +139,11 @@ class Calibrator:
             if (spec.budget_s is not None and not budget_spent
                     and time.perf_counter() - t_start > spec.budget_s):
                 budget_spent = True
-            # int8 cells (dtype_bytes=1) cannot ride the plain q/k/v
-            # timing harness — the quantized path fuses dequant+scales
-            # (ops.decode_attention_update(quant=...)); timing bf16
-            # stand-ins would persist wrong curves under an int8 label,
-            # so those cells stay on the model (per-entry `source`)
-            wallclock = (self.mode == "wallclock" and not budget_spent
-                         and w.dtype_bytes != 1)
+            # quantized cells time through the fused harness (see
+            # _time_wallclock) and are labeled "wallclock" — the historic
+            # refusal ("no fused-quant harness, model only") is lifted
+            quant = w.dtype_bytes == 1
+            wallclock = self.mode == "wallclock" and not budget_spent
             lat: Dict[str, float] = {}
             for s in spec.candidate_splits(w):
                 t = (self._time_wallclock(w, impl, s, cell) if wallclock
@@ -132,9 +157,11 @@ class Calibrator:
                 "batch": w.batch, "num_heads_q": w.num_heads_q,
                 "num_heads_kv": w.num_heads_kv, "head_dim": w.head_dim,
                 "impl": impl, "dtype_bytes": w.dtype_bytes,
+                "kv_dtype": w.kv_dtype_name,
                 "lk_bucket": w.seqlen_k,
                 "best_split": int(best),
-                "source": "measured" if wallclock else "modeled",
+                "source": ("wallclock" if wallclock and quant
+                           else "measured" if wallclock else "modeled"),
                 "latencies_us": lat,
             })
         table = SplitTable(entries, self._fingerprint(entries),
@@ -143,12 +170,13 @@ class Calibrator:
         return table
 
     def _fingerprint(self, entries: List[Dict[str, Any]]) -> Dict[str, Any]:
-        n_measured = sum(e["source"] == "measured" for e in entries)
+        from repro.tune.table import MEASURED_SOURCES
+        n_measured = sum(e["source"] in MEASURED_SOURCES for e in entries)
         if self.mode == "modeled":
             sources = "modeled"
         elif n_measured == len(entries):
             sources = "measured"
-        else:             # wallclock degraded (budget / int8 cells)
+        else:             # wallclock degraded mid-run (budget cap)
             sources = "mixed"
         return {
             "mode": self.mode,

@@ -17,12 +17,16 @@ from typing import Iterator, Optional, Tuple
 from repro.core.split_policy import (
     DEFAULT_NUM_CORES,
     KV_BLOCK,
+    KV_DTYPES,
     MAX_SPLITS,
     DecodeWorkload,
 )
 
-# bytes per cache element, by calibration dtype name
-DTYPE_BYTES = {"bfloat16": 2, "float32": 4, "int8": 1}
+# bytes per cache element, by calibration dtype name — the one registry
+# (repro.core.split_policy.KV_DTYPES), re-exported under the historical
+# tune-facing name.  Includes the quantized families ("int8", "fp8"):
+# both 1 byte, keyed apart by NAME in the table.
+DTYPE_BYTES = dict(KV_DTYPES)
 
 
 @dataclass(frozen=True)
@@ -33,8 +37,10 @@ class TuneSpec:
     serving shapes every test/CI engine actually plans (H_Q=4 MQA at
     head_dim 8/16, batch = the engine's ``batch_slots``) plus the
     paper's full-size low-head-count rows (Table 1's H_KV ∈ {1, 2, 4}
-    at head_dim 128).  ``launch/tune.py --reference`` calibrates exactly
-    this spec into the committed reference table.
+    at head_dim 128), each in bf16 AND int8 (quantized serving plans
+    from its own cells, never a bf16 neighbor's).
+    ``launch/tune.py --reference`` calibrates exactly this spec into the
+    committed reference table.
     """
     # L_K grid: multiples of KV_BLOCK (the decision is lossless within a
     # block — same invariant the serving engine's buckets rely on)
@@ -46,7 +52,7 @@ class TuneSpec:
         (64, 1, 128), (16, 2, 128), (32, 4, 128),   # paper Table 1 rows
     )
     impls: Tuple[str, ...] = ("xla",)
-    dtypes: Tuple[str, ...] = ("bfloat16",)
+    dtypes: Tuple[str, ...] = ("bfloat16", "int8")
     # explicit candidate split counts; None = every feasible split for
     # the workload (1..min(nblk, num_cores), skipping counts that do not
     # refine the partitioning — the efficiency loop's own skip rule)
@@ -84,7 +90,8 @@ class TuneSpec:
                         for lk in self.lk_buckets:
                             yield DecodeWorkload(
                                 b, 1, lk, hq, hkv, hd,
-                                dtype_bytes=DTYPE_BYTES[dtype]), impl
+                                dtype_bytes=DTYPE_BYTES[dtype],
+                                kv_dtype=dtype), impl
 
     def candidate_splits(self, w: DecodeWorkload) -> Tuple[int, ...]:
         """The feasible candidate set for one workload (always

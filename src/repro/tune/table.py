@@ -13,10 +13,12 @@ Lookup semantics
 A decode workload resolves in two stages:
 
 1. **family** — exact match on (batch, H_Q, H_KV, head_dim, impl,
-   dtype_bytes).  The split decision's tile math depends on all of
-   these, so interpolating across them would be a guess, not a
-   measurement: an uncovered family **falls back to the analytic
-   ``paper`` policy explicitly**, and the fallback is counted
+   dtype_bytes, kv_dtype).  The split decision's tile math depends on
+   all of these — and the dtype NAME keeps same-width families apart
+   (an fp8 workload never resolves to an int8 cell) — so interpolating
+   across them would be a guess, not a measurement: an uncovered family
+   **falls back to the analytic ``paper`` policy explicitly**, and the
+   fallback is counted
    (:meth:`SplitTable.attach_stats` / the table's own counters).
 2. **nearest L_K bucket** within the covered family — L_K only shifts
    the knee of the U-curve, so the nearest measured bucket's argmin
@@ -27,6 +29,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import warnings
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -37,19 +40,29 @@ from repro.core.split_policy import (
     choose_num_splits,
 )
 
-SCHEMA_VERSION = 1
+# Schema 2 (PR 8): entries carry the KV dtype NAME ("kv_dtype") next to
+# its byte width — int8 and fp8 are both 1 byte but run different
+# kernels, so the family key must separate them.  Schema-1 tables have
+# no name column and cannot be disambiguated; loading one raises with
+# the regeneration command.
+SCHEMA_VERSION = 2
 
 # repo-root experiments/tune/ — the artifact home (mirrors
 # benchmarks/common.OUT_DIR's repo-root anchoring)
 TABLE_DIR = Path(__file__).resolve().parents[3] / "experiments" / "tune"
 REFERENCE_TABLE_PATH = TABLE_DIR / "reference_reduced.json"
 
-# (batch, num_heads_q, num_heads_kv, head_dim, impl, dtype_bytes)
-FamilyKey = Tuple[int, int, int, int, str, int]
+# (batch, num_heads_q, num_heads_kv, head_dim, impl, dtype_bytes, kv_dtype)
+FamilyKey = Tuple[int, int, int, int, str, int, str]
 
 _ENTRY_FIELDS = ("batch", "num_heads_q", "num_heads_kv", "head_dim",
-                 "impl", "dtype_bytes", "lk_bucket", "best_split",
-                 "source", "latencies_us")
+                 "impl", "dtype_bytes", "kv_dtype", "lk_bucket",
+                 "best_split", "source", "latencies_us")
+
+# sources that came from actual timing (the fused-quant harness labels
+# its cells "wallclock"; the bf16 harness's historical label is
+# "measured" — both are hardware numbers, as opposed to "modeled")
+MEASURED_SOURCES = ("measured", "wallclock")
 
 
 def _norm_impl(impl: Optional[str]) -> str:
@@ -60,7 +73,12 @@ def _norm_impl(impl: Optional[str]) -> str:
 
 def family_key(w: DecodeWorkload, impl: Optional[str] = None) -> FamilyKey:
     return (w.batch, w.num_heads_q, w.num_heads_kv, w.head_dim,
-            _norm_impl(impl), w.dtype_bytes)
+            _norm_impl(impl), w.dtype_bytes, w.kv_dtype_name)
+
+
+def _entry_family(e: Dict[str, Any]) -> FamilyKey:
+    return (e["batch"], e["num_heads_q"], e["num_heads_kv"],
+            e["head_dim"], e["impl"], e["dtype_bytes"], e["kv_dtype"])
 
 
 class SplitTable:
@@ -95,9 +113,8 @@ class SplitTable:
         self._version: Optional[str] = None      # lazy content hash
         self._families: Dict[FamilyKey, Dict[int, Dict[str, Any]]] = {}
         for e in entries:
-            fam = (e["batch"], e["num_heads_q"], e["num_heads_kv"],
-                   e["head_dim"], e["impl"], e["dtype_bytes"])
-            self._families.setdefault(fam, {})[e["lk_bucket"]] = e
+            self._families.setdefault(
+                _entry_family(e), {})[e["lk_bucket"]] = e
 
     # --- identity -----------------------------------------------------------
 
@@ -210,9 +227,7 @@ class SplitTable:
                 f"({self.schema} vs {other.schema})")
         merged: Dict[tuple, Dict[str, Any]] = {}
         for e in self.entries + other.entries:   # later wins
-            key = (e["batch"], e["num_heads_q"], e["num_heads_kv"],
-                   e["head_dim"], e["impl"], e["dtype_bytes"],
-                   e["lk_bucket"])
+            key = _entry_family(e) + (e["lk_bucket"],)
             merged[key] = e
         fp = dict(self.fingerprint)
         if other.fingerprint != self.fingerprint:
@@ -224,7 +239,14 @@ class SplitTable:
 
     def validate(self) -> None:
         """Raise ValueError on a structurally broken table: missing
-        fields, off-grid L_K, infeasible or un-measured best splits."""
+        fields, off-grid L_K, infeasible or un-measured best splits.
+
+        Additionally WARNS (does not raise — a degraded table still
+        serves) on ``sources="mixed"``: some cells timed, some modeled —
+        historically the permanent state of quantized cells before the
+        fused-quant harness existed, now just a sign of an interrupted
+        or budget-truncated calibration.
+        """
         if not self.entries:
             raise ValueError("empty SplitTable")
         seen = set()
@@ -250,12 +272,26 @@ class SplitTable:
                 raise ValueError(
                     f"best_split {e['best_split']} is not the argmin of "
                     f"its latency curve: {e['latencies_us']}")
-            key = (e["batch"], e["num_heads_q"], e["num_heads_kv"],
-                   e["head_dim"], e["impl"], e["dtype_bytes"],
-                   e["lk_bucket"])
+            key = _entry_family(e) + (e["lk_bucket"],)
             if key in seen:
                 raise ValueError(f"duplicate cell {key}")
             seen.add(key)
+        if self.fingerprint.get("sources") == "mixed":
+            modeled = sorted({
+                (e["kv_dtype"], e["impl"])
+                for e in self.entries
+                if e["source"] not in MEASURED_SOURCES})
+            n_mod = sum(1 for e in self.entries
+                        if e["source"] not in MEASURED_SOURCES)
+            warnings.warn(
+                f"SplitTable has mixed sources: {n_mod}/{len(self.entries)} "
+                f"cells are modeled (families by (kv_dtype, impl): "
+                f"{modeled}) while the rest are timed.  Re-run "
+                "`python -m repro.launch.tune --mode wallclock` to time "
+                "the whole grid (the fused-quant harness covers int8/fp8 "
+                "cells), or merge() a wallclock recalibration of just "
+                "those families over this table.",
+                UserWarning, stacklevel=2)
 
     def describe(self) -> Dict[str, Any]:
         return {

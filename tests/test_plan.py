@@ -38,7 +38,8 @@ from repro.plan import (
 from repro.serving.engine import DecodeEngine, Request
 
 GOLDEN = Path(__file__).parent / "golden" / "split_policy_table.json"
-_KEY = re.compile(r"^(\w+)\|B(\d+)\|L(\d+)\|Hq(\d+)\|Hkv(\d+)\|C(\d+)$")
+_KEY = re.compile(
+    r"^(\w+)\|B(\d+)\|L(\d+)\|Hq(\d+)\|Hkv(\d+)\|C(\d+)(?:\|(\w+))?$")
 
 
 # ---------------------------------------------------------------------------
@@ -57,9 +58,11 @@ def test_planner_reproduces_golden_table_bit_exact():
     for key, want in table.items():
         m = _KEY.match(key)
         assert m, f"unparseable golden key {key!r}"
-        policy, b, lk, hq, hkv, cores = m.group(1), *map(int, m.groups()[1:])
+        policy = m.group(1)
+        b, lk, hq, hkv, cores = map(int, m.groups()[1:6])
+        kv_dtype = m.group(7) or "bfloat16"   # quant-family rows
         seen_policies.add(policy)
-        spec = AttentionSpec.decode(b, lk, hq, hkv, 128)
+        spec = AttentionSpec.decode(b, lk, hq, hkv, 128, kv_dtype=kv_dtype)
         got = Planner(policy=policy, num_cores=cores).plan(spec).num_splits
         assert got == want, f"{key}: planner={got} golden={want}"
     assert seen_policies == set(analytic_policies())

@@ -14,6 +14,7 @@ import sys
 from pathlib import Path
 
 from repro.core.split_policy import (
+    KV_DTYPES,
     DecodeWorkload,
     analytic_policies,
     choose_num_splits,
@@ -29,6 +30,17 @@ SEQLENS_K = (128, 256, 384, 448, 512, 640, 1024, 4096, 32768)
 HEADS = ((64, 1), (32, 4), (16, 2), (40, 8), (20, 20), (8, 8))
 NUM_CORES = (8, 16, 132)
 
+# quant-family rows (repro.quant): keys carry the kv_dtype suffix so a
+# byte-sensitive policy (tpu_adaptive reads ``dtype_bytes``) is pinned
+# per family — and the int8/fp8 rows pin that the ANALYTIC surface is
+# byte-driven, never name-driven (same bytes => same decision; the
+# name-keyed distinction lives in the measured table, `make tune-golden`)
+QUANT_DTYPES_GRID = ("int8", "fp8")
+QUANT_BATCHES = (1, 8)
+QUANT_SEQLENS_K = (384, 512, 1024, 4096)
+QUANT_HEADS = ((64, 1), (16, 2), (32, 4))
+QUANT_NUM_CORES = (8, 132)
+
 
 def compute_table() -> dict:
     # analytic backends only: the table-backed ``measured`` policy's
@@ -43,6 +55,19 @@ def compute_table() -> dict:
                         key = f"{policy}|B{b}|L{lk}|Hq{hq}|Hkv{hkv}|C{cores}"
                         table[key] = choose_num_splits(
                             w, policy=policy, num_cores=cores)
+        for dtype in QUANT_DTYPES_GRID:
+            for b in QUANT_BATCHES:
+                for lk in QUANT_SEQLENS_K:
+                    for hq, hkv in QUANT_HEADS:
+                        for cores in QUANT_NUM_CORES:
+                            w = DecodeWorkload(
+                                b, 1, lk, hq, hkv, 128,
+                                dtype_bytes=KV_DTYPES[dtype],
+                                kv_dtype=dtype)
+                            key = (f"{policy}|B{b}|L{lk}|Hq{hq}|"
+                                   f"Hkv{hkv}|C{cores}|{dtype}")
+                            table[key] = choose_num_splits(
+                                w, policy=policy, num_cores=cores)
     return table
 
 
@@ -66,6 +91,27 @@ def test_golden_pins_the_papers_headline_cell():
     want = json.loads(GOLDEN.read_text())
     assert want["fa3_baseline|B1|L512|Hq64|Hkv1|C132"] == 1
     assert want["paper|B1|L512|Hq64|Hkv1|C132"] == 3
+
+
+def test_golden_quant_rows_are_byte_aware():
+    """The quant families are pinned: a byte-sensitive policy decides
+    differently for a 1-byte cache than for bf16 somewhere on the grid,
+    and int8/fp8 (same width) always agree on the ANALYTIC surface —
+    the name-keyed distinction is the measured table's job."""
+    want = json.loads(GOLDEN.read_text())
+    diverged = 0
+    for b in QUANT_BATCHES:
+        for lk in QUANT_SEQLENS_K:
+            for hq, hkv in QUANT_HEADS:
+                for cores in QUANT_NUM_CORES:
+                    stem = f"B{b}|L{lk}|Hq{hq}|Hkv{hkv}|C{cores}"
+                    for policy in analytic_policies():
+                        i8 = want[f"{policy}|{stem}|int8"]
+                        assert i8 == want[f"{policy}|{stem}|fp8"]
+                        if i8 != want[f"{policy}|{stem}"]:
+                            diverged += 1
+    assert diverged > 0, \
+        "no analytic policy read dtype_bytes anywhere on the quant grid"
 
 
 if __name__ == "__main__":

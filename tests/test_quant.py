@@ -1,0 +1,379 @@
+"""repro.quant subsystem: QuantSpec -> Quantizer -> QuantizedKV.
+
+The load-bearing guarantees:
+
+- the int8 ``per_head`` / ``abs_max`` path is bit-identical to the
+  legacy ``models.attention.quantize_kv`` (existing engines, caches and
+  golden token streams unchanged by construction),
+- fused in-kernel dequant (Pallas) agrees with the unfused
+  dequant-then-attend reference within ``AB_ATOL`` per dtype, across
+  random shapes, ragged ``kv_len`` and page layouts, with POISONED
+  unallocated tails (data and scales) — masking, not luck,
+- roundtrip error is bounded by ``Quantizer.row_error_bound``,
+- ``AttentionSpec.quantized`` is deprecated with a compat shim
+  (warns once, normalizes to ``kv_dtype="int8"``; replace/bucketed
+  never re-warn) and fp8 never keys or serves int8 table families,
+- the serving engine under ``ServeConfig.kv_quant="int8"`` emits
+  identical greedy streams across dense / paged / prefix-sharing /
+  speculation, with the split policy out of traced code and page
+  conservation intact.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, strategies as st
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.core.split_policy import KV_DTYPES, DecodeWorkload
+from repro.kernels import ops
+from repro.models import build_model
+from repro.models.attention import dequantize_kv, quantize_kv
+from repro.plan import AttentionSpec, Planner
+from repro.quant import (
+    AB_ATOL,
+    QUANT_DTYPES,
+    QuantizedKV,
+    QuantSpec,
+    Quantizer,
+)
+from repro.serving import Request, ServingEngine
+from repro.tune import Calibrator, SplitTable, TuneSpec
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = reduced_config("qwen2.5-3b", num_layers=2, d_model=32)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# QuantSpec: validation surface
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validates_fields():
+    assert QuantSpec().kv_dtype == "int8"
+    assert QuantSpec(kv_dtype="fp8").dtype_bytes == 1
+    with pytest.raises(ValueError, match="kv_dtype"):
+        QuantSpec(kv_dtype="int4")
+    with pytest.raises(ValueError, match="granularity"):
+        QuantSpec(granularity="per_tensor")
+    with pytest.raises(ValueError, match="amax mode"):
+        QuantSpec(amax_mode="percentile")
+    with pytest.raises(ValueError, match="static_amax"):
+        QuantSpec(amax_mode="static")          # needs the value
+    with pytest.raises(ValueError, match="eps"):
+        QuantSpec(eps=0.0)
+
+
+def test_quant_dtypes_registry_is_the_policy_registry():
+    """One byte-width registry: every QUANT_DTYPES entry must exist in
+    split_policy.KV_DTYPES with the width the storage dtype actually
+    has — the planner and the quantizer can never disagree on bytes."""
+    for name, qd in QUANT_DTYPES.items():
+        assert KV_DTYPES[name] == jnp.dtype(qd.storage).itemsize == 1
+
+
+# ---------------------------------------------------------------------------
+# Quantizer: numerics
+# ---------------------------------------------------------------------------
+
+
+def test_int8_bit_identical_to_legacy_quantize_kv():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 17, 3, 8)), jnp.float32)
+    qz = Quantizer()
+    q, s = qz.quantize(x)
+    lq, ls = quantize_kv(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(lq))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ls))
+    np.testing.assert_array_equal(np.asarray(qz.dequantize(q, s)),
+                                  np.asarray(dequantize_kv(lq, ls)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(kv_dtype=st.sampled_from(["int8", "fp8"]),
+       L=st.integers(1, 40), H=st.integers(1, 4),
+       D=st.sampled_from([4, 8, 16]), seed=st.integers(0, 99))
+def test_roundtrip_error_within_bound(kv_dtype, L, H, D, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(10.0 * rng.standard_normal((L, H, D)), jnp.float32)
+    qz = Quantizer.from_kv_dtype(kv_dtype)
+    q, s = qz.quantize(x)
+    err = jnp.abs(qz.dequantize(q, s) - x)
+    bound = qz.row_error_bound(s)[..., None]
+    assert bool(jnp.all(err <= bound + 1e-7))
+
+
+def test_per_page_granularity_pools_scales():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 10, 2, 4)), jnp.float32)
+    qz = Quantizer(QuantSpec(granularity="per_page"))
+    with pytest.raises(ValueError, match="page_size"):
+        qz.quantize(x)
+    _, s = qz.quantize(x, page_size=4)
+    s = np.asarray(s)
+    assert s.shape == (1, 10, 2)
+    for p0 in (0, 4):                    # full pages share one scale
+        assert np.all(s[:, p0:p0 + 4] == s[:, p0:p0 + 1])
+    # the ragged last page pools over its own rows only
+    assert np.all(s[:, 8:10] == s[:, 8:9])
+
+
+def test_static_amax_mode():
+    x = jnp.asarray([[[0.5, -2.0]]], jnp.float32)
+    qz = Quantizer(QuantSpec(amax_mode="static", static_amax=4.0))
+    _, s = qz.quantize(x)
+    np.testing.assert_allclose(np.asarray(s), 4.0 / 127.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused (in-kernel dequant) vs unfused (dequant-then-attend): the oracle
+# ---------------------------------------------------------------------------
+
+
+def _poisoned(rng, B, Lk, hq, hkv, D, kv_dtype):
+    q = jnp.asarray(rng.standard_normal((B, hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Lk, hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Lk, hkv, D)), jnp.float32)
+    kv_len = jnp.asarray(rng.integers(1, Lk + 1, size=B), jnp.int32)
+    art = Quantizer.from_kv_dtype(kv_dtype).quantized_kv(k, v)
+    rows = jnp.arange(Lk)[None, :, None] >= kv_len[:, None, None]
+    return q, art._replace(
+        k=jnp.where(rows[..., None], jnp.asarray(127, art.k.dtype), art.k),
+        v=jnp.where(rows[..., None], jnp.asarray(-127, art.v.dtype), art.v),
+        k_scale=jnp.where(rows, 1e4, art.k_scale),
+        v_scale=jnp.where(rows, 1e4, art.v_scale)), kv_len
+
+
+@settings(max_examples=12, deadline=None)
+@given(kv_dtype=st.sampled_from(["int8", "fp8"]),
+       batch=st.integers(1, 3),
+       seqlen=st.sampled_from([32, 64, 96, 160, 257]),
+       heads=st.sampled_from([(4, 1), (8, 2), (4, 4)]),
+       seed=st.integers(0, 99))
+def test_fused_matches_unfused_within_tolerance(kv_dtype, batch, seqlen,
+                                                heads, seed):
+    """Fused Pallas in-register dequant vs the materialized reference,
+    SAME artifact both sides: the quantization error cancels, the bound
+    covers kernel accumulation drift only.  Tails past each row's
+    kv_len are poisoned in data AND scales."""
+    hq, hkv = heads
+    rng = np.random.default_rng(seed)
+    q, art, kv_len = _poisoned(rng, batch, seqlen, hq, hkv, 8, kv_dtype)
+    fused = ops.decode_attention_quant(q, art, kv_len, impl="pallas")
+    unfused = ops.decode_attention_quant(q, art, kv_len, impl="xla")
+    assert bool(jnp.all(jnp.isfinite(fused)))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=AB_ATOL[kv_dtype], rtol=0)
+
+
+def test_unfused_is_exactly_dequant_then_attend():
+    rng = np.random.default_rng(3)
+    q, art, kv_len = _poisoned(rng, 2, 64, 4, 1, 8, "int8")
+    qz = Quantizer()
+    got = ops.decode_attention_quant(q, art, kv_len, impl="xla")
+    want = ops.decode_attention(q, qz.dequantize(art.k, art.k_scale),
+                                qz.dequantize(art.v, art.v_scale),
+                                kv_len, impl="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(kv_dtype=st.sampled_from(["int8", "fp8"]),
+       page_size=st.sampled_from([8, 16]),
+       num_pages=st.integers(2, 4), seed=st.integers(0, 99))
+def test_fused_paged_views_match_dense_gather(kv_dtype, page_size,
+                                              num_pages, seed):
+    """PagedKV quant views (scale pools page with the data pools under
+    ONE page table) attend bit-equal to their dense-gathered launch —
+    trash-page rows land past kv_len and are masked."""
+    B, hq, hkv, D = 2, 4, 1, 8
+    rng = np.random.default_rng(seed)
+    pool = B * num_pages + 1                    # page 0 = trash
+    kp = jnp.asarray(rng.standard_normal((pool, page_size, hkv, D)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pool, page_size, hkv, D)),
+                     jnp.float32)
+    table = jnp.asarray(
+        [[1 + b * num_pages + p for p in range(num_pages)] + [0]
+         for b in range(B)], jnp.int32)
+    view = num_pages * page_size
+    kv_len = jnp.asarray(rng.integers(1, view + 1, size=B), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, hq, D)), jnp.float32)
+    qz = Quantizer.from_kv_dtype(kv_dtype)
+    kq, ks = qz.quantize(kp)
+    vq, vs = qz.quantize(vp)
+    paged = ops.decode_attention_quant(
+        q, (ops.PagedKV(kq, table, num_pages),
+            ops.PagedKV(vq, table, num_pages),
+            ops.PagedKV(ks, table, num_pages),
+            ops.PagedKV(vs, table, num_pages)), kv_len, impl="pallas")
+    dense = ops.decode_attention_quant(
+        q, (ops.gather_pages(kq, table, num_pages=num_pages),
+            ops.gather_pages(vq, table, num_pages=num_pages),
+            ops.gather_pages(ks, table, num_pages=num_pages),
+            ops.gather_pages(vs, table, num_pages=num_pages)),
+        kv_len, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+# ---------------------------------------------------------------------------
+# AttentionSpec: the deprecated boolean, and name-keyed families
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_flag_warns_and_normalizes_to_int8():
+    with pytest.warns(DeprecationWarning, match="kv_dtype"):
+        spec = AttentionSpec.decode(1, 512, 64, 1, 128, quantized=True)
+    assert spec.kv_dtype == "int8"
+    assert spec == AttentionSpec.decode(1, 512, 64, 1, 128,
+                                        kv_dtype="int8")
+    # normalized specs never re-warn through replace / bucketed
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert spec.bucketed().kv_dtype == "int8"
+        assert dataclasses.replace(spec, seqlen_k=640).quantized
+
+
+def test_explicit_kv_dtype_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s8 = AttentionSpec.decode(1, 512, 64, 1, 128, kv_dtype="int8")
+        sf = AttentionSpec.decode(1, 512, 64, 1, 128, kv_dtype="fp8")
+    assert s8.quantized and sf.quantized
+    assert s8 != sf                         # same bytes, distinct family
+    with pytest.raises(ValueError, match="kv_dtype"):
+        AttentionSpec.decode(1, 512, 64, 1, 128, kv_dtype="int4")
+
+
+def test_fp8_never_matches_int8_table_cells():
+    """Same byte width, different family: an fp8 workload must fall
+    back (counted), never serve an int8 cell."""
+    spec = TuneSpec(lk_buckets=(512,), batches=(1,),
+                    head_shapes=((64, 1, 128),), dtypes=("int8",))
+    table = Calibrator(spec, mode="modeled", seed=0).calibrate()
+    w8 = DecodeWorkload(1, 1, 512, 64, 1, 128,
+                        dtype_bytes=1, kv_dtype="int8")
+    wf = DecodeWorkload(1, 1, 512, 64, 1, 128,
+                        dtype_bytes=1, kv_dtype="fp8")
+    assert table.covers(w8) and not table.covers(wf)
+    before = table.fallbacks
+    _, tuned = table.choose(wf)
+    assert not tuned and table.fallbacks == before + 1
+    planner = Planner(policy="measured", table=table)
+    assert planner.plan(AttentionSpec.from_workload(w8)).tuned
+    assert not planner.plan(AttentionSpec.from_workload(wf)).tuned
+
+
+def test_workload_dtype_name_consistency():
+    with pytest.raises(ValueError, match="kv_dtype"):
+        DecodeWorkload(1, 1, 512, 64, 1, 128,
+                       dtype_bytes=2, kv_dtype="int8")
+    w = DecodeWorkload(1, 1, 512, 64, 1, 128, dtype_bytes=1)
+    assert w.kv_dtype == "int8"             # legacy byte-width inference
+
+
+# ---------------------------------------------------------------------------
+# Calibrator: the fused-quant wallclock harness + validate()'s message
+# ---------------------------------------------------------------------------
+
+
+def test_wallclock_quant_cells_record_wallclock_source():
+    spec = TuneSpec(lk_buckets=(128,), batches=(1,),
+                    head_shapes=((4, 1, 8),), dtypes=("bfloat16", "int8"),
+                    repeats=2, warmup=1)
+    table = Calibrator(spec, mode="wallclock", seed=0).calibrate()
+    srcs = {e["kv_dtype"]: e["source"] for e in table.entries}
+    assert srcs == {"bfloat16": "measured", "int8": "wallclock"}
+    assert table.fingerprint["sources"] == "measured"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # fully measured: no nag
+        table.validate()
+
+
+def test_validate_flags_mixed_sources_actionably():
+    spec = TuneSpec(lk_buckets=(128, 256), batches=(1,),
+                    head_shapes=((4, 1, 8),), dtypes=("int8",),
+                    budget_s=0.0)
+    table = Calibrator(spec, mode="wallclock", seed=0).calibrate()
+    assert table.fingerprint["sources"] == "mixed"
+    with pytest.warns(UserWarning, match="--mode wallclock"):
+        table.validate()
+
+
+# ---------------------------------------------------------------------------
+# Engine: one greedy stream across the whole serving matrix at int8
+# ---------------------------------------------------------------------------
+
+_MATRIX = [
+    ("dense", {}),
+    ("paged", {"cache_layout": "paged"}),
+    ("paged+prefix", {"cache_layout": "paged", "share_prefix": True}),
+    ("paged+spec", {"cache_layout": "paged", "speculation": "ngram",
+                    "speculation_k": 3}),
+]
+
+
+def _stream(model, params, kv_quant, **kw):
+    eng = ServingEngine(
+        model, ServeConfig(model=model.cfg, kv_quant=kv_quant, **kw),
+        max_len=128, batch_slots=2)
+    eng.load(params)
+    ops.reset_policy_eval_count()
+    shared = [7, 3, 7, 3, 7, 3, 7, 3]
+    for i in range(3):
+        eng.submit(Request(i, shared + [11 + i, 5, 11 + i],
+                           max_new_tokens=6))
+    outs = eng.drain()
+    assert ops.policy_eval_count() == 0
+    if kw.get("cache_layout") == "paged":
+        eng.cache.check_conservation()
+    return [c.tokens for c in sorted(outs, key=lambda c: c.request_id)]
+
+
+def test_engine_int8_streams_identical_across_matrix(tiny_model):
+    cfg, model, params = tiny_model
+    streams = {name: _stream(model, params, "int8", **kw)
+               for name, kw in _MATRIX}
+    for name, toks in streams.items():
+        assert toks == streams["dense"], f"{name} diverged"
+
+
+def test_engine_kv_quant_resolution_and_family_keying(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServingEngine(model, ServeConfig(model=cfg, kv_quant="fp8"),
+                        max_len=128, batch_slots=2)
+    assert eng.kv_dtype == "fp8"
+    w = eng.sched.decode_spec(128).workload()
+    assert (w.dtype_bytes, w.kv_dtype) == (1, "fp8")
+    d = eng.sched.decode_plan(100).describe()
+    assert d["kv_dtype"] == "fp8" and d["dtype_bytes"] == 1
+    # kv_quant wins over the legacy dtype knob; unknown names fail fast
+    eng2 = ServingEngine(
+        model, ServeConfig(model=cfg, kv_quant="int8",
+                           kv_cache_dtype="bfloat16"),
+        max_len=128, batch_slots=2)
+    assert eng2.kv_dtype == "int8"
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServingEngine(model, ServeConfig(model=cfg, kv_quant="int4"),
+                      max_len=128, batch_slots=2)
+
+
+def test_engine_fp8_generates_and_differs_from_int8_plans(tiny_model):
+    """fp8 serves end-to-end (cache leaves in float8 storage) and its
+    plans key the fp8 family — never the int8 one."""
+    cfg, model, params = tiny_model
+    toks = _stream(model, params, "fp8")
+    assert all(len(t) == 6 for t in toks)
+    s8 = _stream(model, params, "int8")
+    assert all(len(t) == 6 for t in s8)

@@ -40,6 +40,7 @@ from repro.serving.engine import DecodeEngine, Request, ServingEngine
 from repro.tune import (
     REFERENCE_SPEC,
     REFERENCE_TABLE_PATH,
+    SCHEMA_VERSION,
     Calibrator,
     SplitTable,
     TuneSpec,
@@ -81,7 +82,7 @@ def test_reference_table_replays_bit_exact(reference_table):
     for e in reference_table.entries:
         spec = AttentionSpec.decode(
             e["batch"], e["lk_bucket"], e["num_heads_q"],
-            e["num_heads_kv"], e["head_dim"])
+            e["num_heads_kv"], e["head_dim"], kv_dtype=e["kv_dtype"])
         plan = planner.plan(spec)
         assert plan.num_splits == e["best_split"], e
         assert plan.tuned and plan.table_version == reference_table.version
@@ -129,7 +130,8 @@ def test_table_rejects_tampered_entries(tmp_path, small_table):
 
 def test_table_merge_overrides_and_extends(small_table):
     sub = TuneSpec(lk_buckets=(512, 640), batches=(1,),
-                   head_shapes=((64, 1, 128),), candidates=(1,))
+                   head_shapes=((64, 1, 128),), candidates=(1,),
+                   dtypes=("bfloat16",))
     recal = Calibrator(sub, mode="modeled", seed=1).calibrate()
     merged = small_table.merge(recal)
     merged.validate()
@@ -139,7 +141,7 @@ def test_table_merge_overrides_and_extends(small_table):
     assert len(merged) == len(small_table) + 1
     assert small_table.choose(w512)[0] != 1    # original decision intact
     other = SplitTable(recal.entries, recal.fingerprint)
-    other.schema = 2                            # simulate newer artifact
+    other.schema = SCHEMA_VERSION + 1           # simulate newer artifact
     with pytest.raises(ValueError, match="merge"):
         small_table.merge(other)
 
@@ -178,10 +180,14 @@ def test_calibrator_wallclock_times_real_launches():
     spec = TuneSpec(lk_buckets=(256,), batches=(1,),
                     head_shapes=((4, 1, 8),), repeats=2, warmup=1)
     table = Calibrator(spec, mode="wallclock", seed=0).calibrate()
-    (e,) = table.entries
-    assert e["source"] == "measured"
-    assert set(e["latencies_us"]) == {"1", "2"}
-    assert all(t > 0 for t in e["latencies_us"].values())
+    bf16, int8 = table.entries          # default grid: bf16 AND int8
+    assert bf16["kv_dtype"] == "bfloat16" and bf16["source"] == "measured"
+    # quantized cells ride the fused harness and are labeled apart
+    assert int8["kv_dtype"] == "int8" and int8["source"] == "wallclock"
+    for e in (bf16, int8):
+        assert set(e["latencies_us"]) == {"1", "2"}
+        assert all(t > 0 for t in e["latencies_us"].values())
+    assert table.fingerprint["sources"] == "measured"   # both timed
     table.validate()
 
 
@@ -379,21 +385,27 @@ def test_engine_loads_table_from_config_path(tmp_path, small_table):
 
 def test_quantized_specs_key_the_int8_family(reference_table):
     """An int8-KV launch must not look up (or mislabel) bf16 cells: the
-    spec's ``quantized`` flag reaches the workload's dtype_bytes, and
-    the bf16-only reference table falls back — counted — instead of
-    serving bf16-measured decisions with tuned provenance."""
+    spec's ``kv_dtype`` reaches the workload's family key, the reference
+    table now commits int8 cells, and an fp8 spec — same byte width —
+    must never be served from them."""
     from repro.plan import AttentionSpec
-    spec = AttentionSpec.decode(1, 512, 64, 1, 128, quantized=True)
+    spec = AttentionSpec.decode(1, 512, 64, 1, 128, kv_dtype="int8")
     assert spec.workload().dtype_bytes == 1
-    plan = Planner(policy="measured", table=reference_table).plan(spec)
-    assert not plan.tuned                      # no int8 family committed
-    # an int8-calibrated table DOES cover it (modeled: int8 cells never
-    # ride the plain wallclock harness — see Calibrator)
+    planner = Planner(policy="measured", table=reference_table)
+    assert planner.plan(spec).tuned            # int8 family is committed
+    # fp8 shares dtype_bytes=1 but keys a distinct (uncommitted) family:
+    # the NAME, not the width, is the key — counted fallback, not tuned
+    fp8 = AttentionSpec.decode(1, 512, 64, 1, 128, kv_dtype="fp8")
+    assert fp8.workload().dtype_bytes == 1
+    before = reference_table.fallbacks
+    assert not planner.plan(fp8).tuned
+    assert reference_table.fallbacks == before + 1
+    # wallclock now times int8 cells through the fused-quant harness
     int8_spec = TuneSpec(lk_buckets=(512,), batches=(1,),
                          head_shapes=((64, 1, 128),), dtypes=("int8",))
     t8 = Calibrator(int8_spec, mode="wallclock", seed=0).calibrate()
-    assert all(e["source"] == "modeled" for e in t8.entries)
-    assert t8.fingerprint["sources"] == "mixed"
+    assert all(e["source"] == "wallclock" for e in t8.entries)
+    assert t8.fingerprint["sources"] == "measured"
     assert Planner(policy="measured", table=t8).plan(spec).tuned
     # and the engine keys its lookups on the serve-config kv dtype
     cfg = reduced_config("qwen2.5-3b", num_layers=1, d_model=32)
