@@ -9,10 +9,10 @@ PY := PYTHONPATH=src python
 
 .PHONY: verify verify-all bench golden plan-golden tune-golden \
 	serving-smoke cache-smoke prefix-smoke tune-smoke spec-smoke \
-	quant-smoke
+	quant-smoke shard-smoke
 
 verify: plan-golden tune-golden serving-smoke cache-smoke prefix-smoke \
-	tune-smoke spec-smoke quant-smoke
+	tune-smoke spec-smoke quant-smoke shard-smoke
 	$(PY) -m pytest -q -m "not multidevice and not slow"
 
 # seconds-scale serving A/B: fused-prefill admission must stay O(1)
@@ -45,6 +45,14 @@ spec-smoke:
 # identical across the serving matrix (structural, not timing)
 quant-smoke:
 	$(PY) -m benchmarks.quant_ab --smoke
+
+# seconds-scale mesh-native serving A/B: dp=4 slot shards serve 4x the
+# single engine's slots and sp=4 sequence-shards decode over 4 chips,
+# both with bit-identical greedy tokens, mesh_splits provenance on the
+# sp plans, per-shard launch counters, and zero traced policy evals
+# (re-execs itself under 8 forced host devices)
+shard-smoke:
+	$(PY) -m benchmarks.shard_ab --smoke
 
 # seconds-scale tuning A/B: measured policy never slower than the
 # analytic policies on covered shapes, counted paper fallback elsewhere,

@@ -11,12 +11,14 @@ import time
 def main() -> None:
     from benchmarks import (
         cache_ab,
+        mesh_split_ab,
         metadata_ab,
         prefix_ab,
         quant_ab,
         regression_sweep,
         roofline_report,
         serving_ab,
+        shard_ab,
         spec_ab,
         table1_ab,
         tune_ab,
@@ -42,6 +44,11 @@ def main() -> None:
          spec_ab.main),
         ("quant_ab (fused quantized KV vs dequant-then-attend)",
          quant_ab.main),
+        ("shard_ab (single vs dp slot shards vs sp seq-sharded decode; "
+         "re-execs under 8 forced devices)", shard_ab.main),
+        ("mesh_split_ab smoke (pod policy A/B; re-execs under 16 "
+         "forced devices — full 512-device run stays manual)",
+         mesh_split_ab.smoke_main),
     ]
     failures = 0
     for name, fn in jobs:

@@ -324,6 +324,12 @@ class ServeConfig:
     # repro.spec: consecutive zero-accept verify steps before the
     # engine stops speculating for that request (None = never).
     speculation_max_rejects: Optional[int] = None
+    # repro.shard: the mesh-native serving topology as a ShardSpec
+    # string — "dp,sp" positional (e.g. "4,2") or "dp=4,sp=2" named,
+    # parsed by ShardSpec.parse.  dp data-parallel slot shards x sp
+    # sequence-shard chips per shard, needing dp*sp devices.  None =
+    # the single-device ServingEngine (serve --mesh sets this).
+    shard: Optional[str] = None
     max_batch: int = 128
     seed: int = 0
 

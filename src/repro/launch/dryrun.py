@@ -42,7 +42,7 @@ from repro.launch.mesh import make_production_mesh, mesh_name
 from repro.models.registry import build_model
 from repro.roofline.analysis import analyze, model_flops_for
 from repro.roofline.probe import corrected_cost
-from repro.serving.decode_step import build_prefill_step, build_serve_step
+from repro.serving.decode_step import build_mesh_decode_step, build_prefill_step
 from repro.training.train_step import build_train_step
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -71,7 +71,7 @@ def _lower_cell(arch: str, shape: ShapeConfig, mesh, policy: str):
         kind = "prefill"
     else:
         scfg = ServeConfig(model=cfg, shape=shape, split_policy=policy)
-        bundle = build_serve_step(model, scfg, mesh)
+        bundle = build_mesh_decode_step(model, scfg, mesh)
         lowered = bundle.step.lower(*bundle.abstract_args())
         tokens = shape.global_batch                      # one token / seq
         kind = "decode"

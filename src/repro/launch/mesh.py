@@ -12,9 +12,10 @@ chips in place of SMs.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.compat import make_mesh
 from repro.plan import Planner
@@ -32,6 +33,38 @@ def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     data = n // model_axis
     return make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_engine_mesh(dp: int, sp: int, devices: Optional[Sequence] = None
+                     ) -> Tuple[jax.sharding.Mesh,
+                                Tuple[jax.sharding.Mesh, ...]]:
+    """The mesh-native serving engine's topology: a (dp, sp) global mesh
+    over axes ("data", "model") plus one (1, sp) sub-mesh per dp shard.
+
+    Built with the plain ``Mesh`` constructor over an EXPLICIT device
+    grid — never ``mesh_utils`` topology reordering — so shard ``d``
+    deterministically owns ``devices[d*sp : (d+1)*sp]`` and two engines
+    constructed for the same ShardSpec in one process agree on every
+    device assignment (the per-topology plan-cache registry depends on
+    this).
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    need = dp * sp
+    if dp < 1 or sp < 1:
+        raise ValueError(f"mesh axes must be >= 1, got dp={dp}, sp={sp}")
+    if len(devs) < need:
+        raise ValueError(
+            f"shard topology dp={dp} x sp={sp} needs {need} devices, "
+            f"{len(devs)} visible — on CPU force virtual devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    grid = np.empty((dp, sp), dtype=object)
+    for d in range(dp):
+        for s in range(sp):
+            grid[d, s] = devs[d * sp + s]
+    mesh = jax.sharding.Mesh(grid, ("data", "model"))
+    subs = tuple(jax.sharding.Mesh(grid[d:d + 1, :], ("data", "model"))
+                 for d in range(dp))
+    return mesh, subs
 
 
 def mesh_name(mesh: jax.sharding.Mesh) -> str:

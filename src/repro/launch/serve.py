@@ -44,7 +44,8 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 cache_layout: str = "dense", share_prefix: bool = False,
                 speculate=None, speculate_k: int = 4,
                 speculate_max_rejects=None, kv_quant=None,
-                tune_table=None, stats_path=None, log_fn=print):
+                tune_table=None, stats_path=None, mesh=None,
+                log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -53,22 +54,31 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
             "exercised by the tests")
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(seed))
-    engine = ServingEngine(
-        model,
-        ServeConfig(model=cfg, split_policy=policy,
-                    num_splits_override=num_splits_override,
-                    prefill_mode=prefill_mode,
-                    cache_layout=cache_layout,
-                    share_prefix=share_prefix,
-                    speculation=speculate,
-                    speculation_k=speculate_k,
-                    speculation_max_rejects=speculate_max_rejects,
-                    kv_quant=kv_quant,
-                    tune_table_path=(str(tune_table) if tune_table
-                                     else None),
-                    stats_path=(str(stats_path) if stats_path else None)),
-        max_len=max_len, batch_slots=batch_slots,
-        sampler=get_sampler(sampler))
+    scfg = ServeConfig(model=cfg, split_policy=policy,
+                       num_splits_override=num_splits_override,
+                       prefill_mode=prefill_mode,
+                       cache_layout=cache_layout,
+                       share_prefix=share_prefix,
+                       speculation=speculate,
+                       speculation_k=speculate_k,
+                       speculation_max_rejects=speculate_max_rejects,
+                       kv_quant=kv_quant,
+                       tune_table_path=(str(tune_table) if tune_table
+                                        else None),
+                       stats_path=(str(stats_path) if stats_path
+                                   else None),
+                       shard=mesh)
+    if mesh:
+        # mesh-native topology: --slots becomes slots PER SHARD
+        from repro.shard import ShardedServingEngine, ShardSpec
+        spec = ShardSpec.parse(mesh, slots_per_shard=batch_slots)
+        engine = ShardedServingEngine(
+            model, scfg, spec=spec, max_len=max_len,
+            sampler=get_sampler(sampler))
+    else:
+        engine = ServingEngine(
+            model, scfg, max_len=max_len, batch_slots=batch_slots,
+            sampler=get_sampler(sampler))
     engine.load(params)
 
     rng = np.random.default_rng(seed)
@@ -107,6 +117,19 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
            f"in {dt:.2f}s ({1e3 * dt / max(1, total_new):.1f} ms/token)")
     log_fn("frozen plans (bucket -> num_splits): "
            f"{engine.planned_splits()}")
+    if mesh:
+        spec_d = engine.spec.describe()
+        log_fn(f"shard topology dp={spec_d['dp']} x sp={spec_d['sp']} "
+               f"({spec_d['total_slots']} slots over "
+               f"{spec_d['num_devices']} devices, "
+               f"{engine.plan.fingerprint})")
+        for row in engine.describe():
+            budget = (f", pages {row['free_pages']}/"
+                      f"{row['total_pages']} free"
+                      if "total_pages" in row else "")
+            log_fn(f"  shard {row['shard']}: {row['routed']} requests "
+                   f"over {row['slots']} slots, {row['launches']} "
+                   f"launches{budget}")
     if kv_quant:
         log_fn(f"kv quant: {kv_quant} storage + f32 scales "
                f"(plans keyed on the {kv_quant} family, "
@@ -199,6 +222,13 @@ def main() -> None:
                     help="repro.quant low-precision KV serving mode: "
                          "quantize-on-write KV cache + in-kernel dequant "
                          "on pallas, quant-keyed split plans everywhere")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh-native topology 'dp,sp' (repro.shard): "
+                         "dp data-parallel slot shards x sp sequence-"
+                         "shard chips per shard; --slots becomes slots "
+                         "PER SHARD.  Needs dp*sp devices (CPU: set "
+                         "XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count)")
     ap.add_argument("--stream", action="store_true",
                     help="print TOKEN/FINISHED events as they happen")
     args = ap.parse_args()
@@ -215,7 +245,8 @@ def main() -> None:
                 speculate_k=args.speculate_k,
                 speculate_max_rejects=args.speculate_max_rejects,
                 kv_quant=args.kv_quant,
-                tune_table=args.tune_table, stats_path=args.stats_path)
+                tune_table=args.tune_table, stats_path=args.stats_path,
+                mesh=args.mesh)
 
 
 if __name__ == "__main__":

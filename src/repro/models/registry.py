@@ -113,13 +113,17 @@ class Model:
                          prefix_capacity=prefix_capacity)
 
     def cache_manager(self, batch: int, max_len: int,
-                      kv_dtype: str = "bfloat16", **layout_kw):
+                      kv_dtype: str = "bfloat16", label: str = "",
+                      **layout_kw):
         """Resolve a cache spec into a :class:`~repro.cache.CacheManager`
         (the storage-owning entry point; models no longer hand out raw
-        arrays — see the README migration map)."""
+        arrays — see the README migration map).  ``label`` tags the
+        manager for observability — the mesh-native engine passes
+        ``shard{d}`` so conservation failures name the owning shard."""
         from repro.cache import CacheManager
         return CacheManager(self, self.cache_spec(batch, max_len,
-                                                  kv_dtype, **layout_kw))
+                                                  kv_dtype, **layout_kw),
+                            label=label)
 
     def init_cache(self, batch: int, max_len: int,
                    kv_dtype: str = "bfloat16") -> Pytree:

@@ -25,7 +25,12 @@ The kernels (``repro.kernels.ops``), the serving engine
 through this package; ``repro.core.scheduler_metadata`` remains as a
 thin legacy shim over it.
 """
-from repro.plan.cache import CacheInfo, PlanCache, PlanCacheStats  # noqa: F401
+from repro.plan.cache import (  # noqa: F401
+    CacheInfo,
+    PlanCache,
+    PlanCacheStats,
+    merge_stats_snapshots,
+)
 from repro.plan.plan import LaunchPlan  # noqa: F401
 from repro.plan.planner import Planner  # noqa: F401
 from repro.plan.scope import current_plan, plan_scope  # noqa: F401

@@ -76,6 +76,10 @@ class PlanCacheStats:
     spec_accepted: int = 0
     spec_emitted: int = 0
     spec_disabled: int = 0   # requests that hit SpecConfig.max_rejects
+    # repro.tune registry (directory of tables): engines that found no
+    # table matching the live backend fingerprint and fell back to the
+    # registry's first table (counted once per engine construction)
+    table_registry_fallbacks: int = 0
 
     @property
     def total_launches(self) -> int:
@@ -178,6 +182,7 @@ class PlanCacheStats:
             "spec_disabled": self.spec_disabled,
             "spec_acceptance_rate": round(self.spec_acceptance_rate, 4),
             "spec_tokens_per_step": round(self.spec_tokens_per_step, 4),
+            "table_registry_fallbacks": self.table_registry_fallbacks,
         }
 
     def reset(self) -> None:
@@ -196,6 +201,7 @@ class PlanCacheStats:
         self.spec_accepted = 0
         self.spec_emitted = 0
         self.spec_disabled = 0
+        self.table_registry_fallbacks = 0
 
 
 class PlanCache:
@@ -257,3 +263,55 @@ class PlanCache:
 
     def items(self):
         return self._entries.items()
+
+
+# keys of PlanCacheStats.to_json() that merge by summation (everything
+# the per-shard engines count independently)
+_MERGE_SUM_KEYS = (
+    "hits", "misses", "total_launches", "fallback_launches",
+    "measured_lookups", "measured_fallbacks", "spec_steps",
+    "spec_proposed", "spec_accepted", "spec_emitted", "spec_disabled",
+    "table_registry_fallbacks",
+)
+
+
+def merge_stats_snapshots(snaps: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Merge per-shard :meth:`PlanCacheStats.to_json` snapshots into one
+    aggregate snapshot (the ``repro.shard`` engine's ``stats_path`` dump
+    carries both the per-shard sections and this merge).
+
+    Counters sum; per-key launch counts sum per key; ``seen_buckets``
+    union (so ``distinct_buckets`` is the union's size, not a sum —
+    every shard plans the same buckets for the same traffic); traces
+    concatenate in shard order, trimmed to ``TRACE_CAP``; the derived
+    speculation rates are recomputed from the summed counters.  Non-
+    counter keys a caller added to a snapshot (``policy``, ``shard``,
+    ...) are ignored.
+    """
+    out: Dict[str, Any] = {k: 0 for k in _MERGE_SUM_KEYS}
+    launches: Dict[str, int] = {}
+    seen: Set[str] = set()
+    fallback_trace: List[list] = []
+    measured_fallback_trace: List[list] = []
+    for s in snaps:
+        for k in _MERGE_SUM_KEYS:
+            out[k] += int(s.get(k, 0))
+        for k, v in s.get("launches", {}).items():
+            launches[k] = launches.get(k, 0) + int(v)
+        seen.update(s.get("seen_buckets", ()))
+        fallback_trace.extend(s.get("fallback_trace", ()))
+        measured_fallback_trace.extend(s.get("measured_fallback_trace", ()))
+    cap = PlanCacheStats.TRACE_CAP
+    out["launches"] = launches
+    out["seen_buckets"] = sorted(seen)
+    out["distinct_buckets"] = len(seen)
+    out["fallback_trace"] = fallback_trace[-cap:]
+    out["measured_fallback_trace"] = measured_fallback_trace[-cap:]
+    out["spec_acceptance_rate"] = round(
+        out["spec_accepted"] / out["spec_proposed"]
+        if out["spec_proposed"] else 0.0, 4)
+    out["spec_tokens_per_step"] = round(
+        out["spec_emitted"] / out["spec_steps"]
+        if out["spec_steps"] else 0.0, 4)
+    out["shards"] = len(snaps)
+    return out

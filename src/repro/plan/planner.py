@@ -107,7 +107,8 @@ class Planner:
     # --- mesh-level planning -----------------------------------------------
 
     def mesh_plan(self, spec: AttentionSpec, *, axis_size: int,
-                  axis: str = "model") -> LaunchPlan:
+                  axis: str = "model",
+                  bucket: Optional[int] = None) -> LaunchPlan:
         """Kernel plan + the mesh-level sequence-shard decision.
 
         Two reasons to shard the cache over ``axis`` (``mesh_splits`` =
@@ -118,6 +119,10 @@ class Planner:
         strictly better regardless of the compute policy.  The split is
         binary on a fixed mesh (any split -> whole-axis shard; fractional
         axis splits need sub-axes, recorded as future work).
+
+        ``bucket`` passes through to :meth:`plan` — the mesh-native
+        serving engine freezes bucket-keyed plans through this path, so
+        ``mesh_splits`` provenance lands on every scheduler plan.
         """
         w = spec.workload()
         mesh_spec = dataclasses.replace(spec, mesh_axis=axis,
@@ -126,10 +131,10 @@ class Planner:
         if spec.num_heads_kv % axis_size != 0:      # storage-driven (b)
             planner = dataclasses.replace(planner,
                                           num_splits_override=axis_size)
-            p = planner.plan(mesh_spec)
+            p = planner.plan(mesh_spec, bucket=bucket)
             return dataclasses.replace(p, mesh_splits=axis_size,
                                        seq_shard_axis=axis)
-        p = planner.plan(mesh_spec)
+        p = planner.plan(mesh_spec, bucket=bucket)
         s_mesh = choose_mesh_splits(w, axis_size, policy=self.policy,
                                     table=self.table, impl=self.impl)
         return dataclasses.replace(

@@ -79,7 +79,7 @@ def _measure(arch_cfg: ModelConfig, shape: ShapeConfig, mesh, policy: str
              ) -> ProbeCost:
     """Lower+compile one probe variant; extract flops/bytes/collectives."""
     from repro.models.registry import Model
-    from repro.serving.decode_step import build_prefill_step, build_serve_step
+    from repro.serving.decode_step import build_mesh_decode_step, build_prefill_step
     from repro.training.train_step import build_train_step
 
     model = Model(arch_cfg)
@@ -93,7 +93,7 @@ def _measure(arch_cfg: ModelConfig, shape: ShapeConfig, mesh, policy: str
         bundle = build_prefill_step(model, scfg, mesh)
     else:
         scfg = ServeConfig(model=arch_cfg, shape=shape, split_policy=policy)
-        bundle = build_serve_step(model, scfg, mesh)
+        bundle = build_mesh_decode_step(model, scfg, mesh)
     compiled = bundle.step.lower(*bundle.abstract_args()).compile()
     cost = compat.cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())

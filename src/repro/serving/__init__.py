@@ -3,6 +3,7 @@ scheduler, pluggable sampling, and the mesh-level serve-step builder."""
 from repro.serving.decode_step import (  # noqa: F401
     ServeStepBundle,
     attention_spec,
+    build_mesh_decode_step,
     build_prefill_step,
     build_serve_step,
     decode_workload,

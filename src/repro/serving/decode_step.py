@@ -11,17 +11,24 @@ batch rides the data axes; the **model axis** is where starvation lives:
   over its shard, and the LSE-combine algebra runs as an all-reduce —
   identical math to the paper's split-KV, with chips in place of SMs.
 
-``build_serve_step`` freezes one :class:`~repro.plan.LaunchPlan`
+``build_mesh_decode_step`` freezes one :class:`~repro.plan.LaunchPlan`
 through the mesh-level :class:`~repro.plan.Planner`
 (:func:`~repro.launch.mesh.planner_for_mesh`), builds the cache
 shardings from its ``mesh_splits`` decision, and pins the plan into the
 decode ops via :func:`repro.plan.plan_scope`.  The decision is *per
 (arch, shape)* and entirely static — the A/B between policies compiles
 two different programs, which the dry-run + roofline compare.
+
+The builder is the FROZEN, single-launch form of this idea (dry-run /
+roofline probes); the request-lifecycle form — per-bucket plans, slot
+admission, dp routing — is ``repro.shard.ShardedServingEngine``, which
+supersedes the old ``build_serve_step`` name (kept as a warn-once
+delegating shim).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -37,30 +44,13 @@ from repro.models.registry import Model
 from repro.plan import AttentionSpec, LaunchPlan, plan_scope
 from repro.sharding.ctx import activation_mesh
 from repro.sharding.rules import (
-    ShardingRules,
     cache_rules,
+    serve_param_rules,  # noqa: F401  (historic home; re-exported)
     spec_for,
     tree_shardings,
 )
 
 Pytree = Any
-
-
-def serve_param_rules() -> ShardingRules:
-    """Inference layout: TP on model, no FSDP (no per-step all-gathers).
-
-    Expert weights additionally spread over the data axes — big MoE
-    checkpoints (Qwen3-235B) exceed one chip's HBM under TP-16 alone.
-    """
-    return ShardingRules({
-        "embed": None,
-        "vocab": "model",
-        "heads": "model",
-        "kv_heads": "model",
-        "ff": "model",
-        "state": "model",
-        "experts": ("pod", "data", "model"),
-    })
 
 
 def effective_kv_heads(cfg: ModelConfig) -> int:
@@ -150,8 +140,8 @@ class ServeStepBundle:
         return aparams, acache, tok, t
 
 
-def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
-                     ) -> ServeStepBundle:
+def build_mesh_decode_step(model: Model, scfg: ServeConfig, mesh: Mesh
+                           ) -> ServeStepBundle:
     cfg = model.cfg
     B, L = scfg.shape.global_batch, scfg.shape.seq_len
     model_ax = mesh.shape["model"]
@@ -215,6 +205,32 @@ def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
     )
     return ServeStepBundle(model, scfg, mesh, jitted, pshard, cshard,
                            max_len, splits, scope)
+
+
+_BUILD_SERVE_STEP_WARNED = False
+
+
+def build_serve_step(model: Model, scfg: ServeConfig, mesh: Mesh
+                     ) -> ServeStepBundle:
+    """Deprecated name for :func:`build_mesh_decode_step` (warns once
+    per process, then delegates bit-identically).
+
+    The old name suggested this was THE serving entry point; it builds
+    one frozen single-launch decode step.  Request-lifecycle serving on
+    a mesh is ``repro.shard.ShardedServingEngine`` (or a single-shard
+    ``ServingEngine(mesh=...)``); the frozen builder keeps its job
+    under the name that says what it does.
+    """
+    global _BUILD_SERVE_STEP_WARNED
+    if not _BUILD_SERVE_STEP_WARNED:
+        _BUILD_SERVE_STEP_WARNED = True
+        warnings.warn(
+            "build_serve_step is deprecated: use build_mesh_decode_step "
+            "(same frozen single-launch builder), or serve requests "
+            "through repro.shard.ShardedServingEngine / "
+            "ServingEngine(mesh=...)",
+            DeprecationWarning, stacklevel=2)
+    return build_mesh_decode_step(model, scfg, mesh)
 
 
 # ---------------------------------------------------------------------------

@@ -133,6 +133,9 @@ from repro.serving.scheduler import (
     Scheduler,
     SlotState,
 )
+from repro.sharding.ctx import activation_mesh
+from repro.sharding.rules import cache_rules, replicated, \
+    serve_param_rules, tree_shardings
 from repro.spec import Drafter, SpecConfig, get_drafter
 
 Pytree = Any
@@ -140,8 +143,25 @@ Pytree = Any
 PREFILL_MODES = ("auto", "fused", "loop")
 
 
+PARAM_POLICIES = ("replicated", "tp")
+
+
 class ServingEngine:
-    """Single-host request-lifecycle engine over a (1-device) mesh."""
+    """Request-lifecycle engine over one device (default) or one shard
+    sub-mesh of the mesh-native topology (``mesh=...``).
+
+    With a mesh bound, the engine is ONE shard of a
+    :class:`~repro.shard.ShardedServingEngine`: params land per
+    ``param_policy`` ("replicated" or "tp" over the model axis via
+    :func:`~repro.sharding.rules.serve_param_rules`), the dense KV cache
+    sequence-shards its L dim over the model axis when the mesh has one
+    wider than 1 (``seq_shards > 1``), every plan the scheduler freezes
+    carries ``mesh_splits`` provenance (``Planner.mesh_plan``), and
+    decode launches take the fused shard_map sequence-sharded path
+    (per-chip partial softmax + LSE combine).  ``plan_cache`` shares one
+    :class:`~repro.plan.PlanCache` (plans AND compiled steps) across
+    same-topology engines; ``shard_id`` labels the cache manager so
+    page-conservation failures name the owning shard."""
 
     def __init__(self, model: Model, scfg: ServeConfig, *,
                  max_len: int = 256, batch_slots: int = 4,
@@ -149,13 +169,38 @@ class ServingEngine:
                  sampler: Optional[Sampler] = None,
                  prefill_mode: Optional[str] = None,
                  cache_layout: Optional[str] = None,
-                 tune_table: Optional[Any] = None):
+                 tune_table: Optional[Any] = None,
+                 mesh: Optional[Any] = None,
+                 plan_cache: Optional[Any] = None,
+                 shard_id: Optional[int] = None,
+                 param_policy: str = "replicated"):
         self.model = model
         self.cfg = model.cfg
         self.policy = policy or scfg.split_policy
         self.max_len = max_len
         self.B = batch_slots
         self.use_metadata = scfg.use_scheduler_metadata
+        if param_policy not in PARAM_POLICIES:
+            raise ValueError(f"unknown param_policy {param_policy!r}; "
+                             f"known: {PARAM_POLICIES}")
+        self.mesh = mesh
+        self.shard_id = shard_id
+        self.param_policy = param_policy
+        self.seq_shards = int(mesh.shape["model"]) if mesh is not None \
+            else 1
+        if self.seq_shards > 1:
+            if not self.use_metadata:
+                raise ValueError(
+                    "sequence-sharded decode rides the metadata-enabled "
+                    "plan path (the fused shard_map kernel is pinned on "
+                    "frozen plans); set use_scheduler_metadata=True or "
+                    "a model axis of 1")
+            if self.cfg.family not in ("dense", "moe", "mla"):
+                raise ValueError(
+                    f"{self.cfg.family} models cannot sequence-shard "
+                    "their decode (needs a position-linear k/v cache "
+                    "consumed by the fused split-KV combine); use a "
+                    "model axis of 1")
         if scfg.kv_quant is not None:
             from repro.quant import QUANT_DTYPES
             if scfg.kv_quant not in QUANT_DTYPES:
@@ -166,11 +211,17 @@ class ServingEngine:
         self._stats_path = scfg.stats_path
 
         # measured policy (repro.tune): resolve the SplitTable once —
-        # an explicit object wins over the config's path
+        # an explicit object wins over the config's path.  The path may
+        # be a DIRECTORY of tables (a registry): the one whose backend
+        # fingerprint matches the live jax.devices() is picked, with a
+        # counted-warning fallback when none matches.
         self.tune_table = tune_table
+        self._table_registry_fallback = False
         if self.tune_table is None and scfg.tune_table_path:
-            from repro.tune import SplitTable
-            self.tune_table = SplitTable.load(scfg.tune_table_path)
+            from repro.tune import select_table
+            self.tune_table, matched = \
+                select_table(scfg.tune_table_path)
+            self._table_registry_fallback = not matched
         if getattr(get_policy(self.policy), "needs_table", False) \
                 and not self.use_metadata:
             raise ValueError(
@@ -223,6 +274,22 @@ class ServingEngine:
                         f"divide the plan bucket widths (got {width})")
         self.cache_layout = layout
 
+        if self.seq_shards > 1:
+            # the fused path shards the cache's L dim (dense: max_len;
+            # paged: the gathered view, whose length is a page multiple)
+            if layout == "paged":
+                if scfg.cache_page_size % self.seq_shards:
+                    raise ValueError(
+                        f"cache_page_size ({scfg.cache_page_size}) must "
+                        f"divide over the model axis "
+                        f"({self.seq_shards}) for sequence-sharded "
+                        "paged decode")
+            elif max_len % self.seq_shards:
+                raise ValueError(
+                    f"max_len ({max_len}) must divide over the model "
+                    f"axis ({self.seq_shards}) for sequence-sharded "
+                    "decode")
+
         self.share_prefix = scfg.share_prefix
         if self.share_prefix:
             if layout != "paged":
@@ -243,7 +310,9 @@ class ServingEngine:
                               page_size=scfg.cache_page_size,
                               page_budget=scfg.cache_page_budget,
                               share_prefix=scfg.share_prefix,
-                              prefix_capacity=scfg.prefix_capacity)
+                              prefix_capacity=scfg.prefix_capacity,
+                              label=(f"shard{shard_id}"
+                                     if shard_id is not None else ""))
         # residency bookkeeping + layout resolution (storage arrays stay
         # on the engine for the donation flow; load() re-creates both)
         self.cache = model.cache_manager(self.B, self.max_len,
@@ -258,7 +327,12 @@ class ServingEngine:
             plan_capacity=scfg.plan_cache_capacity,
             cache_layout=layout,
             kv_dtype=self.kv_dtype,
-            table=self.tune_table)
+            table=self.tune_table,
+            mesh=self.mesh,
+            seq_shards=self.seq_shards,
+            plans=plan_cache)
+        if self._table_registry_fallback:
+            self.stats.table_registry_fallbacks += 1
 
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
@@ -349,6 +423,8 @@ class ServingEngine:
     # --- state --------------------------------------------------------------
 
     def load(self, params: Pytree) -> None:
+        if self.mesh is not None:
+            params = self._place_params(params)
         self._params = params
         # a (re)load is a fresh serve session: new storage AND new
         # residency / page-table state (a stale free list over fresh
@@ -356,22 +432,49 @@ class ServingEngine:
         self.cache = self.model.cache_manager(self.B, self.max_len,
                                               **self._cache_kw)
         self._caches = self.cache.init_storage()
+        if self.mesh is not None:
+            self._caches = self._place_caches(self._caches)
         self._state = self.sampler.init_state(self.B)
         self._state_dev = None
+
+    def _place_params(self, params: Pytree) -> Pytree:
+        """Land params on the shard sub-mesh: replicated (default — the
+        dp regime, one full copy per shard) or TP over the model axis
+        (``param_policy="tp"``, the serve-step builder's layout)."""
+        if self.param_policy == "tp":
+            sh = tree_shardings(self.mesh, params,
+                                self.model.param_axes(),
+                                serve_param_rules())
+            return jax.device_put(params, sh)
+        return jax.device_put(params, replicated(self.mesh))
+
+    def _place_caches(self, storage: Pytree) -> Pytree:
+        """Land cache storage on the shard sub-mesh.  Dense storage
+        sequence-shards its L dim over the model axis when the fused
+        path is on; the paged page pool stays replicated (the gathered
+        view is re-partitioned per launch by the shard_map)."""
+        if self.seq_shards > 1 and not self.cache.is_paged:
+            axes = self.model.cache_axes(self.B, self.max_len,
+                                         self.kv_dtype)
+            sh = tree_shardings(self.mesh, storage, axes,
+                                cache_rules(True))
+            return jax.device_put(storage, sh)
+        return jax.device_put(storage, replicated(self.mesh))
 
     # --- jitted impls -------------------------------------------------------
 
     def _decode_impl(self, params, caches, token, t, state,
                      plan: Optional[LaunchPlan] = None):
-        logits, caches = self.model.decode_step(
-            params, caches, token, t, plan=plan, policy=self.policy)
+        with activation_mesh(self.mesh):
+            logits, caches = self.model.decode_step(
+                params, caches, token, t, plan=plan, policy=self.policy)
         tok = self.sampler.sample(logits, state, t)
         return tok, caches
 
     def _prefill_impl(self, params, caches, tokens, slot, length, state,
                       plan: Optional[LaunchPlan] = None):
         """Fused single-slot prompt prefill + first-token sampling."""
-        with plan_scope(plan):
+        with plan_scope(plan), activation_mesh(self.mesh):
             logits, caches = self.model.prefill_slot(
                 params, caches, tokens, slot, length, self.max_len,
                 plan=plan, kv_dtype=self.kv_dtype)
@@ -408,8 +511,9 @@ class ServingEngine:
         """
         lay = self.cache.layout
         view = lay.gather_view(storage, table, num_pages)
-        logits, view = self.model.decode_step(
-            params, view, token, t, plan=plan, policy=self.policy)
+        with activation_mesh(self.mesh):
+            logits, view = self.model.decode_step(
+                params, view, token, t, plan=plan, policy=self.policy)
         tok = self.sampler.sample(logits, state, t)
         storage = lay.write_token(storage, view, table, t, num_pages)
         return tok, storage
@@ -420,7 +524,7 @@ class ServingEngine:
                             num_pages: int = 1):
         """Fused single-slot prefill straight into the slot's pages."""
         lay = self.cache.layout
-        with plan_scope(plan):
+        with plan_scope(plan), activation_mesh(self.mesh):
             logits, view = self.model.prefill_slot_view(
                 params, storage, tokens, slot, length,
                 num_pages * self.cache.spec.page_size,
@@ -435,8 +539,9 @@ class ServingEngine:
         token rows in one planned launch, accept/reject in-batch.
         ``dlen`` (B,) is each slot's TRUE draft count — ``accepted`` is
         clamped by it so mixed-k padding rows never commit."""
-        logits, caches = self.model.verify_step(
-            params, caches, tokens, t, plan=plan)
+        with activation_mesh(self.mesh):
+            logits, caches = self.model.verify_step(
+                params, caches, tokens, t, plan=plan)
         toks, acc = self.sampler.verify(logits, tokens[:, 1:], state, t)
         acc = jnp.minimum(acc, dlen)
         return toks, acc, caches
@@ -451,8 +556,9 @@ class ServingEngine:
         trash page inside the jitted step)."""
         lay = self.cache.layout
         view = lay.gather_view(storage, table, num_pages)
-        logits, view = self.model.verify_step(
-            params, view, tokens, t, plan=plan)
+        with activation_mesh(self.mesh):
+            logits, view = self.model.verify_step(
+                params, view, tokens, t, plan=plan)
         toks, acc = self.sampler.verify(logits, tokens[:, 1:], state, t)
         acc = jnp.minimum(acc, dlen)
         storage = lay.write_rows(storage, view, table, t, acc + 1,
@@ -481,7 +587,7 @@ class ServingEngine:
         compute only the unshared suffix against it, scatter back."""
         lay = self.cache.layout
         view = lay.slot_view(storage, table, slot, num_pages)
-        with plan_scope(plan):
+        with plan_scope(plan), activation_mesh(self.mesh):
             logits, view = self.model.prefill_suffix_view(
                 params, view, tokens, start, length,
                 plan=plan, kv_dtype=self.kv_dtype)
@@ -668,6 +774,8 @@ class ServingEngine:
         table's identity when one is loaded)."""
         snap = self.stats.to_json()
         snap["policy"] = self.policy
+        if self.shard_id is not None:
+            snap["shard"] = self.shard_id
         if self.tune_table is not None:
             snap["table_version"] = self.tune_table.version
         p = Path(path)

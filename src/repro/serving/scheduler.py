@@ -19,6 +19,7 @@ Two plan families share the one cache (and its
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
@@ -85,7 +86,10 @@ class Scheduler:
                  plan_capacity: Optional[int] = None,
                  cache_layout: str = "dense",
                  kv_dtype: str = "bfloat16",
-                 table: Optional[Any] = None):
+                 table: Optional[Any] = None,
+                 mesh: Optional[Any] = None,
+                 seq_shards: int = 1,
+                 plans: Optional[PlanCache] = None):
         self.cfg = cfg
         self.B = batch_slots
         self.max_len = max_len
@@ -94,16 +98,51 @@ class Scheduler:
         self.cache_layout = cache_layout
         self.kv_dtype = kv_dtype
         self.kv_quantized = kv_dtype != "bfloat16"
+        # mesh-native serving: seq_shards > 1 routes every plan through
+        # Planner.mesh_plan so ``mesh_splits`` provenance lands on each
+        # LaunchPlan, and decode plans are realized fused over ``mesh``'s
+        # "model" axis (the sequence dimension of the paged/dense cache)
+        self.mesh = mesh
+        self.seq_shards = seq_shards
         self.planner = Planner(policy=policy,
                                num_splits_override=num_splits_override,
                                table=table)
-        self.plans: PlanCache = PlanCache(plan_capacity)
+        # ``plans`` lets the mesh-native engine share one PlanCache per
+        # shard topology (keyed on the ShardSpec fingerprint upstream)
+        self.plans: PlanCache = plans if plans is not None \
+            else PlanCache(plan_capacity)
         if table is not None:
             # measured-policy lookups/fallbacks land in the SAME stats
             # object as plan-cache hits/misses (one observability surface)
             table.attach_stats(self.plans.stats)
         self.slots: List[Optional[SlotState]] = [None] * batch_slots
         self.pending: Deque[SlotState] = deque()
+
+    # --- planning core ------------------------------------------------------
+
+    def _plan(self, spec: AttentionSpec, bucket: int) -> LaunchPlan:
+        """The one planner entry every plan family goes through: under a
+        sequence-sharded topology, plans carry ``mesh_splits`` provenance
+        (the chips-for-SMs occupancy decision, or the storage-forced
+        shard count when H_KV doesn't divide the axis)."""
+        if self.seq_shards > 1:
+            return self.planner.mesh_plan(spec, axis_size=self.seq_shards,
+                                          bucket=bucket)
+        return self.planner.plan(spec, bucket=bucket)
+
+    def _realize(self, plan: LaunchPlan) -> LaunchPlan:
+        """Realize a DECODE plan's mesh split as the fused seq-sharded
+        kernel path: pin the shard mesh on the plan so
+        ``decode_attention_update`` takes the shard_map branch (per-chip
+        partial softmax + LSE combine).  Verify/prefill plans keep their
+        provenance but stay GSPMD-partitioned (the fused path is
+        single-query-row only)."""
+        if self.mesh is not None and plan.mesh_splits \
+                and plan.mesh_splits > 1:
+            return dataclasses.replace(plan, min_splits=1,
+                                       seq_shard_mesh=self.mesh,
+                                       seq_shard_axis="model")
+        return plan
 
     # --- admission ----------------------------------------------------------
 
@@ -197,7 +236,7 @@ class Scheduler:
     def decode_plan(self, t_max: int) -> LaunchPlan:
         """Compute (not cache) the frozen decode plan for ``t_max``."""
         bucket = self.decode_bucket(t_max)
-        return self.planner.plan(self.decode_spec(bucket), bucket=bucket)
+        return self._realize(self._plan(self.decode_spec(bucket), bucket))
 
     def decode_entry(self, t_max: int,
                      build: Callable[[LaunchPlan], Any]) -> PlanEntry:
@@ -205,8 +244,8 @@ class Scheduler:
         bucket = self.decode_bucket(t_max)
 
         def miss() -> PlanEntry:
-            plan = self.planner.plan(self.decode_spec(bucket),
-                                     bucket=bucket)
+            plan = self._realize(self._plan(self.decode_spec(bucket),
+                                            bucket))
             return PlanEntry(bucket, plan, build(plan))
 
         return self.plans.get_or_build(bucket, miss)
@@ -237,8 +276,7 @@ class Scheduler:
         key = ("verify", k, bucket)
 
         def miss() -> PlanEntry:
-            plan = self.planner.plan(self.verify_spec(k, bucket),
-                                     bucket=bucket)
+            plan = self._plan(self.verify_spec(k, bucket), bucket)
             return PlanEntry(key, plan, build(plan))
 
         return self.plans.get_or_build(key, miss)
@@ -265,8 +303,7 @@ class Scheduler:
         key = ("prefill", bucket)
 
         def miss() -> PlanEntry:
-            plan = self.planner.plan(self.prefill_spec(bucket),
-                                     bucket=bucket)
+            plan = self._plan(self.prefill_spec(bucket), bucket)
             return PlanEntry(key, plan, build(plan))
 
         return self.plans.get_or_build(key, miss)
@@ -289,7 +326,7 @@ class Scheduler:
             cfg = self.cfg
             spec = AttentionSpec("prefill", 1, mb, vb, cfg.num_heads,
                                  self._kv_heads(), cfg.resolved_head_dim)
-            plan = self.planner.plan(spec, bucket=vb)
+            plan = self._plan(spec, vb)
             return PlanEntry(key, plan, build(plan))
 
         return self.plans.get_or_build(key, miss)

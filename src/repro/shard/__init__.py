@@ -1,0 +1,43 @@
+"""``repro.shard`` — the mesh-native serving subsystem (Spec ->
+Resolver -> Plan -> Engine).
+
+The seventh first-class subsystem, and the one that takes the paper's
+split heuristic to its pod-scale analogue: where ``repro.plan`` splits
+a decode launch's KV over a chip's SMs, ``repro.shard`` splits the
+SERVING TOPOLOGY over a mesh of chips — data-parallel slot shards for
+throughput, sequence-sharded decode (chips-for-SMs) for long-context
+latency — with the same spec -> resolver -> artifact design as
+``repro.plan`` / ``repro.cache`` / ``repro.tune`` / ``repro.spec`` /
+``repro.quant``:
+
+- :class:`ShardSpec`      — declarative ``dp x sp`` topology: slot
+  shards, per-shard slot count and page budget, params policy.
+- :class:`ShardResolver`  — validates divisibility against the cache
+  layout, builds the deterministic device grid
+  (:func:`~repro.launch.mesh.make_engine_mesh`), fingerprints the
+  backend.
+- :class:`ShardPlan`      — the resolved artifact: global mesh,
+  per-shard sub-meshes, and the per-(topology, shard) PlanCache
+  registry (plans AND compiled steps shared across same-identity
+  engines).
+- :class:`ShardedServingEngine` — dp per-shard
+  :class:`~repro.serving.ServingEngine` cores behind one routed
+  submit / step / stream / drain surface; admission is per shard,
+  decode plans carry ``mesh_splits`` provenance
+  (``Planner.mesh_plan``), and sp > 1 shards realize them as the fused
+  shard_map sequence-sharded kernel.
+
+Serve with ``ServeConfig(shard="4,2")`` / ``serve --mesh 4,2``; A/B
+with ``benchmarks/shard_ab.py``.
+"""
+from repro.shard.engine import (  # noqa: F401
+    ShardedServingEngine,
+    pick_shard,
+)
+from repro.shard.resolver import (  # noqa: F401
+    ShardPlan,
+    ShardResolver,
+    clear_shard_plan_caches,
+    shard_plan_cache,
+)
+from repro.shard.spec import ShardSpec  # noqa: F401

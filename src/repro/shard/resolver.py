@@ -1,0 +1,116 @@
+"""ShardResolver: ShardSpec -> ShardPlan (meshes + plan-cache identity).
+
+The resolver is where a declarative :class:`~repro.shard.ShardSpec`
+meets the live device set: it validates divisibility against the cache
+layout the engine will run, builds the global ``(dp, sp)`` mesh and the
+per-shard ``(1, sp)`` sub-meshes over an EXPLICIT device grid
+(:func:`~repro.launch.mesh.make_engine_mesh` — deterministic, never
+``mesh_utils`` reordering), and fingerprints the result so one
+:class:`~repro.plan.PlanCache` per (topology, shard) is shared by every
+engine resolved to the same topology in a process.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.launch.mesh import make_engine_mesh
+from repro.plan import PlanCache
+from repro.shard.spec import ShardSpec
+
+# process-wide registry: one PlanCache (plans AND compiled steps) per
+# (topology fingerprint, shard index, engine identity).  Determinism of
+# the device grid is what makes sharing compiled steps safe: shard d of
+# topology T always owns the same devices, so a cached jitted step's
+# closed-over sub-mesh is THE sub-mesh of every later same-identity
+# engine.
+_PLAN_CACHES: Dict[Tuple, PlanCache] = {}
+
+
+def shard_plan_cache(key: Tuple, capacity: Optional[int] = None
+                     ) -> PlanCache:
+    """The registry entry for ``key``, created on first use."""
+    cache = _PLAN_CACHES.get(key)
+    if cache is None:
+        cache = PlanCache(capacity)
+        _PLAN_CACHES[key] = cache
+    return cache
+
+
+def clear_shard_plan_caches() -> None:
+    """Drop every registered per-topology PlanCache (tests/benchmarks:
+    isolate stats across engine generations)."""
+    _PLAN_CACHES.clear()
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """The resolved artifact: concrete meshes + the topology identity.
+
+    ``mesh`` spans all ``dp * sp`` devices on axes ``("data", "model")``;
+    ``submeshes[d]`` is shard ``d``'s ``(1, sp)`` slice of the same
+    grid.  ``fingerprint`` extends the spec's with the backend identity
+    (plans and compiled steps must not survive a device-set change).
+    """
+    spec: ShardSpec
+    mesh: Any
+    submeshes: Tuple[Any, ...]
+    devices: Tuple[Any, ...]
+    fingerprint: str = field(default="")
+
+    def shard_devices(self, d: int) -> Tuple[Any, ...]:
+        """The devices shard ``d`` owns (row ``d`` of the grid)."""
+        sp = self.spec.sp
+        return self.devices[d * sp:(d + 1) * sp]
+
+    def plan_cache(self, shard: int, ident: Tuple = (),
+                   capacity: Optional[int] = None) -> PlanCache:
+        """Shard ``shard``'s per-topology PlanCache, shared across every
+        same-identity engine in this process.  ``ident`` folds in the
+        engine knobs compiled steps close over (model, policy, layout,
+        sampler, ...) so differently-configured engines never share."""
+        return shard_plan_cache(
+            (self.fingerprint, shard) + tuple(ident), capacity)
+
+    def describe(self) -> Dict[str, Any]:
+        d = dict(self.spec.describe())
+        d["fingerprint"] = self.fingerprint
+        d["devices"] = [str(x) for x in self.devices]
+        return d
+
+
+@dataclass(frozen=True)
+class ShardResolver:
+    """Resolves a :class:`ShardSpec` against the live device set."""
+    spec: ShardSpec
+
+    def resolve(self, *, max_len: int, cache_layout: str = "dense",
+                page_size: int = 64,
+                devices: Optional[Sequence[Any]] = None) -> ShardPlan:
+        """Validate + build the meshes.  Divisibility is checked here
+        (fail at resolution, not at the first launch): the fused
+        sequence-sharded decode splits the cache's L dim — ``max_len``
+        for dense storage, the gathered view (a ``page_size`` multiple)
+        for paged."""
+        s = self.spec
+        if s.sp > 1:
+            if cache_layout == "paged":
+                if page_size % s.sp:
+                    raise ValueError(
+                        f"page_size ({page_size}) must divide over "
+                        f"sp={s.sp} for sequence-sharded paged decode")
+            elif max_len % s.sp:
+                raise ValueError(
+                    f"max_len ({max_len}) must divide over sp={s.sp} "
+                    "for sequence-sharded decode")
+        devs = tuple(devices) if devices is not None \
+            else tuple(jax.devices())
+        mesh, submeshes = make_engine_mesh(s.dp, s.sp, devs)
+        used = devs[:s.num_devices]
+        d0 = used[0]
+        fp = (f"{s.fingerprint}.{jax.default_backend()}."
+              f"{getattr(d0, 'device_kind', '?')}.{len(used)}")
+        return ShardPlan(spec=s, mesh=mesh, submeshes=submeshes,
+                         devices=used, fingerprint=fp)

@@ -25,7 +25,17 @@ _STACK: list = []
 
 
 @contextlib.contextmanager
-def activation_mesh(mesh: Mesh, rules: Optional[ShardingRules] = None):
+def activation_mesh(mesh: Optional[Mesh],
+                    rules: Optional[ShardingRules] = None):
+    """Bind the activation layout anchors to ``mesh``.
+
+    ``mesh=None`` is a no-op context: mesh-optional callers (the serving
+    engine runs the same jitted-impl bodies single-device and on a shard
+    sub-mesh) wrap unconditionally instead of branching at every site.
+    """
+    if mesh is None:
+        yield
+        return
     _STACK.append((mesh, rules or activation_rules()))
     try:
         yield

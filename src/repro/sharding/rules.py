@@ -111,6 +111,26 @@ def param_rules() -> ShardingRules:
     })
 
 
+def serve_param_rules() -> ShardingRules:
+    """Inference layout: TP on model, no FSDP (no per-step all-gathers).
+
+    Expert weights additionally spread over the data axes — big MoE
+    checkpoints (Qwen3-235B) exceed one chip's HBM under TP-16 alone.
+    (Historically defined in ``serving/decode_step.py``; lives here with
+    the other rule sets so the mesh-native engine and the frozen dry-run
+    builder share one definition.)
+    """
+    return ShardingRules({
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "state": "model",
+        "experts": ("pod", "data", "model"),
+    })
+
+
 def activation_rules() -> ShardingRules:
     return ShardingRules({
         "batch": ("pod", "data"),

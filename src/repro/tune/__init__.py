@@ -35,4 +35,5 @@ from repro.tune.table import (  # noqa: F401
     SplitTable,
     TABLE_DIR,
     family_key,
+    select_table,
 )

@@ -302,3 +302,54 @@ class SplitTable:
             "lookups": self.lookups,
             "fallbacks": self.fallbacks,
         }
+
+
+def select_table(path: str | Path) -> Tuple["SplitTable", bool]:
+    """Resolve ``tune_table_path`` into one table: file OR registry dir.
+
+    A file loads as before.  A DIRECTORY is a table *registry* (ship one
+    calibrated table per accelerator): every ``*.json`` inside is
+    loaded, and the one whose fingerprint best matches the live backend
+    wins — exact (``backend``, ``device``) match first, backend-only
+    match next.  When nothing matches the live ``jax.default_backend()``
+    the first table (sorted by filename, so the choice is deterministic)
+    serves as a fallback with a warning; the returned flag is ``False``
+    and the serving engine counts it
+    (``PlanCacheStats.table_registry_fallbacks``) — a sharded TPU
+    deployment and a CPU CI run pointed at the same registry stop
+    silently sharing one hand-pointed table.
+
+    Returns ``(table, matched)``.
+    """
+    import jax
+
+    p = Path(path)
+    if not p.is_dir():
+        return SplitTable.load(p), True
+    candidates = sorted(p.glob("*.json"))
+    if not candidates:
+        raise ValueError(f"tune-table registry {p} holds no *.json tables")
+    tables = [(c, SplitTable.load(c)) for c in candidates]
+    backend = jax.default_backend()
+    kind = jax.devices()[0].device_kind
+
+    def score(t: "SplitTable") -> int:
+        fp = t.fingerprint
+        s = 0
+        if fp.get("backend") == backend:
+            s += 2
+            if fp.get("device") == kind:
+                s += 1
+        return s
+
+    best_path, best = max(tables, key=lambda ct: score(ct[1]))
+    matched = score(best) > 0
+    if not matched:
+        fps = {c.name: t.fingerprint.get("backend") for c, t in tables}
+        warnings.warn(
+            f"no table in registry {p} matches the live backend "
+            f"(backend={backend!r}, device={kind!r}; registry backends: "
+            f"{fps}); falling back to {best_path.name} — its measured "
+            "decisions were taken on different hardware",
+            RuntimeWarning, stacklevel=2)
+    return best, matched
