@@ -1,0 +1,171 @@
+"""Observability A/B: tracing on vs off must not change the serving.
+
+Two cells serve the SAME greedy request stream on the reduced
+qwen2.5-3b engine (fused admission, paper policy):
+
+- ``off`` — the zero-cost default (``NULL_OBSERVER``: engines branch on
+  ``enabled`` and allocate nothing per step);
+- ``on``  — full repro.obs: Chrome trace-event timeline + metrics
+  registry, dumped at drain through ``ServeConfig.trace_path`` /
+  ``metrics_path`` (the artifacts land in the gitignored smoke dir —
+  they are run outputs, not tables).
+
+Structural claims (the reproducible part, asserted below):
+
+- greedy tokens and PlanCacheStats are BIT-IDENTICAL across the two
+  cells — observation never changes the schedule or the math;
+- zero policy evaluations inside traced code in both cells (the
+  observer is strictly host-side);
+- the dumped trace is schema-valid Chrome JSON
+  (:func:`repro.obs.validate_trace`): per-request lifecycle spans
+  (queue_wait -> admit -> steps, nested under one ``request`` span) and
+  per-launch spans each stamped with full LaunchPlan provenance
+  (``num_splits`` / ``mesh_splits`` / ``kv_dtype`` / ``table_version``);
+- the metrics snapshot's TTFT/TPOT histograms cover every request —
+  the same numbers ``serving_ab``'s columns now read.
+
+Load the trace at https://ui.perfetto.dev.
+
+    PYTHONPATH=src python -m benchmarks.obs_ab [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.configs.reduced import reduced_config
+from repro.kernels import ops
+from repro.models import build_model
+from repro.obs import validate_trace
+from repro.serving import Request, ServingEngine
+
+from benchmarks.common import SMOKE_DIR, print_table, write_csv
+
+# provenance keys every launch span must carry (the plan-cache key plus
+# the frozen split decision and its inputs)
+PROVENANCE_KEYS = ("key", "num_splits", "mesh_splits", "kv_dtype",
+                   "table_version", "tuned", "policy")
+
+
+def _requests(cfg, n_req: int, max_new: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(4, 20))).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n_req)]
+
+
+def run_cell(model, params, reqs, *, max_len: int, slots: int,
+             trace_path=None, metrics_path=None):
+    scfg = ServeConfig(model=model.cfg, split_policy="paper",
+                       prefill_mode="fused",
+                       trace_path=trace_path, metrics_path=metrics_path)
+    eng = ServingEngine(model, scfg, max_len=max_len, batch_slots=slots)
+    eng.load(params)
+    ops.reset_policy_eval_count()
+    t0 = time.monotonic()
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.drain()
+    wall = time.monotonic() - t0
+    return eng, outs, wall, ops.policy_eval_count()
+
+
+def main(smoke: bool = False) -> None:
+    cfg = reduced_config("qwen2.5-3b", num_layers=2,
+                         d_model=32 if smoke else 64)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_req, max_new = (5, 6) if smoke else (12, 16)
+    max_len, slots = 256, 2
+    reqs = _requests(cfg, n_req, max_new)
+
+    # artifacts are run outputs (never committed): always the smoke dir
+    art = SMOKE_DIR / "obs"
+    trace_path = str(art / "trace.json")
+    metrics_path = str(art / "metrics.json")
+
+    cells = [("off", None, None), ("on", trace_path, metrics_path)]
+    header = ["obs", "requests", "tokens", "wall_s", "trace_events",
+              "request_spans", "launch_spans", "ttft_ms_mean",
+              "tpot_ms_mean", "policy_evals"]
+    rows, token_sets, stat_sets = [], [], []
+    for mode, tp, mp in cells:
+        eng, outs, wall, evals = run_cell(
+            model, params, reqs, max_len=max_len, slots=slots,
+            trace_path=tp, metrics_path=mp)
+        token_sets.append([c.tokens for c in outs])
+        stat_sets.append(eng.stats.to_json())
+        total = sum(len(c.tokens) for c in outs)
+        if mode == "off":
+            rows.append([mode, len(outs), total, round(wall, 2),
+                         0, 0, 0, "-", "-", evals])
+            continue
+
+        with open(trace_path) as f:
+            trace = json.load(f)
+        validate_trace(trace)           # schema + span-nesting gate
+        evs = trace["traceEvents"]
+        req_spans = [e for e in evs
+                     if e["ph"] == "X" and e["name"] == "request"]
+        launch_spans = [e for e in evs
+                        if e["ph"] == "X" and e.get("cat") == "launch"]
+        assert len(req_spans) == n_req, \
+            "one request span per served request"
+        assert launch_spans, "no launch spans recorded"
+        for sp in launch_spans:
+            missing = [k for k in PROVENANCE_KEYS
+                       if k not in sp.get("args", {})]
+            assert not missing, \
+                f"launch span missing provenance {missing}"
+        kinds = {sp["name"] for sp in launch_spans}
+        assert {"prefill", "decode"} <= kinds, \
+            f"expected prefill+decode launch spans, got {kinds}"
+        # every request track carries the full lifecycle taxonomy
+        names = {e["name"] for e in evs if e["ph"] == "X"}
+        assert {"queue_wait", "admit"} <= names
+
+        with open(metrics_path) as f:
+            snap = json.load(f)
+        mx = snap["metrics"]
+        ttft = mx["ttft_ms"]["aggregate"]
+        tpot = mx["tpot_ms"]["aggregate"]
+        assert ttft["count"] == n_req, "TTFT must cover every request"
+        assert mx["tokens_total"]["aggregate"] == total
+        assert snap["plan_cache"]["launches"] == \
+            stat_sets[-1]["launches"], \
+            "metrics snapshot must absorb PlanCacheStats verbatim"
+        rows.append([mode, len(outs), total, round(wall, 2),
+                     len(evs), len(req_spans), len(launch_spans),
+                     round(ttft["mean"], 1), round(tpot["mean"], 1),
+                     evals])
+
+    title = ("observability A/B: tracing on vs off "
+             f"({'smoke' if smoke else 'full'})")
+    print_table(header, rows, title)
+    write_csv("obs_ab", header, rows, smoke=smoke)
+
+    # structural claims
+    assert token_sets[0] == token_sets[1], \
+        "tracing changed the greedy token stream"
+    assert stat_sets[0] == stat_sets[1], \
+        "tracing changed the PlanCacheStats counters"
+    assert all(r[9] == 0 for r in rows), \
+        "policy ran inside a traced step"
+    print(f"\nobs A/B: {n_req} requests bit-identical with tracing "
+          f"on/off, schema-valid trace ({rows[1][4]} events, "
+          f"{rows[1][5]} request spans over {rows[1][6]} launch spans, "
+          "all provenance-stamped), policy evals 0\n"
+          f"trace artifact: {trace_path} (https://ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale variant (make verify / CI)")
+    main(**vars(ap.parse_args()))

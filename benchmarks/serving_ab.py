@@ -11,6 +11,11 @@ people actually watch:
   reported as mean / p50 / p90 — tail latency is what SLOs bind on,
   and a mean hides the slow-bucket steps a p90 exposes.
 
+Both come straight off the engine's :mod:`repro.obs` metrics registry
+(``ttft_ms`` / ``tpot_ms`` histograms, stamped by the lifecycle hooks)
+rather than hand-timing around ``step()`` — the columns here and a
+``ServeConfig.metrics_path`` dump are the same numbers.
+
 Cells: {loop, fused} admission x {fa3_baseline, paper} split policy,
 all on the metadata-enabled plan path.  On this CPU container the
 wall-clock deltas are noisy; the *structural* columns are the
@@ -33,7 +38,6 @@ CI.  CSV lands in ``experiments/bench/`` (smoke runs: the gitignored
 from __future__ import annotations
 
 import argparse
-import time
 from collections import deque
 
 import jax
@@ -43,8 +47,9 @@ from repro.configs.base import ServeConfig
 from repro.configs.reduced import reduced_config
 from repro.kernels import ops
 from repro.models import build_model
+from repro.obs import ObsConfig
 from repro.plan import bucket_seqlen
-from repro.serving import FINISHED, TOKEN, Request, ServingEngine
+from repro.serving import Request, ServingEngine
 
 from benchmarks.common import print_table, write_csv
 
@@ -73,34 +78,31 @@ def run_cell(model, params, policy: str, prefill_mode: str,
                      max_new_tokens=knobs["max_new"]))
          for i, (n, a) in enumerate(zip(lens, arrivals))),
         key=lambda p: p[0]))
+    # TTFT/TPOT come from the repro.obs metrics registry (the same
+    # surface ServeConfig.metrics_path dumps at drain) — the engine's
+    # lifecycle hooks stamp submit/first-token/finish, so the benchmark
+    # no longer hand-times events around step()
+    obs = ObsConfig(metrics=True).resolve()
     eng = ServingEngine(
         model, ServeConfig(model=model.cfg, split_policy=policy,
                            prefill_mode=prefill_mode),
-        max_len=knobs["max_len"], batch_slots=knobs["slots"])
+        max_len=knobs["max_len"], batch_slots=knobs["slots"], obs=obs)
     eng.load(params)
 
     ops.reset_policy_eval_count()
-    submit_t, first_t, finish_t = {}, {}, {}
     step_i = 0
     while reqs or eng.has_work():
         while reqs and reqs[0][0] <= step_i:
-            _, r = reqs.popleft()
-            eng.submit(r)
-            submit_t[r.request_id] = time.monotonic()
+            eng.submit(reqs.popleft()[1])
         if eng.has_work():
-            now_events = eng.step()
-            now = time.monotonic()
-            for ev in now_events:
-                if ev.kind == TOKEN and ev.index == 0:
-                    first_t[ev.request_id] = now
-                elif ev.kind == FINISHED:
-                    finish_t[ev.request_id] = now
+            eng.step()
         step_i += 1
     outs = eng.drain()
 
-    ttft = [first_t[r] - submit_t[r] for r in submit_t]
-    tpot = [(finish_t[c.request_id] - first_t[c.request_id])
-            / max(1, len(c.tokens) - 1) for c in outs]
+    mx = obs.metrics_snapshot()["metrics"]
+    ttft = mx["ttft_ms"]["aggregate"]
+    tpot = mx["tpot_ms"]["aggregate"]
+    assert ttft["count"] == len(outs) == tpot["count"]
     # counters from the engine's JSON snapshot (the same surface
     # ServeConfig.stats_path dumps at drain) — not re-derived by hand
     st = eng.stats.to_json()
@@ -112,11 +114,9 @@ def run_cell(model, params, policy: str, prefill_mode: str,
                    if k.startswith("prefill/"))
     row = [policy, prefill_mode, len(outs),
            sum(len(c.tokens) for c in outs), n_dec, n_pre, pre_miss,
-           round(1e3 * float(np.mean(ttft)), 1),
-           round(1e3 * float(np.median(ttft)), 1),
-           round(1e3 * float(np.mean(tpot)), 1),
-           round(1e3 * float(np.percentile(tpot, 50)), 1),
-           round(1e3 * float(np.percentile(tpot, 90)), 1),
+           round(ttft["mean"], 1), round(ttft["p50"], 1),
+           round(tpot["mean"], 1), round(tpot["p50"], 1),
+           round(tpot["p90"], 1),
            ops.policy_eval_count()]
     return row, [c.tokens for c in outs]
 

@@ -58,6 +58,7 @@ def bench(smoke: bool = False) -> None:
     from repro.configs.reduced import reduced_config
     from repro.kernels import ops
     from repro.models.registry import build_model
+    from repro.obs import ObsConfig
     from repro.serving import Request, ServingEngine
     from repro.shard import (
         ShardSpec,
@@ -91,19 +92,23 @@ def bench(smoke: bool = False) -> None:
     ]
     header = ["mode", "dp", "sp", "slots", "requests", "new_tokens",
               "wall_s", "toks_per_s", "launches", "per_shard_launches",
-              "policy_evals"]
+              "ttft_ms_mean", "tpot_ms_mean", "policy_evals"]
     rows, token_sets, shard_launches = [], [], {}
     for mode, dp, sp in cells:
         clear_shard_plan_caches()
         ops.reset_policy_eval_count()
+        # TTFT/TPOT read off the engine's repro.obs metrics registry
+        # (shard cells label every series per shard, merged in the
+        # family aggregate) — no hand-timing around drain()
+        obs = ObsConfig(metrics=True).resolve()
         if mode == "single":
             eng = ServingEngine(model, scfg, max_len=max_len,
-                                batch_slots=2)
+                                batch_slots=2, obs=obs)
         else:
             eng = ShardedServingEngine(
                 model, scfg,
                 spec=ShardSpec(dp=dp, sp=sp, slots_per_shard=2),
-                max_len=max_len)
+                max_len=max_len, obs=obs)
         eng.load(params)
         t0 = time.monotonic()
         for r in reqs:
@@ -130,10 +135,20 @@ def bench(smoke: bool = False) -> None:
                     for p in plans.values()), \
                     "sp decode plans must carry the realized mesh split"
         evals = ops.policy_eval_count()
+        mx = obs.metrics_snapshot()["metrics"]
+        ttft = mx["ttft_ms"]["aggregate"]
+        tpot = mx["tpot_ms"]["aggregate"]
+        assert ttft["count"] == len(outs), \
+            "every request must have stamped a first token"
+        if mode != "single":
+            shard_labels = {k for k in mx["ttft_ms"]["series"] if k}
+            assert shard_labels == {f"shard={d}" for d in range(dp)}, \
+                "sharded cells must label TTFT series per shard"
         token_sets.append(toks)
         rows.append([mode, dp, sp, slots, len(outs), total,
                      round(wall, 2), round(total / max(wall, 1e-9), 1),
                      launches, "/".join(str(x) for x in per_shard),
+                     round(ttft["mean"], 1), round(tpot["mean"], 1),
                      evals])
 
     title = ("mesh-native serving A/B: single vs dp=4 slots vs sp=4 "
@@ -147,7 +162,7 @@ def bench(smoke: bool = False) -> None:
         "dp=4 must serve 4x the single engine's slots"
     assert all(t == token_sets[0] for t in token_sets), \
         "shard topology changed greedy tokens"
-    assert all(r[10] == 0 for r in rows), \
+    assert all(r[12] == 0 for r in rows), \
         "policy ran inside a traced step"
     assert all(n > 0 for n in shard_launches["dp4"]), \
         "every dp shard must have admitted + launched work"

@@ -232,6 +232,18 @@ class ServeConfig:
     # counts) to this path — serving A/Bs read it instead of re-deriving
     # the counters by hand.
     stats_path: Optional[str] = None
+    # repro.obs: when set, drain() writes a Chrome trace-event JSON of
+    # the serve timeline here (request-lifecycle spans nested over
+    # per-launch spans stamped with LaunchPlan provenance) — load it at
+    # https://ui.perfetto.dev.  Strictly host-side; None = no tracing
+    # (the zero-cost NULL_OBSERVER path).
+    trace_path: Optional[str] = None
+    # repro.obs: when set, drain() writes the MetricsRegistry artifact
+    # here — TTFT/TPOT/queue-wait histograms, occupancy gauges, token/
+    # warning counters, plus the absorbed PlanCacheStats section.  A
+    # ".prom"/".txt" suffix selects Prometheus text exposition; any
+    # other suffix gets the JSON snapshot.
+    metrics_path: Optional[str] = None
     # metadata-enabled path (paper §5): precompute one LaunchPlan per
     # (batch, cache-length bucket) and launch the decode step
     # specialized on it.  False = the paper's weaker "internal heuristic"

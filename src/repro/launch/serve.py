@@ -45,7 +45,7 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                 speculate=None, speculate_k: int = 4,
                 speculate_max_rejects=None, kv_quant=None,
                 tune_table=None, stats_path=None, mesh=None,
-                log_fn=print):
+                trace_path=None, metrics_path=None, log_fn=print):
     cfg = reduced_config(get_arch(arch), num_layers=num_layers,
                          d_model=d_model)
     if cfg.family in ("vlm", "encdec"):
@@ -67,6 +67,10 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                                         else None),
                        stats_path=(str(stats_path) if stats_path
                                    else None),
+                       trace_path=(str(trace_path) if trace_path
+                                   else None),
+                       metrics_path=(str(metrics_path) if metrics_path
+                                     else None),
                        shard=mesh)
     if mesh:
         # mesh-native topology: --slots becomes slots PER SHARD
@@ -142,6 +146,11 @@ def run_serving(arch: str, *, num_requests: int = 8, max_new: int = 16,
                f"'{engine.tune_table.fallback_policy}'")
     if stats_path:
         log_fn(f"plan-cache stats snapshot: {stats_path}")
+    if trace_path:
+        log_fn(f"request-lifecycle trace (load at https://ui.perfetto.dev"
+               f"): {trace_path}")
+    if metrics_path:
+        log_fn(f"serving metrics snapshot: {metrics_path}")
     if cache_layout == "paged":
         cs = engine.cache_stats()
         log_fn(f"paged cache: {cs['total_pages']} pages of "
@@ -182,6 +191,14 @@ def main() -> None:
                          "repro.launch.tune`)")
     ap.add_argument("--stats-path", default=None,
                     help="dump PlanCacheStats.to_json() here at drain")
+    ap.add_argument("--trace", default=None, dest="trace_path",
+                    help="repro.obs: dump the Chrome trace-event JSON "
+                         "serving timeline here at drain (load it at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", default=None, dest="metrics_path",
+                    help="repro.obs: dump the serving metrics snapshot "
+                         "here at drain (.prom/.txt suffix selects "
+                         "Prometheus text exposition, else JSON)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--splits", type=int, default=None,
                     help="explicit num_splits override: the engine's "
@@ -246,7 +263,8 @@ def main() -> None:
                 speculate_max_rejects=args.speculate_max_rejects,
                 kv_quant=args.kv_quant,
                 tune_table=args.tune_table, stats_path=args.stats_path,
-                mesh=args.mesh)
+                mesh=args.mesh, trace_path=args.trace_path,
+                metrics_path=args.metrics_path)
 
 
 if __name__ == "__main__":

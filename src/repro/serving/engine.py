@@ -102,10 +102,8 @@ greedy decoding.
 from __future__ import annotations
 
 import functools
-import json
 import warnings
 from collections import deque
-from pathlib import Path
 from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence
 
 import jax
@@ -113,8 +111,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ServeConfig
-from repro.core.split_policy import get_policy
+from repro.core.split_policy import KV_DTYPES, get_policy
 from repro.models.registry import Model
+from repro.obs import atomic_write_json, resolve_obs
 from repro.plan import LaunchPlan, PlanCacheStats, Planner, plan_scope
 from repro.serving.events import (
     FINISH_CACHE_CAPACITY,
@@ -173,7 +172,8 @@ class ServingEngine:
                  mesh: Optional[Any] = None,
                  plan_cache: Optional[Any] = None,
                  shard_id: Optional[int] = None,
-                 param_policy: str = "replicated"):
+                 param_policy: str = "replicated",
+                 obs: Optional[Any] = None):
         self.model = model
         self.cfg = model.cfg
         self.policy = policy or scfg.split_policy
@@ -209,6 +209,27 @@ class ServingEngine:
                     f"known: {sorted(QUANT_DTYPES)}")
         self.kv_dtype = scfg.kv_quant or scfg.kv_cache_dtype
         self._stats_path = scfg.stats_path
+
+        # repro.obs: an injected observer (a ShardedServingEngine's
+        # per-shard view) wins and the injector owns the artifact dumps;
+        # otherwise resolve from the config's paths — NULL_OBSERVER when
+        # both are unset, so the disabled path costs one attribute read
+        # per guarded site and allocates nothing
+        self._trace_path = scfg.trace_path
+        self._metrics_path = scfg.metrics_path
+        if obs is not None:
+            self._obs = obs
+            self._owns_obs = False
+        else:
+            self._obs = resolve_obs(scfg)
+            self._owns_obs = self._obs.enabled
+        # KV bytes one cached prompt row avoids recomputing+storing
+        # (prefix-shared-bytes counter): K + V across layers, at the
+        # engine's effective storage dtype
+        kvh = 1 if self.cfg.mla else self.cfg.num_kv_heads
+        self._kv_row_bytes = (2 * self.cfg.num_layers * kvh
+                              * self.cfg.resolved_head_dim
+                              * KV_DTYPES.get(self.kv_dtype, 2))
 
         # measured policy (repro.tune): resolve the SplitTable once —
         # an explicit object wins over the config's path.  The path may
@@ -333,6 +354,12 @@ class ServingEngine:
             plans=plan_cache)
         if self._table_registry_fallback:
             self.stats.table_registry_fallbacks += 1
+            if self._obs.enabled:
+                self._obs.on_warning(
+                    "table_registry_fallback",
+                    f"no table in {scfg.tune_table_path} matches the "
+                    "live backend fingerprint; using the registry's "
+                    "first table")
 
         self._params: Optional[Pytree] = None
         self._caches: Optional[Pytree] = None
@@ -688,6 +715,8 @@ class ServingEngine:
         self._completions[handle] = st.completion
         self._queues[handle] = deque()
         self._undrained.append(handle)
+        if self._obs.enabled:
+            self._obs.on_submit(handle, req.request_id, len(req.prompt))
         return handle
 
     def has_work(self) -> bool:
@@ -707,6 +736,13 @@ class ServingEngine:
         live = self.sched.live()
         if live:
             self._decode_launch(live, events)
+        if self._obs.enabled:
+            occ, slots = self.sched.occupancy()
+            kw = (dict(free_pages=self.cache.free_pages,
+                       total_pages=self.cache.spec.total_pages)
+                  if self.cache.is_paged else {})
+            self._obs.sample_occupancy(occ, slots,
+                                       self.sched.queue_depth(), **kw)
         return events
 
     def _admissible(self, st: SlotState) -> bool:
@@ -767,24 +803,40 @@ class ServingEngine:
         done.sort(key=lambda c: c.request_id)
         if self._stats_path:
             self.dump_stats(self._stats_path)
+        if self._owns_obs:
+            self.dump_obs()
         return done
 
-    def dump_stats(self, path: str) -> None:
-        """Write the PlanCacheStats JSON snapshot (plus the measured
-        table's identity when one is loaded)."""
+    def _stats_snapshot(self) -> Dict[str, Any]:
+        """The PlanCacheStats JSON snapshot plus this engine's identity
+        (policy / shard / measured-table version when loaded)."""
         snap = self.stats.to_json()
         snap["policy"] = self.policy
         if self.shard_id is not None:
             snap["shard"] = self.shard_id
         if self.tune_table is not None:
             snap["table_version"] = self.tune_table.version
-        p = Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+        return snap
+
+    def dump_stats(self, path: str) -> None:
+        """Atomically write the PlanCacheStats JSON snapshot (temp file
+        in the target directory + ``os.replace`` — a concurrent reader
+        never sees a torn file)."""
+        atomic_write_json(path, self._stats_snapshot())
+
+    def dump_obs(self) -> None:
+        """Write the trace / metrics artifacts the engine's own
+        ``ServeConfig`` paths asked for (no-op when neither is set or
+        the observer was injected — the injector owns the dump)."""
+        if self._obs.enabled and (self._trace_path or self._metrics_path):
+            self._obs.dump(self._trace_path, self._metrics_path,
+                           plan_stats=self._stats_snapshot())
 
     # --- internals ----------------------------------------------------------
 
     def _admit(self, i: int, st: SlotState, events: List[Event]) -> None:
+        if self._obs.enabled:           # closes the queue_wait span
+            self._obs.on_admit_start(st.handle)
         # the whole prompt's pages are reserved up front (all-or-nothing;
         # _admissible already checked the free list, so this cannot fail)
         if self.share_prefix:
@@ -816,6 +868,8 @@ class ServingEngine:
             st.prompt_left = list(st.request.prompt)
             self._pos[i] = 0
             self._next_token[i] = st.prompt_left.pop(0)
+            if self._obs.enabled:       # teacher-forcing admission
+                self._obs.on_admit_end(st.handle, "loop")
 
     def _admit_fused(self, i: int, st: SlotState, events: List[Event],
                      shared: int = 0) -> None:
@@ -853,7 +907,12 @@ class ServingEngine:
                     state_row)
             if self.cache.is_paged:
                 args += (self.cache.table_device(),)
+        t0 = self._obs.now_us() if self._obs.enabled else 0
         tok, self._caches = entry.step(*args)
+        tok = int(tok)                  # device sync closes the launch
+        if self._obs.enabled:
+            self._obs.on_launch("sprefill" if shared else "prefill",
+                                entry.key, entry.plan, t0)
         self.cache.note_write(i, n - 1)
         if self.share_prefix:
             # index this prompt's (now fully resident) full pages so the
@@ -861,7 +920,14 @@ class ServingEngine:
             self.cache.register_prefix(i, prompt)
         self._pos[i] = n
         st.completion.steps += 1
-        self._emit_token(i, st, int(tok), events)
+        if self._obs.enabled:
+            # close the admit span BEFORE emitting: the first token may
+            # immediately finish the request, and the request span must
+            # contain the admit span
+            self._obs.on_admit_end(st.handle,
+                                   "suffix" if shared else "full",
+                                   shared, shared * self._kv_row_bytes)
+        self._emit_token(i, st, tok, events)
 
     def _decode_launch(self, live, events: List[Event]) -> None:
         drafts = self._collect_drafts(live)
@@ -893,8 +959,10 @@ class ServingEngine:
         t = jnp.asarray(self._pos)
         t_max = max(int(self._pos[i]) for i, _ in live)
         if self.use_metadata:
-            step = self.sched.decode_entry(t_max, self._build_decode).step
+            entry = self.sched.decode_entry(t_max, self._build_decode)
+            step = entry.step
         else:
+            entry = None
             step = self._fallback_step
             # attribute this unplanned launch: the policy saw the PADDED
             # cache length at trace time; record what was resident
@@ -905,8 +973,15 @@ class ServingEngine:
         args = (self._params, self._caches, tok, t, self._state_dev)
         if self.cache.is_paged:
             args += (self.cache.table_device(),)
+        t0 = self._obs.now_us() if self._obs.enabled else 0
         out, self._caches = step(*args)
-        out = np.asarray(out)
+        out = np.asarray(out)               # host sync closes the launch
+        if self._obs.enabled:
+            self._obs.on_launch(
+                "decode",
+                entry.key if entry is not None else None,
+                entry.plan if entry is not None else None, t0,
+                handles=[s.handle for _, s in live])
         for i, st in live:
             self._advance(i, st, int(out[i]), events)
 
@@ -995,8 +1070,12 @@ class ServingEngine:
                 self._state_dev)
         if self.cache.is_paged:
             args += (self.cache.table_device(),)
+        t0 = self._obs.now_us() if self._obs.enabled else 0
         out, acc, self._caches = entry.step(*args)
         out, acc = np.asarray(out), np.asarray(acc)
+        if self._obs.enabled:
+            self._obs.on_launch("verify", entry.key, entry.plan, t0,
+                                handles=[s.handle for _, s in live])
         for i, st in live:
             self._advance_verified(i, st, drafts.get(i, []),
                                    int(acc[i]), out[i], events)
@@ -1069,6 +1148,8 @@ class ServingEngine:
         events.append(fin)
         self._queues[st.handle].append(fin)
         self._release(i)
+        if self._obs.enabled:
+            self._obs.on_finish(st.handle, reason)
 
     def _finish_capacity(self, i: int, st: SlotState,
                          events: List[Event]) -> None:
@@ -1084,6 +1165,11 @@ class ServingEngine:
                 "with finish_reason='cache_capacity' (further page "
                 "exhaustions on this engine are silent)",
                 RuntimeWarning, stacklevel=3)
+            if self._obs.enabled:
+                self._obs.on_warning(
+                    "page_capacity",
+                    f"request {st.request.request_id} exhausted the "
+                    f"{self.cache.spec.total_pages}-page KV pool")
         self._finish(i, st, FINISH_CACHE_CAPACITY, events)
 
     def _finish_reason(self, i: int, st: SlotState,
@@ -1104,6 +1190,11 @@ class ServingEngine:
                     "with finish_reason='cache_capacity' (further "
                     "max_len hits on this engine are silent)",
                     RuntimeWarning, stacklevel=3)
+                if self._obs.enabled:
+                    self._obs.on_warning(
+                        "len_capacity",
+                        f"request {req.request_id} hit the KV cache "
+                        f"capacity (max_len={self.max_len})")
             return FINISH_CACHE_CAPACITY
         return None
 
@@ -1116,6 +1207,8 @@ class ServingEngine:
                    index=len(comp.tokens) - 1)
         events.append(ev)
         q.append(ev)
+        if self._obs.enabled:
+            self._obs.on_token(st.handle, ev.index)
         reason = self._finish_reason(i, st, token)
         if reason is not None:
             self._finish(i, st, reason, events)

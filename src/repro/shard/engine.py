@@ -27,12 +27,11 @@ the property test drives random topologies against that oracle.
 from __future__ import annotations
 
 import dataclasses
-import json
-from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ServeConfig
 from repro.models.registry import Model
+from repro.obs import atomic_write_json, resolve_obs
 from repro.plan import merge_stats_snapshots
 from repro.serving.engine import ServingEngine
 from repro.serving.events import Event
@@ -63,7 +62,8 @@ class ShardedServingEngine:
                  prefill_mode: Optional[str] = None,
                  cache_layout: Optional[str] = None,
                  tune_table: Optional[Any] = None,
-                 devices: Optional[Sequence[Any]] = None):
+                 devices: Optional[Sequence[Any]] = None,
+                 obs: Optional[Any] = None):
         if plan is not None:
             spec = plan.spec
         elif spec is None:
@@ -84,11 +84,24 @@ class ShardedServingEngine:
         self.scfg = scfg
         self.max_len = max_len
         self._stats_path = scfg.stats_path
+        self._trace_path = scfg.trace_path
+        self._metrics_path = scfg.metrics_path
+        # one observer for the topology: each shard gets a labelled VIEW
+        # sharing the parent's clock/tracer/metrics, so all shards'
+        # spans land on ONE timeline and metric families merge
+        if obs is not None:
+            self._obs = obs
+            self._owns_obs = False
+        else:
+            self._obs = resolve_obs(scfg)
+            self._owns_obs = self._obs.enabled
 
         # per-shard ServeConfig: the shard budget replaces the engine-
-        # wide one; stats_path/shard are lifted to THIS layer
+        # wide one; stats_path/shard/trace_path/metrics_path are lifted
+        # to THIS layer
         core_cfg = dataclasses.replace(
             scfg, stats_path=None, shard=None,
+            trace_path=None, metrics_path=None,
             cache_page_budget=(spec.page_budget_per_shard
                                if spec.page_budget_per_shard is not None
                                else scfg.cache_page_budget))
@@ -116,7 +129,9 @@ class ShardedServingEngine:
                 mesh=plan.submeshes[d],
                 plan_cache=plan.plan_cache(
                     d, ident, scfg.plan_cache_capacity),
-                shard_id=d, param_policy=spec.params))
+                shard_id=d, param_policy=spec.params,
+                obs=(self._obs.shard_view(d) if self._obs.enabled
+                     else None)))
 
         # routing state: global handle <-> (shard, shard-local handle)
         self._routes: Dict[int, Tuple[int, int]] = {}
@@ -229,6 +244,8 @@ class ShardedServingEngine:
         done.sort(key=lambda c: c.request_id)
         if self._stats_path:
             self.dump_stats(self._stats_path)
+        if self._owns_obs:
+            self.dump_obs()
         return done
 
     # --- observability -------------------------------------------------------
@@ -253,18 +270,28 @@ class ShardedServingEngine:
         return merge_stats_snapshots(
             [core.stats.to_json() for core in self.cores])
 
-    def dump_stats(self, path: str) -> None:
-        """ONE stats file for the whole topology: per-shard sections
-        plus the aggregate (the single-engine dump's shape, summed)."""
-        out = {
+    def _stats_snapshot(self) -> Dict[str, Any]:
+        """The topology's stats dump: per-shard PlanCacheStats sections
+        plus the :func:`merge_stats_snapshots` aggregate."""
+        return {
             "topology": self.spec.describe(),
             "fingerprint": self.plan.fingerprint,
             "shards": self.shard_stats(),
             "aggregate": self.aggregate_stats(),
         }
-        p = Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
+
+    def dump_stats(self, path: str) -> None:
+        """ONE stats file for the whole topology, written atomically
+        (temp file + ``os.replace``): per-shard sections plus the
+        aggregate (the single-engine dump's shape, summed)."""
+        atomic_write_json(path, self._stats_snapshot())
+
+    def dump_obs(self) -> None:
+        """Write the topology's trace / metrics artifacts (no-op when
+        neither path is set or the observer was injected)."""
+        if self._obs.enabled and (self._trace_path or self._metrics_path):
+            self._obs.dump(self._trace_path, self._metrics_path,
+                           plan_stats=self._stats_snapshot())
 
     def describe(self) -> List[Dict[str, Any]]:
         """Per-shard admission/residency summary (the serve launcher
